@@ -1,0 +1,67 @@
+"""Shared benchmark fixtures: a trained reduced SD pipeline (cached on disk
+so the suite is re-runnable), CSV emission helpers."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs.base import UNetConfig
+from repro.core.pipeline import SDPipeline
+from repro.core.schedules import NoiseSchedule
+from repro.data.synthetic import CLASS_PROMPTS, shapes_dataset
+from repro.train.losses import diffusion_loss
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+CKPT = os.path.join(os.path.dirname(__file__), "..", "results", "bench_unet_ckpt")
+NUM_STEPS = 50        # the paper's denoising iteration count
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def trained_pipeline(train_steps: int = 400, *, force: bool = False) -> SDPipeline:
+    cfg = UNetConfig().reduced()
+    sched = NoiseSchedule.sd_default(1000)
+    pipe = SDPipeline.init(cfg, jax.random.PRNGKey(0), sched=sched)
+    if not force and os.path.isdir(CKPT):
+        tree, _, _ = load_checkpoint(CKPT)
+        pipe.params = tree["params"]
+        return pipe
+
+    data = shapes_dataset(np.random.default_rng(0), batch=8, size=cfg.latent_size)
+    prompts_emb = pipe.encode_prompts(CLASS_PROMPTS)
+    null_emb = pipe.null_embedding(1)
+    params = pipe.params
+    opt_cfg = AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=train_steps,
+                          weight_decay=0.0)
+    opt = init_opt_state(params)
+
+    def loss_fn(p, lat, cls, key):
+        def eps_fn(x, t, text):
+            from repro.models.unet import unet_forward
+            return unet_forward(p["unet"], cfg, x, t, text)
+        text = prompts_emb[cls]
+        null = jnp.broadcast_to(null_emb, text.shape)
+        return diffusion_loss(eps_fn, pipe.sched, key, lat, text, null)
+
+    @jax.jit
+    def step(p, opt, lat, cls, key):
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, lat, cls, key)
+        p, opt, _ = adamw_update(opt_cfg, p, g, opt)
+        return p, opt, loss
+
+    key = jax.random.PRNGKey(1)
+    for i in range(train_steps):
+        lat, cls = next(data)
+        key, sub = jax.random.split(key)
+        params, opt, loss = step(params, opt, jnp.asarray(lat),
+                                 jnp.asarray(cls), sub)
+    pipe.params = params
+    save_checkpoint(CKPT, {"params": params}, step=train_steps)
+    return pipe

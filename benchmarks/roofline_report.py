@@ -1,0 +1,66 @@
+"""Roofline table from the dry-run JSONL (results/dryrun_singlepod.jsonl).
+
+Prints the per-(arch x shape) three-term roofline, dominant bottleneck,
+MODEL_FLOPS ratio and a one-line improvement note — EXPERIMENTS.md §Roofline
+is generated from this.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_singlepod.jsonl")
+
+NOTES = {
+    "compute": "raise arithmetic intensity (fuse, larger per-chip batch) or add chips",
+    "memory": "cut HBM traffic: cache layout to avoid relayout copies, "
+              "quantize KV, batch more tokens per weight read",
+    "collective": "reshard to cut all-gathers (better logical-axis rules), "
+                  "overlap collectives with compute",
+}
+
+
+def load(path: str = RESULTS) -> list[dict]:
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    # keep the latest record per (arch, shape, variant)
+    latest = {}
+    for r in recs:
+        latest[(r["arch"], r["shape"], r.get("variant", "full"))] = r
+    return list(latest.values())
+
+
+def run() -> dict:
+    recs = load()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    rows = []
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        rl = r["roofline"]
+        dom = rl["dominant"]
+        row = dict(arch=r["arch"], shape=r["shape"],
+                   compute_s=rl["compute_s"], memory_s=rl["memory_s"],
+                   collective_s=rl["collective_s"], dominant=dom,
+                   useful=rl["useful_ratio"],
+                   bytes_per_device=rl["bytes_per_device"])
+        rows.append(row)
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             max(rl["compute_s"], rl["memory_s"], rl["collective_s"]) * 1e6,
+             f"dom={dom};c={rl['compute_s']:.2e};m={rl['memory_s']:.2e};"
+             f"n={rl['collective_s']:.2e};useful={rl['useful_ratio']:.2f}")
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+    emit("roofline/coverage", 0.0,
+         f"ok={len(ok)};skipped={len(skipped)};errors={len(errors)}")
+    return {"rows": rows, "skipped": skipped, "errors": errors}
+
+
+if __name__ == "__main__":
+    run()

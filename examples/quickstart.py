@@ -1,0 +1,39 @@
+"""Quickstart: train a tiny guided diffusion model, generate with and
+without selective guidance, report the latency saving and image distance.
+
+    PYTHONPATH=src:. python examples/quickstart.py
+"""
+
+import numpy as np
+
+from benchmarks.common import trained_pipeline
+from repro.core.selective import GuidancePlan
+
+STEPS = 50   # the paper's denoising iteration count
+
+
+def main() -> None:
+    print("== Selective Guidance quickstart ==")
+    print("training a tiny conditional latent-diffusion pipeline "
+          "(cached after first run)...")
+    pipe = trained_pipeline()
+
+    prompts = ["a red disc", "a blue square"]
+    baseline_plan = GuidancePlan.full(STEPS, guidance_scale=7.5)
+    paper_plan = GuidancePlan.suffix(STEPS, 0.2, guidance_scale=7.5)
+
+    base, t_base, _ = pipe.timed_generate(prompts, baseline_plan, iters=3)
+    opt, t_opt, _ = pipe.timed_generate(prompts, paper_plan, iters=3)
+
+    mse = float(np.mean((np.asarray(base) - np.asarray(opt)) ** 2))
+    scale = float(np.mean(np.asarray(base) ** 2))
+    saving = 1 - t_opt / t_base
+    print(f"\nbaseline: {t_base:.3f}s   selective(last 20%): {t_opt:.3f}s")
+    print(f"measured saving: {saving:.1%}  (paper, V100: 8.2%; "
+          f"exact pass saving: {1 - paper_plan.denoiser_passes() / baseline_plan.denoiser_passes():.1%} of denoiser passes)")
+    print(f"output MSE vs baseline: {mse:.4f} (latent power {scale:.3f}) — "
+          "visually equivalent regime per the paper's SBS study")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Reproduce the paper's Figure 1 + Figure 2 sweeps on the tiny pipeline:
+slide the optimization window (Fig. 1) and grow the suffix fraction
+(Fig. 2), saving a PNG contact sheet per sweep.
+
+    PYTHONPATH=src:. python examples/window_sweep.py
+"""
+
+import numpy as np
+from PIL import Image
+
+from benchmarks.common import trained_pipeline
+from repro.core.selective import GuidancePlan
+
+STEPS = 50
+
+
+def to_img(lat):
+    """(h, w, 4) latent in [-1,1] -> RGB PIL image (drop the mask channel)."""
+    a = np.clip((np.asarray(lat[..., :3]) + 1) / 2, 0, 1)
+    return Image.fromarray((a * 255).astype(np.uint8)).resize((96, 96),
+                                                              Image.NEAREST)
+
+
+def sheet(images, path):
+    w, h = images[0].size
+    out = Image.new("RGB", (w * len(images), h))
+    for i, im in enumerate(images):
+        out.paste(im, (i * w, 0))
+    out.save(path)
+    print("wrote", path)
+
+
+def main() -> None:
+    pipe = trained_pipeline()
+    prompt = ["a red disc"]
+
+    # Fig. 1: same budget (25%), window slides right; leftmost = earliest
+    imgs = []
+    for a, b in [(0.0, 0.25), (0.25, 0.5), (0.5, 0.75), (0.75, 1.0)]:
+        lat = pipe.generate(prompt, GuidancePlan.window(STEPS, a, b, 7.5), seed=0)
+        imgs.append(to_img(lat[0]))
+    sheet(imgs, "results/fig1_window_sweep.png")
+
+    # Fig. 2: baseline then last-20/30/40/50% optimized
+    imgs = [to_img(pipe.generate(prompt, GuidancePlan.full(STEPS, 7.5),
+                                 seed=0)[0])]
+    for f in [0.2, 0.3, 0.4, 0.5]:
+        lat = pipe.generate(prompt, GuidancePlan.suffix(STEPS, f, 7.5), seed=0)
+        imgs.append(to_img(lat[0]))
+    sheet(imgs, "results/fig2_fraction_sweep.png")
+
+
+if __name__ == "__main__":
+    main()

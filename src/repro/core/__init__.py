@@ -1,0 +1,3 @@
+from repro.core.guidance import cfg_combine, merge_cond_uncond, split_cond_uncond
+from repro.core.selective import GuidancePlan, Mode, Segment, sweep
+from repro.core.schedules import NoiseSchedule

@@ -1,0 +1,56 @@
+"""Classifier-free guidance (Ho & Salimans) — Eq. 1 of the paper.
+
+``cfg_combine`` is the exact formula the paper optimizes:
+
+    eps_hat = eps_uncond + s * (eps_cond - eps_uncond)
+
+Properties the tests rely on:
+* s = 1  ->  eps_hat == eps_cond exactly (skipping uncond is *lossless*);
+* s = 0  ->  eps_hat == eps_uncond.
+
+``repro.kernels.cfg_combine`` is the fused Pallas TPU version of this exact
+op; this jnp form is its oracle and the XLA fallback.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cfg_combine(eps_uncond, eps_cond, scale):
+    """Eq. 1. ``scale`` may be a python float or a traced scalar.
+
+    ``scale == 1`` (statically) short-circuits to the conditional term —
+    algebraically equal and bit-exact, which is what makes the paper's
+    skip *lossless* at guidance scale 1."""
+    if isinstance(scale, (int, float)) and float(scale) == 1.0:
+        return eps_cond
+    if isinstance(scale, (int, float)) and _use_pallas():
+        # fused TPU kernel (repro.kernels.cfg_combine); jnp path is its oracle
+        from repro.kernels.cfg_combine import cfg_combine_pallas
+        return cfg_combine_pallas(eps_uncond, eps_cond, float(scale),
+                                  interpret=False)
+    u = eps_uncond.astype(jnp.float32)
+    c = eps_cond.astype(jnp.float32)
+    return (u + scale * (c - u)).astype(eps_cond.dtype)
+
+
+def _use_pallas() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def split_cond_uncond(batched):
+    """Inverse of the 2x-batch trick: (2B, ...) -> ((B,...) cond, (B,...) uncond).
+
+    Convention everywhere in this framework: conditional first half,
+    unconditional second half.
+    """
+    b2 = batched.shape[0]
+    assert b2 % 2 == 0, b2
+    b = b2 // 2
+    return batched[:b], batched[b:]
+
+
+def merge_cond_uncond(cond, uncond):
+    return jnp.concatenate([cond, uncond], axis=0)

@@ -1,0 +1,146 @@
+"""Selective guidance plans — the paper's contribution, as a static schedule.
+
+A :class:`GuidancePlan` partitions the ``total_steps`` denoising (or decode)
+iterations into contiguous **segments**, each executed in one of two modes:
+
+* ``FULL`` — both conditional and unconditional passes (2x-batch), Eq. 1;
+* ``COND`` — conditional pass only (the paper's optimization: the step's
+  denoiser compute is halved).
+
+The partition is *static*: under jit each segment compiles to its own
+``lax.scan`` with genuinely different shapes, so the FLOP reduction is
+structural (visible in the lowered HLO), not a runtime branch — the
+TPU-native formulation of the paper's mechanism (DESIGN.md §2).
+
+``suffix_plan(T, fraction)`` is the paper's recommended policy (optimize the
+*last* ``fraction`` of iterations); ``window_plan`` reproduces the Figure-1
+ablation (optimization window anywhere in the loop). For autoregressive
+decoding only suffix plans are valid (the uncond KV cache goes stale once
+skipped — enforced here).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from enum import Enum
+from typing import Iterable
+
+
+class Mode(str, Enum):
+    FULL = "full"
+    COND = "cond"
+
+
+@dataclass(frozen=True)
+class Segment:
+    start: int       # first step index (inclusive)
+    stop: int        # last step index (exclusive)
+    mode: Mode
+
+    @property
+    def length(self) -> int:
+        return self.stop - self.start
+
+
+@dataclass(frozen=True)
+class GuidancePlan:
+    total_steps: int
+    segments: tuple[Segment, ...]
+    guidance_scale: float = 7.5
+
+    def __post_init__(self):
+        cursor = 0
+        for seg in self.segments:
+            if seg.start != cursor or seg.stop <= seg.start:
+                raise ValueError(f"non-contiguous plan: {self.segments}")
+            cursor = seg.stop
+        if cursor != self.total_steps:
+            raise ValueError(f"plan covers {cursor} of {self.total_steps} steps")
+
+    # ---- factories -------------------------------------------------------
+
+    @staticmethod
+    def full(total_steps: int, guidance_scale: float = 7.5) -> "GuidancePlan":
+        """The unoptimized baseline."""
+        return GuidancePlan(total_steps,
+                            (Segment(0, total_steps, Mode.FULL),),
+                            guidance_scale)
+
+    @staticmethod
+    def suffix(total_steps: int, fraction: float,
+               guidance_scale: float = 7.5) -> "GuidancePlan":
+        """The paper's policy: optimize the last ``fraction`` of iterations."""
+        if not 0.0 <= fraction <= 1.0:
+            raise ValueError(fraction)
+        n_opt = round(total_steps * fraction)
+        segs = []
+        if total_steps - n_opt:
+            segs.append(Segment(0, total_steps - n_opt, Mode.FULL))
+        if n_opt:
+            segs.append(Segment(total_steps - n_opt, total_steps, Mode.COND))
+        return GuidancePlan(total_steps, tuple(segs), guidance_scale)
+
+    @staticmethod
+    def window(total_steps: int, start_frac: float, stop_frac: float,
+               guidance_scale: float = 7.5) -> "GuidancePlan":
+        """Figure-1 ablation: optimization window anywhere in the loop."""
+        a = round(total_steps * start_frac)
+        b = round(total_steps * stop_frac)
+        if not 0 <= a < b <= total_steps:
+            raise ValueError((start_frac, stop_frac))
+        segs = []
+        if a:
+            segs.append(Segment(0, a, Mode.FULL))
+        segs.append(Segment(a, b, Mode.COND))
+        if b < total_steps:
+            segs.append(Segment(b, total_steps, Mode.FULL))
+        return GuidancePlan(total_steps, tuple(segs), guidance_scale)
+
+    # ---- properties ------------------------------------------------------
+
+    @property
+    def optimized_steps(self) -> int:
+        return sum(s.length for s in self.segments if s.mode is Mode.COND)
+
+    @property
+    def optimized_fraction(self) -> float:
+        return self.optimized_steps / self.total_steps
+
+    @property
+    def is_suffix(self) -> bool:
+        """True iff COND steps form a (possibly empty) suffix."""
+        seen_cond = False
+        for seg in self.segments:
+            if seg.mode is Mode.COND:
+                seen_cond = True
+            elif seen_cond:
+                return False
+        return True
+
+    def modes(self) -> list[Mode]:
+        out = []
+        for seg in self.segments:
+            out.extend([seg.mode] * seg.length)
+        return out
+
+    def denoiser_passes(self) -> int:
+        """Total denoiser forward passes (in units of 1x-batch)."""
+        return sum(2 * s.length if s.mode is Mode.FULL else s.length
+                   for s in self.segments)
+
+    def predicted_saving(self, denoiser_share: float = 1.0) -> float:
+        """Analytic latency-saving model: f * 0.5 * U (paper §3.3)."""
+        return self.optimized_fraction * 0.5 * denoiser_share
+
+    def validate_for_ar(self) -> None:
+        if not self.is_suffix:
+            raise ValueError(
+                "autoregressive guided decoding requires a suffix plan: the "
+                "unconditional KV cache goes stale once skipped "
+                "(DESIGN.md §2)")
+
+
+def sweep(total_steps: int, fractions: Iterable[float],
+          guidance_scale: float = 7.5) -> list[GuidancePlan]:
+    """Table-1 sweep: one plan per optimized fraction."""
+    return [GuidancePlan.suffix(total_steps, f, guidance_scale) for f in fractions]

@@ -1,0 +1,45 @@
+"""Fused CFG combine (Eq. 1) — Pallas TPU kernel.
+
+eps_hat = u + s * (c - u), computed in fp32, tiled over VMEM blocks. The op
+is purely memory-bound (3 streams, 1 FMA per element): on TPU the win over
+the unfused XLA form is eliminating the intermediate (c - u) round-trip.
+Block = (8, 1024) lanes-aligned tiles over a 2D view of the tensor.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(u_ref, c_ref, o_ref, *, scale: float):
+    u = u_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    o_ref[...] = (u + scale * (c - u)).astype(o_ref.dtype)
+
+
+def cfg_combine_pallas(eps_uncond, eps_cond, scale: float, *,
+                       block_rows: int = 256, interpret: bool = True):
+    assert eps_uncond.shape == eps_cond.shape
+    orig_shape = eps_cond.shape
+    n = eps_cond.size
+    lanes = 128
+    rows = pl.cdiv(n, lanes)
+    pad = rows * lanes - n
+    u2 = jnp.pad(eps_uncond.reshape(-1), (0, pad)).reshape(rows, lanes)
+    c2 = jnp.pad(eps_cond.reshape(-1), (0, pad)).reshape(rows, lanes)
+    br = min(block_rows, rows)
+    grid = (pl.cdiv(rows, br),)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=float(scale)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+                  pl.BlockSpec((br, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), eps_cond.dtype),
+        interpret=interpret,
+    )(u2, c2)
+    return out.reshape(-1)[:n].reshape(orig_shape)

@@ -1,0 +1,101 @@
+"""Flash-decode attention (one token vs long KV cache) — Pallas TPU kernel.
+
+Grid (B, K, nk): sequential sweep over KV chunks with online-softmax state
+in VMEM scratch. The query block is the whole per-kv-head query group
+(rep, hd) — decode's tiny q makes the kernel purely KV-bandwidth-bound,
+which is exactly the regime the roofline analysis flags for decode_32k /
+long_500k. Valid-length + sliding-window masking from the ``pos`` scalar
+(SMEM via scalar prefetch).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, window, bk: int, nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[...]                                   # (rep, hd)
+    k = k_ref[...]                                   # (bk, hd)
+    v = v_ref[...]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    valid = kpos <= pos
+    if window is not None:
+        valid = valid & (kpos > pos - window)
+    s = jnp.where(valid, s, NEG_INF)                 # (rep, bk)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[..., None]
+                    + jax.lax.dot_general(p.astype(v.dtype), v,
+                                          (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[...] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, pos, *, window: int | None = None,
+                            bk: int = 512, interpret: bool = True):
+    """q (B,H,hd); k,v (B,S,K,hd); pos scalar int32. Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    rep = H // K
+    bk = min(bk, S)
+    assert S % bk == 0, (S, bk)
+    nk = S // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B, K, rep, hd)
+    kr = k.transpose(0, 2, 1, 3)                     # (B,K,S,hd)
+    vr = v.transpose(0, 2, 1, 3)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, nk),
+        in_specs=[
+            pl.BlockSpec((None, None, rep, hd), lambda b, g, j, pos: (b, g, 0, 0)),
+            pl.BlockSpec((None, None, bk, hd), lambda b, g, j, pos: (b, g, j, 0)),
+            pl.BlockSpec((None, None, bk, hd), lambda b, g, j, pos: (b, g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, hd),
+                               lambda b, g, j, pos: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, bk=bk, nk=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, rep, hd), q.dtype),
+        interpret=interpret,
+    )(pos_arr, qr, kr, vr)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,44 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively (interpret=False); everywhere else they
+run in interpret mode (Python-executed kernel bodies) so correctness is
+verifiable on CPU. ``use_pallas()`` is the switch model code consults.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.cfg_combine import cfg_combine_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def cfg_combine(eps_uncond, eps_cond, scale: float):
+    return cfg_combine_pallas(eps_uncond, eps_cond, scale,
+                              interpret=_interpret())
+
+
+@jax.jit
+def rmsnorm(x, scale):
+    return rmsnorm_pallas(x, scale, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def decode_attention(q, k, v, pos, *, window=None):
+    return decode_attention_pallas(q, k, v, pos, window=window,
+                                   interpret=_interpret())

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` mirrors the kernel's exact semantics; kernel tests sweep
+shapes/dtypes and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_cfg_combine(eps_uncond, eps_cond, scale: float):
+    """Eq. 1 of the paper, fp32 accumulate, output dtype = cond dtype."""
+    u = eps_uncond.astype(jnp.float32)
+    c = eps_cond.astype(jnp.float32)
+    return (u + scale * (c - u)).astype(eps_cond.dtype)
+
+
+def ref_rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ref_flash_attention(q, k, v, *, causal: bool = True,
+                        window: int | None = None):
+    """q (B,S,H,hd); k,v (B,S,K,hd) with H % K == 0. fp32 softmax."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    rep = H // K
+    qg = q.reshape(B, S, K, rep, hd)
+    s = jnp.einsum("bqkrh,bskh->bkrqs", qg, k).astype(jnp.float32) / math.sqrt(hd)
+    pos = jnp.arange(S)
+    mask = jnp.bool_(True)
+    if causal:
+        mask = pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask = mask & (pos[None, :] > pos[:, None] - window)
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkrqs,bskh->bqkrh", w, v)
+    return o.reshape(B, S, H, hd)
+
+
+def ref_decode_attention(q, k, v, pos, *, window: int | None = None):
+    """q (B,H,hd) one token; k,v (B,S,K,hd); pos scalar int (the query's
+    position; cache entries [0, pos] are valid)."""
+    B, H, hd = q.shape
+    K = k.shape[2]
+    rep = H // K
+    qg = q.reshape(B, K, rep, hd)
+    s = jnp.einsum("bkrh,bskh->bkrs", qg, k).astype(jnp.float32) / math.sqrt(hd)
+    kpos = jnp.arange(k.shape[1])
+    valid = kpos <= pos
+    if window is not None:
+        valid = valid & (kpos > pos - window)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkrs,bskh->bkrh", w, v)
+    return o.reshape(B, H, hd)

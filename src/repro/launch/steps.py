@@ -1,0 +1,388 @@
+"""Step builders: one jit-able function + ShapeDtypeStruct input specs +
+NamedShardings per (architecture x input shape).
+
+This is the single source of truth the dry-run, the roofline analysis and
+the real launchers all consume. Params/caches are built three ways from the
+same init code (SpecMaker / AxesMaker / ArrayMaker) so specs and shardings
+can never drift.
+
+Step kinds per shape (DESIGN.md §5):
+  train_4k    -> train_step   (loss + grad + AdamW update, remat scan)
+  prefill_32k -> prefill      (dual-stream CFG prefill; encoder: forward)
+  decode_32k  -> serve_step   (baseline FULL CFG step: two streams)
+  long_500k   -> serve_step   (SWA ring / SSM state / MLA latent cache)
+
+``variant="cond"`` builds the paper-optimized serve step (conditional
+stream only) — the §Perf comparison object.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import ar_decode as AR
+from repro.core.guidance import cfg_combine
+from repro.dist.sharding import (AxisRules, RULES_LONG, RULES_SERVE,
+                                 RULES_TRAIN, logical_to_spec, tree_shardings)
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.train import losses
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    in_specs: tuple          # ShapeDtypeStructs (positional)
+    in_shardings: tuple      # NamedShardings (same structure)
+    out_shardings: Any       # None -> let GSPMD choose
+    rules: AxisRules
+    donate: tuple = ()       # donated arg indices (cache/param aliasing)
+
+
+def rules_for_shape(shape: InputShape) -> AxisRules:
+    if shape.kind == "train":
+        rules = RULES_TRAIN
+    elif shape.name == "long_500k":
+        rules = RULES_LONG
+    else:
+        rules = RULES_SERVE
+    # Hillclimb knob: REPRO_RULE_OVERRIDE="state=;kv_seq=model,data" rebinds
+    # logical axes for §Perf experiments without touching the rule tables.
+    ov = os.environ.get("REPRO_RULE_OVERRIDE")
+    if ov:
+        kw = {}
+        for part in ov.split(";"):
+            name, _, axes = part.partition("=")
+            kw[name.strip()] = tuple(a for a in axes.split(",") if a)
+        rules = rules.override(**kw)
+    return rules
+
+
+def _sharding(mesh, rules, logical, shape):
+    return NamedSharding(mesh, logical_to_spec(logical, rules, shape=shape, mesh=mesh))
+
+
+def param_specs(cfg: ModelConfig, *, dtype):
+    specs = T.init_model(cfg, L.SpecMaker(dtype))
+    axes = T.init_model(cfg, L.AxesMaker())
+    return specs, axes
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> str | None:
+    """DESIGN.md §5 skip policy. None = runnable."""
+    if cfg.is_encoder and shape.kind == "decode":
+        return "encoder-only: no decode step"
+    return None
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    # everything decodes at 500k via SWA-substitute / recurrent state / MLA
+    # latent cache; encoders are excluded by skip_reason already.
+    return not cfg.is_encoder
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, shape: InputShape, mesh,
+                     opt_cfg: AdamWConfig | None = None) -> StepBundle:
+    rules = rules_for_shape(shape)
+    opt_cfg = opt_cfg or AdamWConfig()
+    B, S = shape.global_batch, shape.seq_len
+    pspecs, paxes = param_specs(cfg, dtype=jnp.float32)
+    psh = tree_shardings(paxes, pspecs, mesh, rules)
+    opt_specs = {"m": pspecs, "v": pspecs,
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    opt_sh = {"m": psh, "v": psh, "step": NamedSharding(mesh, P())}
+
+    if cfg.is_encoder:
+        batch_specs = {
+            "features": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+            "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.bool_),
+        }
+        batch_sh = {
+            "features": _sharding(mesh, rules, ("batch", "seq", None), (B, S, cfg.d_model)),
+            "targets": _sharding(mesh, rules, ("batch", "seq"), (B, S)),
+            "mask": _sharding(mesh, rules, ("batch", "seq"), (B, S)),
+        }
+
+        def loss_fn(params, batch):
+            return losses.masked_prediction_loss(
+                params, cfg, batch["features"], batch["targets"], batch["mask"],
+                rules=rules)
+    else:
+        batch_specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        batch_sh = {"tokens": _sharding(mesh, rules, ("batch", "seq"), (B, S))}
+
+        def loss_fn(params, batch):
+            return losses.lm_loss(params, cfg, batch["tokens"], rules=rules)
+
+    # Hillclimb knob: REPRO_MICROBATCH=n -> gradient accumulation over n
+    # microbatches (scan), dividing peak activation memory by ~n at the cost
+    # of n weight re-reads.
+    micro = int(os.environ.get("REPRO_MICROBATCH", "1"))
+
+    def train_step(params, opt_state, batch):
+        if micro > 1:
+            def split(x):
+                return x.reshape(micro, x.shape[0] // micro, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, b):
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, b)
+                acc_loss, acc_grads = carry
+                return (acc_loss + loss / micro,
+                        jax.tree.map(lambda a, g: a + g / micro, acc_grads,
+                                     grads)), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zero), mb)
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return StepBundle(
+        name=f"{cfg.name}:{shape.name}:train",
+        fn=train_step,
+        in_specs=(pspecs, opt_specs, batch_specs),
+        in_shardings=(psh, opt_sh, batch_sh),
+        out_shardings=(psh, opt_sh, None),
+        rules=rules,
+        donate=(0, 1),
+    )
+
+
+def build_prefill(cfg: ModelConfig, shape: InputShape, mesh) -> StepBundle:
+    rules = rules_for_shape(shape)
+    B, S = shape.global_batch, shape.seq_len
+    long_ctx = shape.name == "long_500k"
+    pspecs, paxes = param_specs(cfg, dtype=jnp.bfloat16)
+    psh = tree_shardings(paxes, pspecs, mesh, rules)
+
+    if cfg.is_encoder:
+        in_specs = (pspecs, jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16))
+        in_sh = (psh, _sharding(mesh, rules, ("batch", "seq", None),
+                                (B, S, cfg.d_model)))
+
+        def prefill(params, features):
+            h, _, _ = T.forward(params, cfg, features, rules=rules)
+            return T.unembed(params, cfg, h)
+
+        return StepBundle(f"{cfg.name}:{shape.name}:encode", prefill,
+                          in_specs, in_sh, None, rules)
+
+    in_specs = (pspecs, jax.ShapeDtypeStruct((B, S), jnp.int32))
+    in_sh = (psh, _sharding(mesh, rules, ("batch", "seq"), (B, S)))
+
+    def prefill(params, tokens):
+        """Dual-stream CFG prefill: both caches + the first sampled token."""
+        logits_c, caches_c = AR.prefill(params, cfg, tokens, rules=rules,
+                                        long_ctx=long_ctx)
+        logits_u, caches_u = AR.prefill(params, cfg, AR.null_prompt(tokens),
+                                        rules=rules, long_ctx=long_ctx)
+        logits = cfg_combine(logits_u, logits_c, cfg.guidance_scale)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return tok, caches_c, caches_u
+
+    return StepBundle(f"{cfg.name}:{shape.name}:prefill", prefill,
+                      in_specs, in_sh, None, rules)
+
+
+def build_serve_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+                     variant: str = "full") -> StepBundle:
+    """One-token guided decode step with a ``seq_len``-deep cache/state."""
+    rules = rules_for_shape(shape)
+    B, S = shape.global_batch, shape.seq_len
+    long_ctx = shape.name == "long_500k"
+    pspecs, paxes = param_specs(cfg, dtype=jnp.bfloat16)
+    psh = tree_shardings(paxes, pspecs, mesh, rules)
+
+    cspecs = T.cache_specs(cfg, L.SpecMaker(jnp.bfloat16), B, S, long_ctx=long_ctx)
+    caxes = T.cache_specs(cfg, L.AxesMaker(), B, S, long_ctx=long_ctx)
+    csh = tree_shardings(caxes, cspecs, mesh, rules)
+
+    tok_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_sh = _sharding(mesh, rules, ("batch",), (B,))
+    pos = S - 1   # cache prefilled to S-1; the step writes position S-1
+
+    if variant == "full":
+        def serve_step(params, token, caches_c, caches_u):
+            logits, caches_c, caches_u = AR.decode_step_full(
+                params, cfg, token, caches_c, caches_u, pos,
+                cfg.guidance_scale, rules=rules, long_ctx=long_ctx)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, caches_c, caches_u
+
+        return StepBundle(
+            f"{cfg.name}:{shape.name}:serve_full", serve_step,
+            (pspecs, tok_spec, cspecs, cspecs),
+            (psh, tok_sh, csh, csh),
+            (tok_sh, csh, csh),
+            rules, donate=(2, 3))
+
+    def serve_step_cond(params, token, caches_c):
+        logits, caches_c = AR.decode_step_cond(params, cfg, token, caches_c,
+                                               pos, rules=rules, long_ctx=long_ctx)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, caches_c
+
+    return StepBundle(
+        f"{cfg.name}:{shape.name}:serve_cond", serve_step_cond,
+        (pspecs, tok_spec, cspecs),
+        (psh, tok_sh, csh),
+        (tok_sh, csh),
+        rules, donate=(2,))
+
+
+def build(cfg: ModelConfig, shape: InputShape, mesh, *, variant="full") -> StepBundle:
+    reason = skip_reason(cfg, shape)
+    if reason:
+        raise ValueError(f"{cfg.name} x {shape.name} skipped: {reason}")
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    return build_serve_step(cfg, shape, mesh, variant=variant)
+
+
+# ---------------------------------------------------------------------------
+# Model-FLOPs reference (roofline "useful compute" numerator)
+# ---------------------------------------------------------------------------
+
+
+def param_count(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active-per-token) param counts from the spec tree."""
+    specs, _ = param_specs(cfg, dtype=jnp.bfloat16)
+    import math
+    total = sum(math.prod(x.shape) for x in jax.tree.leaves(specs))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        # routed expert params: 3 matrices per expert per moe layer
+        n_moe_layers = cfg.num_layers - m.first_k_dense
+        routed = n_moe_layers * m.num_experts * 3 * cfg.d_model * m.expert_d_ff
+        active_routed = routed * m.top_k / m.num_experts
+        active = total - routed + active_routed
+    return int(total), int(active)
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6*N*D (train) / 2*N*D (inference); D = tokens processed; MoE uses
+    N_active; CFG prefill/decode count both streams."""
+    total, active = param_count(cfg)
+    n = active
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        streams = 1 if cfg.is_encoder else 2
+        return 2.0 * n * shape.global_batch * shape.seq_len * streams
+    return 2.0 * n * shape.global_batch * 2   # decode: 1 token x 2 streams
+
+
+def recurrent_supplement(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Analytic FLOPs/bytes for *time-step* scans (mLSTM/sLSTM prefill/train)
+    that cannot be unrolled in cost-mode (cost_analysis counts while bodies
+    once). Global (all-chips) numbers; roofline divides by chip count.
+    Zero for decode shapes (no time scan) and non-SSM archs.
+    """
+    if shape.kind == "decode":
+        return {"flops": 0.0, "bytes": 0.0}
+    kinds = cfg.blocks
+    n_m = sum(k == "mlstm" for k in kinds)
+    n_s = sum(k == "slstm" for k in kinds)
+    if n_m == 0 and n_s == 0:
+        return {"flops": 0.0, "bytes": 0.0}
+    B = shape.global_batch
+    S = shape.seq_len
+    if shape.kind == "prefill" and not cfg.is_encoder:
+        B *= 2  # dual CFG streams
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh_m = 2 * D // H            # mLSTM head dim (proj factor 2)
+    dh_s = D // H
+    flops = 0.0
+    byts = 0.0
+    # mLSTM per step: C update (3 ops) + Cq readout (2) ~ 6*B*H*dh^2
+    flops += n_m * S * 6.0 * B * H * dh_m ** 2
+    byts += n_m * S * 2.0 * B * H * dh_m ** 2 * 4   # C read+write fp32
+    # sLSTM per step: 4 input matmuls (8*B*D^2) + 4 recurrent (8*B*D*dh)
+    flops += n_s * S * (8.0 * B * D * D + 8.0 * B * D * dh_s)
+    byts += n_s * S * (4.0 * D * D * 4 + 6.0 * B * D * 4)
+    mult = 3.0 if shape.kind == "train" else 1.0    # fwd+bwd(2x) for train
+    return {"flops": flops * mult, "bytes": byts * mult}
+
+
+# ---------------------------------------------------------------------------
+# The paper's own pipeline: one guided denoising step of the production UNet
+# ---------------------------------------------------------------------------
+
+
+def build_sd_denoise(mesh, *, variant: str = "full", batch: int = 64):
+    """One DDIM step of the SD-scale UNet under CFG.
+
+    variant="full": 2x-batch denoiser pass + Eq.1 combine (baseline).
+    variant="cond": 1x-batch conditional-only pass (the paper's optimized
+    step) — the structural halving on the paper's own workload.
+    """
+    from repro.configs.sd_unet import PRODUCTION as ucfg
+    from repro.core.guidance import cfg_combine as _cfg
+    from repro.core.sampler import ddim_update
+    from repro.models import unet as U
+
+    rules = RULES_SERVE
+    pspecs = U.init_unet(ucfg, L.SpecMaker(jnp.bfloat16))
+    paxes = U.init_unet(ucfg, L.AxesMaker())
+    psh = tree_shardings(paxes, pspecs, mesh, rules)
+    B = batch
+    hw = ucfg.latent_size
+    lat = jax.ShapeDtypeStruct((B, hw, hw, ucfg.in_channels), jnp.bfloat16)
+    txt = jax.ShapeDtypeStruct((B, ucfg.text_len, ucfg.text_dim), jnp.bfloat16)
+    scal = jax.ShapeDtypeStruct((), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    lat_sh = _sharding(mesh, rules, ("batch", None, None, None), lat.shape)
+    txt_sh = _sharding(mesh, rules, ("batch", None, None), txt.shape)
+    t_sh = _sharding(mesh, rules, ("batch",), (B,))
+    rep = NamedSharding(mesh, P())
+
+    if variant == "full":
+        def denoise_step(params, x, t, cond, uncond, ab_t, ab_prev):
+            x2 = jnp.concatenate([x, x], axis=0)
+            t2 = jnp.concatenate([t, t], axis=0)
+            txt2 = jnp.concatenate([cond, uncond], axis=0)
+            eps2 = U.unet_forward(params, ucfg, x2, t2, txt2)
+            e_c, e_u = eps2[:B], eps2[B:]
+            eps = _cfg(e_u, e_c, 7.5)
+            return ddim_update(x, eps, ab_t, ab_prev)
+
+        return StepBundle(
+            "sd-unet-prod:denoise:full", denoise_step,
+            (pspecs, lat, t_spec, txt, txt, scal, scal),
+            (psh, lat_sh, t_sh, txt_sh, txt_sh, rep, rep),
+            lat_sh, rules, donate=(1,))
+
+    def denoise_step_cond(params, x, t, cond, ab_t, ab_prev):
+        eps = U.unet_forward(params, ucfg, x, t, cond)
+        return ddim_update(x, eps, ab_t, ab_prev)
+
+    return StepBundle(
+        "sd-unet-prod:denoise:cond", denoise_step_cond,
+        (pspecs, lat, t_spec, txt, scal, scal),
+        (psh, lat_sh, t_sh, txt_sh, rep, rep),
+        lat_sh, rules, donate=(1,))

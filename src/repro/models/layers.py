@@ -1,0 +1,211 @@
+"""Parameter makers + common layers (pure-JAX pytree modules).
+
+Every ``init_*`` function takes a :class:`Maker` and builds a params pytree.
+The same structural code produces, depending on the maker:
+
+* real arrays            (``ArrayMaker`` — training / tests)
+* ShapeDtypeStructs      (``SpecMaker`` — the multi-pod dry-run, no allocation)
+* logical-axis tuples    (``AxesMaker`` — the distribution layer's rule input)
+
+which guarantees params / specs / shardings can never drift apart.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Makers
+# ---------------------------------------------------------------------------
+
+
+class Maker:
+    def __call__(self, shape, axes, *, init="normal", scale=None, dtype=None):
+        raise NotImplementedError
+
+
+class ArrayMaker(Maker):
+    def __init__(self, rng, dtype=jnp.float32):
+        self.rng = rng
+        self.dtype = dtype
+        self._n = 0
+
+    def __call__(self, shape, axes, *, init="normal", scale=None, dtype=None):
+        assert len(shape) == len(axes), (shape, axes)
+        dtype = dtype or self.dtype
+        self._n += 1
+        key = jax.random.fold_in(self.rng, self._n)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if scale is None:
+            # default: fan-in = product of all dims except the last
+            fan_in = max(1, math.prod(shape[:-1]))
+            scale = 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+class SpecMaker(Maker):
+    def __init__(self, dtype=jnp.bfloat16):
+        self.dtype = dtype
+
+    def __call__(self, shape, axes, *, init="normal", scale=None, dtype=None):
+        assert len(shape) == len(axes), (shape, axes)
+        return jax.ShapeDtypeStruct(tuple(shape), dtype or self.dtype)
+
+
+class AxesMaker(Maker):
+    def __call__(self, shape, axes, *, init="normal", scale=None, dtype=None):
+        assert len(shape) == len(axes), (shape, axes)
+        return tuple(axes)
+
+
+class StackedMaker(Maker):
+    """Prepend a ``layers`` dimension to everything (scan-over-layers stacks)."""
+
+    def __init__(self, inner: Maker, n: int):
+        self.inner = inner
+        self.n = n
+
+    def __call__(self, shape, axes, *, init="normal", scale=None, dtype=None):
+        return self.inner((self.n, *shape), ("layers", *axes),
+                          init=init, scale=scale, dtype=dtype)
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation / activations
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(mk: Maker, dim: int):
+    return {"scale": mk((dim,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(mk: Maker, dim: int):
+    return {"scale": mk((dim,), ("embed",), init="ones"),
+            "bias": mk((dim,), ("embed",), init="zeros")}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-6):
+    """Per-head qk-norm: x (..., head_dim), scale (head_dim,)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / projections
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(mk: Maker, vocab: int, dim: int):
+    # 1/sqrt(dim): keeps tied-unembedding logits at unit scale after the
+    # final norm (std-1.0 tables give ~sqrt(d)-scaled logits at init)
+    return {"table": mk((vocab, dim), ("vocab", "embed"),
+                        scale=1.0 / math.sqrt(dim))}
+
+
+def embed(params, ids, dtype=None):
+    t = params["table"]
+    out = jnp.take(t, ids, axis=0)
+    return out.astype(dtype) if dtype is not None else out
+
+
+def init_dense(mk: Maker, d_in: int, d_out: int, axes=("embed", "mlp"), scale=None):
+    return {"w": mk((d_in, d_out), axes, scale=scale or 1.0 / math.sqrt(d_in))}
+
+
+def dense(params, x):
+    return x @ params["w"].astype(x.dtype)
+
+
+def init_swiglu(mk: Maker, d_model: int, d_ff: int,
+                embed_axis: str = "embed", mlp_axis: str = "mlp"):
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "w_gate": mk((d_model, d_ff), (embed_axis, mlp_axis), scale=s_in),
+        "w_up": mk((d_model, d_ff), (embed_axis, mlp_axis), scale=s_in),
+        "w_down": mk((d_ff, d_model), (mlp_axis, embed_axis), scale=s_out),
+    }
+
+
+def swiglu(params, x):
+    g = x @ params["w_gate"].astype(x.dtype)
+    u = x @ params["w_up"].astype(x.dtype)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return h @ params["w_down"].astype(x.dtype)
+
+
+def init_gelu_mlp(mk: Maker, d_model: int, d_ff: int):
+    return {
+        "w_in": mk((d_model, d_ff), ("embed", "mlp"), scale=1.0 / math.sqrt(d_model)),
+        "b_in": mk((d_ff,), ("mlp",), init="zeros"),
+        "w_out": mk((d_ff, d_model), ("mlp", "embed"), scale=1.0 / math.sqrt(d_ff)),
+        "b_out": mk((d_model,), ("embed",), init="zeros"),
+    }
+
+
+def gelu_mlp(params, x):
+    h = x @ params["w_in"].astype(x.dtype) + params["b_in"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return h @ params["w_out"].astype(x.dtype) + params["b_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions, dim: int, max_period: float = 10000.0):
+    """Timestep / position embedding: positions (...,) -> (..., dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)

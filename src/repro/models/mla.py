@@ -1,0 +1,151 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — compressed KV cache.
+
+The KV cache stores only the low-rank latent c_kv (kv_lora_rank) plus the
+shared RoPE key (qk_rope_head_dim) per position — the architecture's point.
+Prefill uses the naive (decompressed) form; decode uses the *absorbed* form:
+q_nope is projected through W_uk so attention runs directly against the
+latent cache, and the context is re-expanded through W_uv afterwards.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def init_mla(cfg, mk):
+    a = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    dn, dr, dv, r = a.qk_nope_head_dim, a.qk_rope_head_dim, a.v_head_dim, a.kv_lora_rank
+    s = 1 / math.sqrt(D)
+    return {
+        "wq": mk((D, H, dn + dr), ("embed", "heads", "head_dim"), scale=s),
+        "w_dkv": mk((D, r + dr), ("embed", "kv_lora"), scale=s),
+        "kv_norm": mk((r,), ("kv_lora",), init="ones"),
+        "w_uk": mk((r, H, dn), ("kv_lora", "heads", "head_dim"), scale=1 / math.sqrt(r)),
+        "w_uv": mk((r, H, dv), ("kv_lora", "heads", "head_dim"), scale=1 / math.sqrt(r)),
+        "wo": mk((H, dv, D), ("heads", "head_dim", "embed"), scale=1 / math.sqrt(H * dv)),
+    }
+
+
+def _compress(params, cfg, x, positions):
+    """-> (c_kv (B,S,r) normalised latent, k_rope (B,S,dr) roped shared key)."""
+    a = cfg.mla
+    ckv = x @ params["w_dkv"].astype(x.dtype)            # (B,S,r+dr)
+    c, k_r = ckv[..., :a.kv_lora_rank], ckv[..., a.kv_lora_rank:]
+    c = L.rmsnorm({"scale": params["kv_norm"]}, c)
+    k_r = L.apply_rope(k_r[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c, k_r
+
+
+def _queries(params, cfg, x, positions):
+    a = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    q_n, q_r = q[..., :a.qk_nope_head_dim], q[..., a.qk_nope_head_dim:]
+    q_r = L.apply_rope(q_r, positions, cfg.rope_theta)
+    return q_n, q_r
+
+
+def mla_forward(params, cfg, x, positions, *, causal=True):
+    """Naive (decompressed) prefill. Returns (out, cache {c, k_rope})."""
+    a = cfg.mla
+    B, S, D = x.shape
+    q_n, q_r = _queries(params, cfg, x, positions)
+    c, k_r = _compress(params, cfg, x, positions)
+    k_n = jnp.einsum("bsr,rhk->bshk", c, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c, params["w_uv"].astype(x.dtype))
+    scale = 1 / math.sqrt(a.qk_nope_head_dim + a.qk_rope_head_dim)
+    scores = (jnp.einsum("bqhk,bshk->bhqs", q_n, k_n)
+              + jnp.einsum("bqhk,bsk->bhqs", q_r, k_r)).astype(jnp.float32) * scale
+    if causal:
+        qp = positions[:, None, :, None]
+        kp = positions[:, None, None, :]
+        scores = jnp.where(kp <= qp, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bshk->bqhk", w, v)
+    out = jnp.einsum("bqhk,hkd->bqd", ctx, params["wo"].astype(x.dtype))
+    return out, {"c": c, "k_rope": k_r}
+
+
+def mla_forward_blocked(params, cfg, x, positions, *, causal=True,
+                        q_chunk=512):
+    """Chunked-query prefill for long sequences: scores tile (B,H,qc,S)
+    never persists across chunks. Keys/values decompress once."""
+    a = cfg.mla
+    B, S, D = x.shape
+    assert S % q_chunk == 0
+    q_n, q_r = _queries(params, cfg, x, positions)
+    c, k_r = _compress(params, cfg, x, positions)
+    k_n = jnp.einsum("bsr,rhk->bshk", c, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c, params["w_uv"].astype(x.dtype))
+    from repro.models.attention import _constrain
+    q_n = _constrain(q_n, ("batch", None, "heads", None))
+    k_n = _constrain(k_n, ("batch", None, "heads", None))
+    v = _constrain(v, ("batch", None, "heads", None))
+    scale = 1 / math.sqrt(a.qk_nope_head_dim + a.qk_rope_head_dim)
+    kp = positions[:, None, None, :]
+
+    def q_step(_, qi):
+        qs = qi * q_chunk
+        qn_b = jax.lax.dynamic_slice_in_dim(q_n, qs, q_chunk, axis=1)
+        qr_b = jax.lax.dynamic_slice_in_dim(q_r, qs, q_chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(positions, qs, q_chunk, axis=1)[:, None, :, None]
+        s = (jnp.einsum("bqhk,bshk->bhqs", qn_b, k_n)
+             + jnp.einsum("bqhk,bsk->bhqs", qr_b, k_r)).astype(jnp.float32) * scale
+        if causal:
+            s = jnp.where(kp <= qp, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        return None, jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+    q_step_ck = jax.checkpoint(q_step, prevent_cse=False)
+    _, chunks = jax.lax.scan(q_step_ck, None, jnp.arange(S // q_chunk),
+                             unroll=(S // q_chunk)
+                             if os.environ.get("REPRO_COST_MODE") == "1" else 1)
+    ctx = chunks.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.num_heads, a.v_head_dim)
+    out = jnp.einsum("bqhk,hkd->bqd", ctx, params["wo"].astype(x.dtype))
+    return out, {"c": c, "k_rope": k_r}
+
+
+def mla_decode(params, cfg, x, cache, pos):
+    """Absorbed decode: attention runs against the latent cache directly.
+
+    cache: {c: (B,S,r), k_rope: (B,S,dr)}; x (B,1,D); pos scalar.
+    """
+    a = cfg.mla
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_n, q_r = _queries(params, cfg, x, positions)
+    c_new, kr_new = _compress(params, cfg, x, positions)
+    c = jax.lax.dynamic_update_slice_in_dim(
+        cache["c"], c_new.astype(cache["c"].dtype), pos, axis=1)
+    k_r = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    # absorb: q' = q_nope @ W_uk  -> (B,1,H,r); attend against latents
+    q_abs = jnp.einsum("bqhk,rhk->bqhr", q_n, params["w_uk"].astype(x.dtype))
+    scale = 1 / math.sqrt(a.qk_nope_head_dim + a.qk_rope_head_dim)
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_abs, c)
+              + jnp.einsum("bqhk,bsk->bhqs", q_r, k_r)).astype(jnp.float32) * scale
+    valid = jnp.arange(c.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhqs,bsr->bqhr", w, c)          # (B,1,H,r)
+    ctx = jnp.einsum("bqhr,rhk->bqhk", ctx_lat, params["w_uv"].astype(x.dtype))
+    out = jnp.einsum("bqhk,hkd->bqd", ctx, params["wo"].astype(x.dtype))
+    return out, {"c": c, "k_rope": k_r}
+
+
+def mla_cache_spec(cfg, mk, batch: int, capacity: int, dtype=jnp.bfloat16):
+    a = cfg.mla
+    return {
+        "c": mk((batch, capacity, a.kv_lora_rank),
+                ("batch", "kv_seq", "kv_lora"), init="zeros", dtype=dtype),
+        "k_rope": mk((batch, capacity, a.qk_rope_head_dim),
+                     ("batch", "kv_seq", "head_dim"), init="zeros", dtype=dtype),
+    }

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts: top-k router + sort-based capacity dispatch.
+
+Dispatch is sort-based (production style) rather than dense-one-hot so the
+compiled FLOPs equal the *active* expert FLOPs (E x C x D x F with
+C ~ T*top_k/E * capacity_factor), not E x T — this is what makes the MoE
+rooflines honest. The (E, C, D) expert buffer carries the ``experts``
+logical axis: when E divides the ``model`` mesh axis (DeepSeek: 64 % 16 == 0)
+the scatter/gather to/from token-sharded layout lowers to the expected
+all-to-all (expert parallelism); otherwise the sanitizer falls back to
+tensor-parallel experts (Mixtral: 8 experts, TP on the ``mlp`` dim).
+
+Tokens over capacity are dropped (standard dropping MoE); the router
+aux-loss (load-balance) follows Switch/Mixtral.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_moe(cfg, mk):
+    m = cfg.moe
+    D = cfg.d_model
+    E, F = m.num_experts, m.expert_d_ff
+    p = {
+        "router": mk((D, E), ("embed", "experts"), scale=1 / math.sqrt(D)),
+        "w_gate": mk((E, D, F), ("experts", "expert_embed", "mlp"), scale=1 / math.sqrt(D)),
+        "w_up": mk((E, D, F), ("experts", "expert_embed", "mlp"), scale=1 / math.sqrt(D)),
+        "w_down": mk((E, F, D), ("experts", "mlp", "expert_embed"), scale=1 / math.sqrt(F)),
+    }
+    if m.num_shared_experts:
+        p["shared"] = L.init_swiglu(mk, D, m.shared_d_ff or m.expert_d_ff)
+    return p
+
+
+def _capacity(num_tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(num_tokens * m.top_k / m.num_experts * m.capacity_factor)
+    return max(m.top_k, min(num_tokens, (c + 7) // 8 * 8))
+
+
+def _dispatch_group(params, cfg, xf, C: int):
+    """One group's sort-based dispatch. xf: (T,D) -> (out (T,D), stats).
+
+    Runs entirely locally when the group dim is sharded over the data axis —
+    the Switch-Transformer grouping. The naive single-global-group version
+    lowered the scatter to a full (E,C,D) all-reduce across data shards
+    (measured 211 GB/device on deepseek prefill_32k — EXPERIMENTS.md §Perf H2).
+    """
+    m = cfg.moe
+    T, D = xf.shape
+    E, k = m.num_experts, m.top_k
+
+    logits = (xf @ params["router"].astype(xf.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)                       # (T,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux terms (Switch); reduced across groups upstream ----
+    me = probs.mean(axis=0)
+    ce = jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32).mean(axis=0)
+
+    # ---- sort-based dispatch (group-local) ----
+    flat_ids = expert_ids.reshape(-1)                                     # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_ids)
+    s_ids, s_gate, s_tok = flat_ids[order], flat_gate[order], flat_tok[order]
+    counts = jnp.bincount(flat_ids, length=E)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * k) - starts[s_ids]
+    keep = pos_in_e < C
+
+    dest = jnp.where(keep, s_ids * C + pos_in_e, E * C)
+    buf = jnp.zeros((E * C + 1, D), xf.dtype).at[dest].set(xf[s_tok])
+    buf = buf[:-1].reshape(E, C, D)
+    return buf, (dest, keep, s_tok, s_gate), (me, ce)
+
+
+def moe_forward(params, cfg, x):
+    """x: (B,S,D) -> (out (B,S,D), aux_loss scalar).
+
+    Grouped (Switch-style) dispatch: each batch row is a routing group with
+    its own capacity, so dispatch/combine are local under batch-over-data
+    sharding and the expert einsum is the only cross-device interaction
+    (expert/mlp dims sharded over the model axis)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E = m.num_experts
+    C = _capacity(S, cfg)
+
+    buf, meta, (me, ce) = jax.vmap(
+        lambda xg: _dispatch_group(params, cfg, xg, C))(x)                # (B,E,C,D)
+    aux = m.router_aux_weight * E * jnp.sum(me.mean(0) * ce.mean(0))
+
+    # ---- expert computation (active FLOPs only; EP/TP over model axis) ----
+    g = jnp.einsum("becd,edf->becf", buf, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", buf, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(x.dtype))
+
+    # ---- combine (group-local gather + weighted sum) ----
+    def combine_group(yg, meta_g):
+        dest, keep, s_tok, s_gate = meta_g
+        yf = yg.reshape(E * C, D)
+        gathered = jnp.where(keep[:, None], yf[jnp.clip(dest, 0, E * C - 1)], 0.0)
+        return jnp.zeros((S, D), x.dtype).at[s_tok].add(
+            gathered * s_gate[:, None].astype(x.dtype))
+
+    out = jax.vmap(combine_group)(y, meta)
+    if m.num_shared_experts:
+        out = out + L.swiglu(params["shared"], x.reshape(B * S, D)).reshape(B, S, D)
+    return out, aux

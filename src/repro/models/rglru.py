@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block: x -> {linear -> causal conv1d(4) -> RG-LRU} * gelu(linear) -> linear.
+RG-LRU recurrence (diagonal, per-channel):
+
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))   in (0,1), c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t x_t)
+
+Prefill uses ``jax.lax.associative_scan`` over the linear recurrence
+(h_t = a_t h_{t-1} + b_t) — the TPU-native parallel form; decode is a
+single fused state update. State = (conv tail (B,3,W), h (B,W)).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+C_SCALE = 8.0
+CONV_W = 4
+
+
+def init_rglru(cfg, mk):
+    D = cfg.d_model
+    W = D  # lru width = d_model
+    s = 1 / math.sqrt(D)
+    return {
+        "w_in": mk((D, W), ("embed", "mlp"), scale=s),          # recurrent branch
+        "w_gate_br": mk((D, W), ("embed", "mlp"), scale=s),     # gelu gate branch
+        "conv_w": mk((CONV_W, W), ("time", "mlp"), scale=1 / math.sqrt(CONV_W)),
+        "conv_b": mk((W,), ("mlp",), init="zeros"),
+        "w_a": mk((W, W), ("mlp", "state"), scale=1 / math.sqrt(W)),
+        "b_a": mk((W,), ("state",), init="zeros"),
+        "w_x": mk((W, W), ("mlp", "state"), scale=1 / math.sqrt(W)),
+        "b_x": mk((W,), ("state",), init="zeros"),
+        "lam": mk((W,), ("state",), init="ones"),               # softplus -> decay
+        "w_out": mk((W, D), ("mlp", "embed"), scale=1 / math.sqrt(W)),
+    }
+
+
+def _gates(params, u):
+    """u: (..., W) conv output -> (a, b) of the linear recurrence."""
+    r = jax.nn.sigmoid((u @ params["w_a"].astype(u.dtype)).astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_x"].astype(u.dtype)).astype(jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = -C_SCALE * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def _conv_full(params, x):
+    """Causal temporal conv, width 4. x: (B,S,W)."""
+    pads = jnp.pad(x, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(jax.lax.dynamic_slice_in_dim(pads, j, x.shape[1], axis=1)
+              * params["conv_w"][j].astype(x.dtype)
+              for j in range(CONV_W))
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def rglru_forward(params, cfg, x):
+    """x: (B,S,D) -> (out (B,S,D), state {conv (B,3,W), h (B,W)})."""
+    u0 = x @ params["w_in"].astype(x.dtype)                 # (B,S,W)
+    u = _conv_full(params, u0)
+    a, b = _gates(params, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu((x @ params["w_gate_br"].astype(x.dtype)).astype(jnp.float32))
+    out = (h * gate).astype(x.dtype) @ params["w_out"].astype(x.dtype)
+    state = {"conv": u0[:, -(CONV_W - 1):, :], "h": h[:, -1, :].astype(jnp.float32)}
+    return out, state
+
+
+def rglru_decode(params, cfg, x, state):
+    """x: (B,1,D); state {conv (B,3,W), h (B,W)} -> (out (B,1,D), new state)."""
+    u0 = (x[:, 0] @ params["w_in"].astype(x.dtype))          # (B,W)
+    hist = jnp.concatenate([state["conv"], u0[:, None, :].astype(state["conv"].dtype)], axis=1)
+    u = (jnp.einsum("btw,tw->bw", hist.astype(x.dtype), params["conv_w"].astype(x.dtype))
+         + params["conv_b"].astype(x.dtype))
+    a, b = _gates(params, u)
+    h = a * state["h"] + b
+    gate = jax.nn.gelu((x[:, 0] @ params["w_gate_br"].astype(x.dtype)).astype(jnp.float32))
+    out = (h * gate).astype(x.dtype) @ params["w_out"].astype(x.dtype)
+    return out[:, None, :], {"conv": hist[:, 1:, :], "h": h}
+
+
+def rglru_state_spec(cfg, mk, batch: int, dtype=jnp.bfloat16):
+    W = cfg.d_model
+    return {
+        "conv": mk((batch, CONV_W - 1, W), ("batch", "time", "state"),
+                   init="zeros", dtype=dtype),
+        "h": mk((batch, W), ("batch", "state"), init="zeros", dtype=jnp.float32),
+    }

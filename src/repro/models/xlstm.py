@@ -1,0 +1,259 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Simplified-but-faithful structure following arXiv:2405.04517:
+
+mLSTM (parallel-capable, here a time scan / one-step update):
+    q,k,v from an up-projected residual stream; exponential input gate i_t,
+    forget gate f_t, with stabiliser state m_t:
+        m_t = max(f~_t + m_{t-1}, i~_t)
+        C_t = exp(f~_t + m_{t-1} - m_t) C_{t-1} + exp(i~_t - m_t) v_t k_t^T
+        n_t = exp(f~_t + m_{t-1} - m_t) n_{t-1} + exp(i~_t - m_t) k_t
+        h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+    followed by a gated down-projection.
+
+sLSTM: scalar memory per channel with exponential gating and a normaliser,
+block-diagonal recurrent weights over ``num_heads`` groups.
+
+State specs carry logical axes so the distribution layer can shard the
+matrix memory (heads -> model when divisible).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+PROJ_FACTOR = 2  # d_inner = 2 * d_model (paper's mLSTM proj factor)
+
+
+def _bptt_chunk() -> int:
+    """REPRO_BPTT_CHUNK=k: chunked-BPTT remat for the time scans — the
+    backward saves the recurrent state only every k steps and recomputes
+    within a chunk. Without it, BPTT over S=4096 saves the (B,H,dh,dh)
+    matrix memory at EVERY step (measured 2.5 TB/device on xlstm train_4k).
+    0 disables (naive BPTT); default 64 ~ sqrt(4096) balances chunk-boundary
+    state saves against within-chunk backward saves (EXPERIMENTS.md §Perf H1)."""
+    return int(os.environ.get("REPRO_BPTT_CHUNK", "64"))
+
+
+def _chunked_time_scan(step, state0, xs, length: int):
+    """lax.scan over time with per-chunk rematerialisation.
+
+    xs leaves are time-major (S, ...). Returns (final_state, ys stacked (S, ...)).
+    """
+    chunk = _bptt_chunk()
+    if chunk <= 0 or length <= chunk or length % chunk != 0:
+        return jax.lax.scan(step, state0, xs)
+    n = length // chunk
+
+    def split(x):
+        return x.reshape(n, chunk, *x.shape[1:])
+
+    xs_c = jax.tree.map(split, xs)
+
+    @jax.checkpoint
+    def outer(state, xc):
+        return jax.lax.scan(step, state, xc)
+
+    state, ys = jax.lax.scan(outer, state0, xs_c)
+
+    def merge(y):
+        return y.reshape(length, *y.shape[2:])
+
+    return state, jax.tree.map(merge, ys)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg, mk):
+    D = cfg.d_model
+    Din = PROJ_FACTOR * D
+    H = cfg.num_heads
+    s, si = 1 / math.sqrt(D), 1 / math.sqrt(Din)
+    return {
+        "w_up": mk((D, Din), ("embed", "mlp"), scale=s),
+        "w_gate": mk((D, Din), ("embed", "mlp"), scale=s),
+        "wq": mk((Din, Din), ("mlp", "heads"), scale=si),
+        "wk": mk((Din, Din), ("mlp", "heads"), scale=si),
+        "wv": mk((Din, Din), ("mlp", "heads"), scale=si),
+        "w_i": mk((Din, H), ("mlp", "heads"), scale=si),
+        "b_i": mk((H,), ("heads",), init="zeros"),
+        "w_f": mk((Din, H), ("mlp", "heads"), scale=si),
+        "b_f": mk((H,), ("heads",), init="ones"),
+        "w_down": mk((Din, D), ("mlp", "embed"), scale=1 / math.sqrt(Din)),
+    }
+
+
+def _mlstm_qkvif(params, cfg, u):
+    """u: (..., Din) -> q,k,v (..., H, dh), i~, f~ (..., H)."""
+    H = cfg.num_heads
+    dh = u.shape[-1] // H
+    q = (u @ params["wq"].astype(u.dtype)).reshape(*u.shape[:-1], H, dh)
+    k = (u @ params["wk"].astype(u.dtype)).reshape(*u.shape[:-1], H, dh) / math.sqrt(dh)
+    v = (u @ params["wv"].astype(u.dtype)).reshape(*u.shape[:-1], H, dh)
+    it = (u @ params["w_i"].astype(u.dtype)).astype(jnp.float32) + params["b_i"].astype(jnp.float32)
+    ft = (u @ params["w_f"].astype(u.dtype)).astype(jnp.float32) + params["b_f"].astype(jnp.float32)
+    ft = -jax.nn.softplus(-ft)  # log sigmoid (forget in log space)
+    return q, k, v, it, ft
+
+
+def _mlstm_step(state, qkvif):
+    C, n, m = state
+    q, k, v, it, ft = qkvif
+    m_new = jnp.maximum(ft + m, it)
+    fe = jnp.exp(ft + m - m_new)[..., None]
+    ie = jnp.exp(it - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C_new = fe[..., None] * C + ie[..., None] * (vf[..., :, None] * kf[..., None, :])
+    n_new = fe * n + ie * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("...vk,...k->...v", C_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("...k,...k->...", n_new, qf))[..., None], 1.0)
+    h = num / den
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_forward(params, cfg, x):
+    """x (B,S,D) -> (out, state (C,n,m))."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    u = x @ params["w_up"].astype(x.dtype)
+    q, k, v, it, ft = _mlstm_qkvif(params, cfg, u)
+    dh = u.shape[-1] // H
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+
+    def step(carry, xs):
+        st, h = _mlstm_step(carry, xs)
+        # emit h in the stream dtype: the (S,B,H,dh) output stack is saved
+        # across the whole sequence — f32 doubles its footprint for nothing
+        return st, h.astype(x.dtype)
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3), v.transpose(1, 0, 2, 3),
+          it.transpose(1, 0, 2), ft.transpose(1, 0, 2))
+    state, hs = _chunked_time_scan(step, (C0, n0, m0), xs, S)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, -1)        # (B,S,Din)
+    gate = jax.nn.silu((x @ params["w_gate"].astype(x.dtype)).astype(jnp.float32))
+    out = (h * gate).astype(x.dtype) @ params["w_down"].astype(x.dtype)
+    return out, (state[0], state[1], state[2])
+
+
+def mlstm_decode(params, cfg, x, state):
+    """x (B,1,D), state (C,n,m) -> (out (B,1,D), new state)."""
+    u = x[:, 0] @ params["w_up"].astype(x.dtype)
+    q, k, v, it, ft = _mlstm_qkvif(params, cfg, u)
+    state, h = _mlstm_step(state, (q, k, v, it, ft))
+    h = h.reshape(x.shape[0], -1)
+    gate = jax.nn.silu((x[:, 0] @ params["w_gate"].astype(x.dtype)).astype(jnp.float32))
+    out = (h * gate).astype(x.dtype) @ params["w_down"].astype(x.dtype)
+    return out[:, None, :], state
+
+
+def mlstm_state_spec(cfg, mk, batch: int):
+    H = cfg.num_heads
+    dh = PROJ_FACTOR * cfg.d_model // H
+    return (
+        mk((batch, H, dh, dh), ("batch", "heads", "state", "head_dim"),
+           init="zeros", dtype=jnp.float32),
+        mk((batch, H, dh), ("batch", "heads", "state"), init="zeros", dtype=jnp.float32),
+        mk((batch, H), ("batch", "heads"), init="zeros", dtype=jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg, mk):
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    s = 1 / math.sqrt(D)
+    sh = 1 / math.sqrt(dh)
+    return {
+        # input projections for gates z,i,f,o
+        "w_z": mk((D, D), ("embed", "mlp"), scale=s),
+        "w_i": mk((D, D), ("embed", "mlp"), scale=s),
+        "w_f": mk((D, D), ("embed", "mlp"), scale=s),
+        "w_o": mk((D, D), ("embed", "mlp"), scale=s),
+        # block-diagonal recurrent weights (per head)
+        "r_z": mk((H, dh, dh), ("heads", "state", "head_dim"), scale=sh),
+        "r_i": mk((H, dh, dh), ("heads", "state", "head_dim"), scale=sh),
+        "r_f": mk((H, dh, dh), ("heads", "state", "head_dim"), scale=sh),
+        "r_o": mk((H, dh, dh), ("heads", "state", "head_dim"), scale=sh),
+        "b_z": mk((D,), ("mlp",), init="zeros"),
+        "b_i": mk((D,), ("mlp",), init="zeros"),
+        "b_f": mk((D,), ("mlp",), init="ones"),
+        "b_o": mk((D,), ("mlp",), init="zeros"),
+        # post-block ffn (xLSTM sLSTM block has a small MLP)
+        "w_up": mk((D, 2 * D), ("embed", "mlp"), scale=s),
+        "w_down": mk((2 * D, D), ("mlp", "embed"), scale=1 / math.sqrt(2 * D)),
+    }
+
+
+def _slstm_step(params, cfg, state, x_t):
+    """state (c,n,m,h) each (B,D) fp32; x_t (B,D)."""
+    c, n, m, h = state
+    H = cfg.num_heads
+    B, D = x_t.shape
+    dh = D // H
+
+    def rec(w, hh):
+        return jnp.einsum("bhk,hkj->bhj", hh.reshape(B, H, dh), w.astype(hh.dtype)).reshape(B, D)
+
+    xt = x_t.astype(jnp.float32)
+    z = jnp.tanh(xt @ params["w_z"].astype(jnp.float32) + rec(params["r_z"], h)
+                 + params["b_z"].astype(jnp.float32))
+    it = (xt @ params["w_i"].astype(jnp.float32) + rec(params["r_i"], h)
+          + params["b_i"].astype(jnp.float32))
+    ft = (xt @ params["w_f"].astype(jnp.float32) + rec(params["r_f"], h)
+          + params["b_f"].astype(jnp.float32))
+    o = jax.nn.sigmoid(xt @ params["w_o"].astype(jnp.float32) + rec(params["r_o"], h)
+                       + params["b_o"].astype(jnp.float32))
+    ft = -jax.nn.softplus(-ft)                       # log sigmoid
+    m_new = jnp.maximum(ft + m, it)
+    fe = jnp.exp(ft + m - m_new)
+    ie = jnp.exp(it - m_new)
+    c_new = fe * c + ie * z
+    n_new = fe * n + ie
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_forward(params, cfg, x):
+    B, S, D = x.shape
+    z0 = jnp.zeros((B, D), jnp.float32)
+    state0 = (z0, z0, z0, z0)
+
+    def step(carry, x_t):
+        st, h = _slstm_step(params, cfg, carry, x_t)
+        return st, h.astype(x.dtype)
+
+    state, hs = _chunked_time_scan(step, state0, x.transpose(1, 0, 2), S)
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    u = h @ params["w_up"].astype(x.dtype)
+    out = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype) @ params["w_down"].astype(x.dtype)
+    return out, state
+
+
+def slstm_decode(params, cfg, x, state):
+    state, h = _slstm_step(params, cfg, state, x[:, 0])
+    h = h.astype(x.dtype)
+    u = h @ params["w_up"].astype(x.dtype)
+    out = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype) @ params["w_down"].astype(x.dtype)
+    return out[:, None, :], state
+
+
+def slstm_state_spec(cfg, mk, batch: int):
+    D = cfg.d_model
+    one = lambda: mk((batch, D), ("batch", "state"), init="zeros", dtype=jnp.float32)
+    return (one(), one(), one(), one())

@@ -1,0 +1,51 @@
+"""Generic training loop: jitted step (loss + grad + AdamW), metrics log,
+periodic checkpointing. Works for LM, masked-prediction and diffusion losses."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig):
+    """loss_fn(params, batch, rng) -> (loss, metrics)."""
+
+    def step(params, opt_state, batch, rng):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, rng)
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return jax.jit(step)
+
+
+def train(params, loss_fn, batches: Iterator, opt_cfg: AdamWConfig, *,
+          num_steps: int, log_every: int = 10, ckpt_dir: str | None = None,
+          ckpt_every: int = 0, seed: int = 0, log_fn=print):
+    step_fn = make_train_step(loss_fn, opt_cfg)
+    opt_state = init_opt_state(params)
+    rng = jax.random.PRNGKey(seed)
+    history = []
+    t0 = time.perf_counter()
+    for i in range(num_steps):
+        batch = next(batches)
+        rng, sub = jax.random.split(rng)
+        params, opt_state, metrics = step_fn(params, opt_state, batch, sub)
+        if i % log_every == 0 or i == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            log_fn(f"step {i:5d} loss {m['loss']:.4f} "
+                   f"gnorm {m.get('grad_norm', 0):.3f} lr {m.get('lr', 0):.2e}")
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, {"params": params}, step=i + 1)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, {"params": params}, step=num_steps)
+    return params, opt_state, history

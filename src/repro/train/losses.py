@@ -1,0 +1,67 @@
+"""Losses: next-token CE (decoders), masked-prediction CE (encoders),
+eps-prediction MSE with CFG condition-dropout (diffusion)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+def _ce(logits, targets, mask=None):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def lm_loss(params, cfg, tokens, *, rules=None, remat=True):
+    """Next-token CE over tokens (B,S). Returns (loss, metrics).
+
+    The forward runs on the FULL S (not S-1): odd lengths break the seq-
+    sharding divisibility and the blocked-attention path; the last position's
+    logits are simply masked out of the loss instead."""
+    h, _, aux = T.forward(params, cfg, tokens, rules=rules, remat=remat)
+    logits = T.unembed(params, cfg, h)
+    logits = T.constrain(logits, ("batch", None, "vocab"), rules)
+    B, S = tokens.shape
+    mask = jnp.broadcast_to(jnp.arange(S)[None] < S - 1, (B, S))
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    loss = _ce(logits, targets, mask)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+def masked_prediction_loss(params, cfg, features, targets, mask, *,
+                           rules=None, remat=True):
+    """HuBERT-style: predict codebook targets at masked frames.
+
+    features (B,S,D) frontend embeddings (already mask-corrupted upstream),
+    targets (B,S) int32 unit ids, mask (B,S) bool (True = scored)."""
+    h, _, aux = T.forward(params, cfg, features, rules=rules, remat=remat)
+    logits = T.unembed(params, cfg, h)
+    loss = _ce(logits, targets, mask)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+def diffusion_loss(eps_fn, sched, rng, latents, text_emb, null_emb, *,
+                   cond_drop: float = 0.1):
+    """eps-prediction MSE with condition dropout (CFG training).
+
+    latents (B,h,w,c); text_emb/null_emb (B,L,D)."""
+    B = latents.shape[0]
+    k_t, k_eps, k_drop = jax.random.split(rng, 3)
+    t = jax.random.randint(k_t, (B,), 0, sched.T)
+    ab = jnp.asarray(sched.alphas_bar, jnp.float32)[t]
+    eps = jax.random.normal(k_eps, latents.shape, jnp.float32)
+    x_t = (jnp.sqrt(ab)[:, None, None, None] * latents.astype(jnp.float32)
+           + jnp.sqrt(1 - ab)[:, None, None, None] * eps)
+    drop = jax.random.bernoulli(k_drop, cond_drop, (B,))
+    text = jnp.where(drop[:, None, None], null_emb, text_emb)
+    pred = eps_fn(x_t.astype(latents.dtype), t, text)
+    loss = jnp.mean(jnp.square(pred.astype(jnp.float32) - eps))
+    return loss, {"mse": loss}

@@ -1,0 +1,79 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule (pure JAX pytrees).
+
+Optimizer state mirrors the params tree (m, v per leaf in fp32), so the
+same logical-axes tree shards it (ZeRO-3 falls out of the FSDP param rules).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(math.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    """-> (new_params, new_state, metrics)."""
+    step = state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** (step.astype(jnp.float32) + 1)
+    b2c = 1.0 - cfg.b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,90 @@
+"""Blocked (flash-style jnp) attention vs direct path; ring cache; SWA."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("yi-9b")
+    params = A.init_attention(cfg, L.ArrayMaker(jax.random.PRNGKey(0)))
+    return cfg, params
+
+
+def _x(cfg, B, S, seed=1):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (B, S, cfg.d_model)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return x, pos
+
+
+@pytest.mark.parametrize("window", [None, 96])
+def test_blocked_equals_direct(setup, window):
+    cfg, params = setup
+    x, pos = _x(cfg, 2, 256)
+    out_d, kv_d = A.attn_forward(params, cfg, x, pos, window=window)
+    out_b, kv_b = A.attn_forward_blocked(params, cfg, x, pos, window=window,
+                                         q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(out_d),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(kv_b["k"]), np.asarray(kv_d["k"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_blocked_non_causal(setup):
+    cfg, params = setup
+    x, pos = _x(cfg, 1, 128)
+    out_d, _ = A.attn_forward(params, cfg, x, pos, causal=False)
+    out_b, _ = A.attn_forward_blocked(params, cfg, x, pos, causal=False,
+                                      q_chunk=32, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(out_d),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ring_cache_matches_linear(setup):
+    """Windowed decode via ring buffer == linear cache with window mask."""
+    cfg, params = setup
+    W = 8
+    B, S, EXT = 2, 12, 5
+    x, pos = _x(cfg, B, S + EXT)
+    # build both caches from the same prefill
+    _, kv = A.attn_forward(params, cfg, x[:, :S], pos[:, :S], window=W)
+    lin = {"k": jnp.pad(kv["k"], ((0, 0), (0, EXT), (0, 0), (0, 0))),
+           "v": jnp.pad(kv["v"], ((0, 0), (0, EXT), (0, 0), (0, 0)))}
+    ring = A.cache_from_prefill(kv, window=W, seq_len=S)
+    for i in range(EXT):
+        xi = x[:, S + i:S + i + 1]
+        o_lin, lin = A.attn_decode(params, cfg, xi, lin, S + i, window=W)
+        o_ring, ring = A.attn_decode_ring(params, cfg, xi, ring, S + i, window=W)
+        np.testing.assert_allclose(np.asarray(o_ring), np.asarray(o_lin),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_swa_ignores_distant_tokens(setup):
+    """Perturbing a token outside the window must not change the output."""
+    cfg, params = setup
+    W = 16
+    B, S = 1, 64
+    x, pos = _x(cfg, B, S)
+    out1, _ = A.attn_forward(params, cfg, x, pos, window=W)
+    x2 = x.at[:, 0].add(10.0)   # far outside the last rows' window
+    out2, _ = A.attn_forward(params, cfg, x2, pos, window=W)
+    np.testing.assert_allclose(np.asarray(out1[:, -1]), np.asarray(out2[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+    # ...but it does change early rows (sanity that the perturbation matters)
+    assert float(jnp.abs(out1[:, 0] - out2[:, 0]).max()) > 1e-3
+
+
+def test_qk_norm_path():
+    cfg = get_smoke_config("qwen3-14b")
+    assert cfg.qk_norm
+    params = A.init_attention(cfg, L.ArrayMaker(jax.random.PRNGKey(0)))
+    assert "q_norm" in params and "k_norm" in params
+    x, pos = _x(cfg, 2, 32)
+    out, _ = A.attn_forward(params, cfg, x, pos)
+    assert bool(jnp.isfinite(out).all())

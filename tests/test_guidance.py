@@ -1,0 +1,59 @@
+"""CFG combine (Eq. 1) semantics + hypothesis properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.guidance import cfg_combine, merge_cond_uncond, split_cond_uncond
+
+
+def test_eq1_reference_values():
+    u = jnp.array([1.0, 2.0])
+    c = jnp.array([3.0, -2.0])
+    out = cfg_combine(u, c, 7.5)
+    np.testing.assert_allclose(out, u + 7.5 * (c - u))
+
+
+def test_scale_one_is_cond_exactly():
+    """s=1 -> eps_hat == eps_cond bit-exactly: selective guidance is lossless
+    at guidance scale 1 (the exactness property DESIGN.md §7 relies on)."""
+    rng = jax.random.PRNGKey(0)
+    u = jax.random.normal(rng, (4, 8, 8, 4))
+    c = jax.random.normal(jax.random.fold_in(rng, 1), (4, 8, 8, 4))
+    assert (cfg_combine(u, c, 1.0) == c).all()
+
+
+def test_scale_zero_is_uncond():
+    rng = jax.random.PRNGKey(0)
+    u = jax.random.normal(rng, (4, 16))
+    c = jax.random.normal(jax.random.fold_in(rng, 1), (4, 16))
+    np.testing.assert_allclose(cfg_combine(u, c, 0.0), u, rtol=1e-6)
+
+
+def test_split_merge_roundtrip():
+    c = jnp.arange(12.0).reshape(4, 3)
+    u = -c
+    m = merge_cond_uncond(c, u)
+    c2, u2 = split_cond_uncond(m)
+    assert (c2 == c).all() and (u2 == u).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-20, 20), st.integers(1, 64))
+def test_linearity_property(scale, n):
+    """cfg_combine is affine: combine(u, c, s) - u == s * (c - u)."""
+    rng = np.random.default_rng(n)
+    u = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    c = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    out = np.asarray(cfg_combine(u, c, scale), np.float64)
+    np.testing.assert_allclose(out - np.asarray(u, np.float64),
+                               scale * (np.asarray(c, np.float64)
+                                        - np.asarray(u, np.float64)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bf16_output_dtype_follows_cond():
+    u = jnp.zeros((4,), jnp.bfloat16)
+    c = jnp.ones((4,), jnp.bfloat16)
+    assert cfg_combine(u, c, 2.0).dtype == jnp.bfloat16

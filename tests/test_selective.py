@@ -1,0 +1,77 @@
+"""GuidancePlan unit + property tests (the paper's schedule object)."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.selective import GuidancePlan, Mode, Segment, sweep
+
+
+def test_full_plan():
+    p = GuidancePlan.full(50)
+    assert p.optimized_steps == 0
+    assert p.denoiser_passes() == 100
+    assert p.is_suffix
+
+
+def test_paper_table1_fractions():
+    """Table 1: passes saved must equal f/2 of the baseline's passes."""
+    for frac, expected_opt in [(0.2, 10), (0.3, 15), (0.4, 20), (0.5, 25)]:
+        p = GuidancePlan.suffix(50, frac)
+        assert p.optimized_steps == expected_opt
+        base = GuidancePlan.full(50).denoiser_passes()
+        saving = 1 - p.denoiser_passes() / base
+        assert saving == pytest.approx(frac / 2)
+
+
+def test_predicted_saving_matches_paper():
+    """With the paper's implied denoiser share (~0.81 on V100), the analytic
+    model reproduces Table 1's savings within 1pp."""
+    U = 0.82
+    paper = {0.2: 0.082, 0.3: 0.121, 0.4: 0.162, 0.5: 0.203}
+    for frac, saving in paper.items():
+        pred = GuidancePlan.suffix(50, frac).predicted_saving(U)
+        assert abs(pred - saving) < 0.01
+
+
+def test_window_plan():
+    p = GuidancePlan.window(50, 0.25, 0.5)
+    assert [s.mode for s in p.segments] == [Mode.FULL, Mode.COND, Mode.FULL]
+    assert not p.is_suffix
+    with pytest.raises(ValueError):
+        p.validate_for_ar()
+
+
+def test_invalid_plans():
+    with pytest.raises(ValueError):
+        GuidancePlan(10, (Segment(0, 5, Mode.FULL),))        # undercover
+    with pytest.raises(ValueError):
+        GuidancePlan(10, (Segment(2, 10, Mode.FULL),))       # gap at start
+    with pytest.raises(ValueError):
+        GuidancePlan.suffix(50, 1.5)
+
+
+@given(st.integers(2, 500), st.floats(0.0, 1.0))
+def test_suffix_plan_properties(total, frac):
+    p = GuidancePlan.suffix(total, frac)
+    assert p.total_steps == total
+    assert sum(s.length for s in p.segments) == total
+    assert p.is_suffix
+    assert 0 <= p.optimized_steps <= total
+    # passes are between T (all cond) and 2T (all full)
+    assert total <= p.denoiser_passes() <= 2 * total
+    p.validate_for_ar()   # suffix plans always valid for AR
+
+
+@given(st.integers(2, 200), st.floats(0.0, 0.99), st.floats(0.01, 1.0))
+def test_window_containment(total, a_frac, width):
+    a = min(total - 1, round(total * a_frac))
+    b = min(total, max(a + 1, a + round(total * width)))
+    p = GuidancePlan.window(total, a / total, b / total)
+    modes = p.modes()
+    assert len(modes) == total
+    assert modes.count(Mode.COND) == b - a
+
+
+def test_sweep():
+    plans = sweep(50, [0.0, 0.2, 0.5])
+    assert [p.optimized_fraction for p in plans] == [0.0, 0.2, 0.5]

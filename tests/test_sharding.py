@@ -1,0 +1,125 @@
+"""Distribution layer: rule tables, priority allocation, divisibility."""
+
+import jax
+import pytest
+from jax.sharding import AxisType, PartitionSpec as P
+
+from repro.dist.sharding import (RULES_LONG, RULES_SERVE, RULES_TRAIN,
+                                 logical_to_spec, sanitize_spec)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1-device "production-shaped" mesh isn't possible; use an abstract mesh
+    # with the production axis sizes for pure spec logic.
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((16, 16), ("data", "model"),
+                        axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+@pytest.fixture(scope="module")
+def pod_mesh():
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((2, 16, 16), ("pod", "data", "model"),
+                        axis_types=(AxisType.Auto,) * 3)
+
+
+def test_param_tp(mesh):
+    spec = logical_to_spec(("embed", "heads", "head_dim"), RULES_SERVE,
+                           shape=(4096, 32, 128), mesh=mesh)
+    assert spec == P(None, "model")
+
+
+def test_kv_heads_divisible_takes_model(mesh):
+    spec = logical_to_spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                           RULES_SERVE, shape=(128, 32768, 16, 64), mesh=mesh)
+    assert spec == P("data", None, "model")
+
+
+def test_kv_seq_fallback_when_heads_indivisible(mesh):
+    """kv=8 can't divide model=16 -> the seq dim inherits the model axis
+    (flash-decode sharding) so GQA caches fit HBM."""
+    spec = logical_to_spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                           RULES_SERVE, shape=(128, 32768, 8, 64), mesh=mesh)
+    assert spec == P("data", "model")
+
+
+def test_mqa_kv1_stays_replicated_on_heads(mesh):
+    spec = logical_to_spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                           RULES_SERVE, shape=(128, 2048, 1, 256), mesh=mesh)
+    assert spec == P("data", "model")   # seq fallback again
+
+
+def test_experts_ep_when_divisible(mesh):
+    spec = logical_to_spec(("experts", "expert_embed", "mlp"), RULES_SERVE,
+                           shape=(64, 2048, 1408), mesh=mesh)
+    assert spec == P("model",)
+    spec8 = logical_to_spec(("experts", "expert_embed", "mlp"), RULES_SERVE,
+                            shape=(8, 4096, 14336), mesh=mesh)
+    assert spec8 == P(None, None, "model")   # TP fallback for 8 experts
+
+
+def test_fsdp_in_train(mesh):
+    spec = logical_to_spec(("embed", "mlp"), RULES_TRAIN,
+                           shape=(4096, 14336), mesh=mesh)
+    assert spec == P("data", "model")
+
+
+def test_pod_axis_joins_batch(pod_mesh):
+    spec = logical_to_spec(("batch", "seq"), RULES_SERVE,
+                           shape=(128, 4096), mesh=pod_mesh)
+    assert spec == P(("pod", "data"),)
+
+
+def test_long_rules_shard_seq(pod_mesh):
+    spec = logical_to_spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                           RULES_LONG, shape=(1, 524288, 8, 128), mesh=pod_mesh)
+    # batch=1 unshardable; kv_seq takes (pod, data); kv_heads can't divide
+    assert spec == P(None, ("pod", "data", "model"))
+
+
+def test_indivisible_dropped(mesh):
+    spec = logical_to_spec(("vocab", "embed"), RULES_SERVE,
+                           shape=(504, 1280), mesh=mesh)
+    assert spec == P()   # 504 % 16 != 0 -> replicated
+
+
+def test_sanitize_duplicate_axis(mesh):
+    spec = sanitize_spec((64, 64), P("model", "model"), mesh)
+    assert spec == P("model",)
+
+
+def test_each_axis_used_once(mesh):
+    spec = logical_to_spec(("batch", "seq", "vocab"), RULES_TRAIN,
+                           shape=(256, 4096, 151936), mesh=mesh)
+    # vocab (priority 0) wins the model axis over seq (priority 1)
+    assert spec == P("data", None, "model")
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.sampled_from(["batch", "kv_seq", "kv_heads", "head_dim",
+                                 "embed", "mlp", "vocab", "heads", "experts",
+                                 None]), min_size=1, max_size=5),
+       st.lists(st.integers(1, 4096), min_size=5, max_size=5))
+def test_allocator_invariants(names, dims):
+    """Property: every produced spec (a) uses each mesh axis at most once,
+    (b) only assigns axes whose sizes divide the dim."""
+    from jax.sharding import AbstractMesh, AxisType
+    m = AbstractMesh((16, 16), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
+    shape = tuple(dims[: len(names)])
+    spec = logical_to_spec(tuple(names), RULES_SERVE, shape=shape, mesh=m)
+    used = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for ax in axes:
+            used.append(ax)
+            prod *= dict(m.shape)[ax]
+        assert shape[i] % prod == 0, (spec, shape)
+    assert len(used) == len(set(used)), f"axis reused: {spec}"

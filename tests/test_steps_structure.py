@@ -1,0 +1,71 @@
+"""Step-builder structural tests (no 512-device compile — structure only).
+
+The dry-run proper runs out of process (results/dryrun_*.jsonl); here we
+verify every (arch x shape) pair builds a consistent bundle: specs,
+shardings and donation indices line up, and the skip policy is exactly
+DESIGN.md §5.
+"""
+
+import jax
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch import steps as ST
+from repro.launch.mesh import make_host_mesh
+
+PAIRS = [(a, s) for a in sorted(ARCHS) for s in SHAPES]
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+@pytest.mark.parametrize("arch,shape_name", PAIRS)
+def test_bundle_builds(arch, shape_name, mesh):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = ST.skip_reason(cfg, shape)
+    if reason:
+        assert arch == "hubert-xlarge" and shape.kind == "decode"
+        return
+    bundle = ST.build(cfg, shape, mesh)
+    assert len(bundle.in_specs) == len(bundle.in_shardings)
+    # spec/sharding trees must be structurally identical
+    for spec, sh in zip(bundle.in_specs, bundle.in_shardings):
+        assert (jax.tree.structure(spec) == jax.tree.structure(sh)), \
+            f"{bundle.name}: spec/sharding structure drift"
+    for d in bundle.donate:
+        assert 0 <= d < len(bundle.in_specs)
+
+
+def test_skip_matrix_matches_design():
+    skips = [(a, s) for a in sorted(ARCHS) for s in SHAPES
+             if ST.skip_reason(get_config(a), SHAPES[s])]
+    assert skips == [("hubert-xlarge", "decode_32k"),
+                     ("hubert-xlarge", "long_500k")]
+
+
+def test_model_flops_sane():
+    cfg = get_config("llama3.2-1b")
+    total, active = ST.param_count(cfg)
+    assert 1.1e9 < total < 1.5e9          # ~1.24B
+    assert active == total                # dense
+    moe_total, moe_active = ST.param_count(get_config("mixtral-8x7b"))
+    assert 44e9 < moe_total < 50e9        # ~47B
+    assert 11e9 < moe_active < 15e9       # ~13B active (top-2 of 8)
+    # train flops = 6*N*D
+    f = ST.model_flops(cfg, SHAPES["train_4k"])
+    assert abs(f / (6 * total * 256 * 4096) - 1) < 1e-6
+
+
+def test_recurrent_supplement_only_for_ssm():
+    assert ST.recurrent_supplement(get_config("qwen3-14b"),
+                                   SHAPES["train_4k"]) == {"flops": 0.0,
+                                                           "bytes": 0.0}
+    supp = ST.recurrent_supplement(get_config("xlstm-350m"),
+                                   SHAPES["prefill_32k"])
+    assert supp["flops"] > 0 and supp["bytes"] > 0
+    # decode shapes never need the supplement (no time scan)
+    assert ST.recurrent_supplement(get_config("xlstm-350m"),
+                                   SHAPES["decode_32k"])["flops"] == 0.0

@@ -1,0 +1,137 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's pipeline: train a tiny conditional diffusion model on synthetic
+shapes, then verify selective guidance's three claims end to end:
+  1. cond-only steps halve the denoiser passes (compute accounting);
+  2. optimizing the LAST 20% barely moves the output (Fig. 2/3);
+  3. later windows hurt monotonically less than earlier ones (Fig. 1).
+Also: the serving path (AR decode) shows the same pass accounting.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import UNetConfig
+from repro.core.pipeline import SDPipeline
+from repro.core.schedules import NoiseSchedule
+from repro.core.selective import GuidancePlan
+from repro.data.synthetic import CLASS_PROMPTS, shapes_dataset
+from repro.train.losses import diffusion_loss
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@pytest.fixture(scope="module")
+def trained_pipe():
+    """The shared 400-step-trained tiny SD pipeline (disk-cached — same
+    fixture the benchmark harness measures). A weakly-conditioned model
+    makes the quality proxies noise-dominated, so tests and benchmarks
+    share one adequately-trained pipeline."""
+    from benchmarks.common import trained_pipeline
+    return trained_pipeline()
+
+
+def test_diffusion_training_reduces_loss():
+    """Short independent training run: the substrate learns (the shared
+    fixture above is cached, so assert on a fresh 60-step run here)."""
+    cfg = UNetConfig().reduced()
+    pipe = SDPipeline.init(cfg, jax.random.PRNGKey(0),
+                           sched=NoiseSchedule.sd_default(100))
+    data = shapes_dataset(np.random.default_rng(0), batch=8, size=cfg.latent_size)
+    prompts_emb = pipe.encode_prompts(CLASS_PROMPTS)
+    null_emb = pipe.null_embedding(1)
+    params = pipe.params
+    opt_cfg = AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=60,
+                          weight_decay=0.0)
+    opt = init_opt_state(params)
+
+    def loss_fn(p, lat, cls, key):
+        def eps_fn(x, t, text):
+            from repro.models.unet import unet_forward
+            return unet_forward(p["unet"], cfg, x, t, text)
+        text = prompts_emb[cls]
+        null = jnp.broadcast_to(null_emb, text.shape)
+        return diffusion_loss(eps_fn, pipe.sched, key, lat, text, null)
+
+    @jax.jit
+    def step(p, opt, lat, cls, key):
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, lat, cls, key)
+        p, opt, _ = adamw_update(opt_cfg, p, g, opt)
+        return p, opt, loss
+
+    hist = []
+    key = jax.random.PRNGKey(1)
+    for i in range(60):
+        lat, cls = next(data)
+        key, sub = jax.random.split(key)
+        params, opt, loss = step(params, opt, jnp.asarray(lat),
+                                 jnp.asarray(cls), sub)
+        hist.append(float(loss))
+    assert np.mean(hist[-10:]) < np.mean(hist[:10]) * 0.95
+
+
+def test_pass_accounting(trained_pipe):
+    base = GuidancePlan.full(20, 5.0)
+    sel = GuidancePlan.suffix(20, 0.2, 5.0)
+    assert base.denoiser_passes() == 40
+    assert sel.denoiser_passes() == 36          # 16*2 + 4*1 -> 10% passes saved
+    assert sel.predicted_saving(1.0) == pytest.approx(0.10)
+
+
+def test_paper_threshold_20pct(trained_pipe):
+    """§3.2: 20% suffix optimization must be far closer to baseline than 80%
+    (relative comparison mirrors the SBS setup)."""
+    pipe = trained_pipe
+    prompts = ["a red disc"]
+    base = pipe.generate(prompts, GuidancePlan.full(20, 5.0), seed=11)
+    d20 = float(jnp.mean((pipe.generate(
+        prompts, GuidancePlan.suffix(20, 0.2, 5.0), seed=11) - base) ** 2))
+    d80 = float(jnp.mean((pipe.generate(
+        prompts, GuidancePlan.suffix(20, 0.8, 5.0), seed=11) - base) ** 2))
+    assert d20 < d80
+    # 20% changes the latents by a small fraction of their scale
+    scale = float(jnp.mean(base ** 2))
+    assert d20 < 0.25 * scale
+
+
+def test_fig1_window_ordering(trained_pipe):
+    """Quality (distance to baseline) improves as the window moves right.
+
+    Robust form of Fig. 1's sensitivity claim, averaged over prompts x
+    seeds: the mean distance of the two LATE window placements must be
+    below the two EARLY ones, and the earliest window is the most damaging.
+    (Note: the final window can sit slightly above the third — the
+    distance-to-baseline proxy never re-corrects a last-window divergence —
+    while the paper's human-judged *quality* keeps improving; see
+    EXPERIMENTS.md §Paper.)
+    """
+    pipe = trained_pipe
+    dists = np.zeros(4)
+    for prompt in ["a blue square", "a red disc"]:
+        for seed in [23, 57]:
+            base = pipe.generate([prompt], GuidancePlan.full(20, 5.0), seed=seed)
+            for w, (a, b) in enumerate([(0.0, 0.25), (0.25, 0.5),
+                                        (0.5, 0.75), (0.75, 1.0)]):
+                out = pipe.generate([prompt], GuidancePlan.window(20, a, b, 5.0),
+                                    seed=seed)
+                dists[w] += float(jnp.mean((out - base) ** 2)) / 4
+    assert np.mean(dists[2:]) < np.mean(dists[:2])
+    assert np.argmax(dists) == 0
+
+
+def test_serving_side_pass_saving(trained_pipe):
+    """The same plan object drives AR serving: pass accounting matches."""
+    from repro.configs import get_smoke_config
+    from repro.models import layers as L
+    from repro.models import transformer as T
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_smoke_config("qwen3-14b")
+    params = T.init_model(cfg, L.ArrayMaker(jax.random.PRNGKey(0)))
+    eng = ServingEngine(params, cfg, max_batch=2, prompt_len=8, max_new=10,
+                        selective_fraction=0.2)
+    out = eng.generate([Request(uid="u1", prompt="a person holding a cat"),
+                        Request(uid="u2", prompt="a silver dragon head")])
+    assert len(out) == 2
+    assert eng.stats.denoiser_passes == 2 * (8 * 2 + 2 * 1)
