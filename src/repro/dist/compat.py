@@ -1,0 +1,164 @@
+"""Version-compatible mesh / sharding API surface.
+
+The codebase is written against the *current* jax sharding API
+(``jax.sharding.AxisType``, two-argument ``AbstractMesh``,
+``jax.sharding.get_abstract_mesh``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.set_mesh``). The pinned toolchain ships jax 0.4.37, where several of
+those names either do not exist yet or live under ``jax._src.mesh`` with a
+different signature. Everything that touches those APIs goes through this
+module so a jax upgrade is a no-op and a downgrade is a shim, not a fork:
+
+* :func:`get_abstract_mesh`  — the ambient mesh or ``None`` (never the raw
+  thread-local default, which old jax reports as ``()``);
+* :data:`AxisType`           — re-export or minimal backport of the enum;
+* :func:`abstract_mesh`      — build an ``AbstractMesh`` from
+  ``(axis_sizes, axis_names)`` under either constructor signature;
+* :func:`make_mesh`          — ``jax.make_mesh`` minus unsupported kwargs;
+* :func:`use_mesh`           — ``jax.set_mesh`` or the legacy ``with mesh:``
+  resource-env context manager;
+* :func:`install`            — idempotently backports the missing names onto
+  ``jax.sharding`` so modern-API callers (including the test suite) run
+  unmodified on 0.4.37.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+from jax._src import mesh as _mesh_src
+
+# Resolved once, before install() can alias jax.sharding.* to this module.
+_RAW_GET_ABSTRACT_MESH = getattr(jax.sharding, "get_abstract_mesh", None) \
+    or getattr(_mesh_src, "get_abstract_mesh", None)
+_ABSTRACT_MESH = jax.sharding.AbstractMesh
+# old signature: AbstractMesh(shape_tuple=((name, size), ...), axis_types=dict)
+_ABSTRACT_MESH_OLD = "shape_tuple" in inspect.signature(
+    _ABSTRACT_MESH.__init__).parameters
+_MAKE_MESH_PARAMS = inspect.signature(jax.make_mesh).parameters
+
+
+try:
+    from jax.sharding import AxisType  # noqa: F401  (jax >= 0.5)
+except ImportError:
+    class AxisType(enum.Enum):
+        """Backport of ``jax.sharding.AxisType``.
+
+        On old jax every mesh axis behaves as ``Auto`` (GSPMD propagation),
+        which is the only member this codebase uses — the backported values
+        are accepted by the compat constructors and dropped.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def get_abstract_mesh():
+    """The ambient (context-set) mesh, or ``None`` when there isn't one.
+
+    Normalises across versions: new jax returns an empty ``AbstractMesh``
+    outside any context, 0.4.37 returns the raw thread-local default ``()``,
+    and the legacy ``with mesh:`` resource env is a third channel that the
+    abstract-mesh getter does not see at all. All three collapse to ``None``
+    here; a non-``None`` return always has ``.axis_names`` and ``.shape``.
+    """
+    m = _RAW_GET_ABSTRACT_MESH() if _RAW_GET_ABSTRACT_MESH is not None else None
+    if m is not None and getattr(m, "axis_names", None):
+        return m
+    env = getattr(_mesh_src, "thread_resources", None)
+    pm = getattr(getattr(env, "env", None), "physical_mesh", None)
+    if pm is not None and getattr(pm, "axis_names", None):
+        return pm
+    return None
+
+
+def abstract_mesh(axis_sizes, axis_names, *, axis_types=None):
+    """``AbstractMesh(axis_sizes, axis_names)`` under either jax signature."""
+    if _ABSTRACT_MESH_OLD:
+        return _ABSTRACT_MESH(tuple(zip(axis_names, axis_sizes)))
+    if axis_types is None:
+        return _ABSTRACT_MESH(tuple(axis_sizes), tuple(axis_names))
+    return _ABSTRACT_MESH(tuple(axis_sizes), tuple(axis_names),
+                          axis_types=tuple(axis_types))
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` with ``axis_types`` dropped where unsupported."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and "axis_types" in _MAKE_MESH_PARAMS:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def use_mesh(mesh):
+    """Context manager making ``mesh`` ambient for sharding constraints.
+
+    New jax: ``jax.set_mesh(mesh)``. Old jax: the ``Mesh`` object is itself
+    the legacy resource-env context manager, and :func:`get_abstract_mesh`
+    above reads that env back.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def cost_analysis(lowered_or_compiled) -> dict:
+    """``.cost_analysis()`` as a flat dict under either jax convention.
+
+    jax 0.4.x returns a list of per-executable dicts from
+    ``Compiled.cost_analysis()`` (and a dict from ``Lowered``); current jax
+    returns a dict from both. Normalises to ``{}`` / the first executable's
+    dict so callers can ``.get("flops")`` unconditionally.
+    """
+    ca = lowered_or_compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+class _AbstractMeshShimMeta(type(_ABSTRACT_MESH)):
+    # instances built by jax internals (the real class) must still satisfy
+    # isinstance(x, jax.sharding.AbstractMesh) after the shim install
+    def __instancecheck__(cls, obj):
+        return isinstance(obj, _ABSTRACT_MESH)
+
+    def __subclasscheck__(cls, sub):
+        return issubclass(sub, _ABSTRACT_MESH)
+
+
+class _AbstractMeshShim(_ABSTRACT_MESH, metaclass=_AbstractMeshShimMeta):
+    """Real subclass accepting both AbstractMesh calling conventions.
+
+    Stays a *type* (not a factory function) so ``isinstance``/``issubclass``
+    against the public ``jax.sharding.AbstractMesh`` name keep working after
+    :func:`install` rebinds it on old jax.
+    """
+
+    def __init__(self, *args, axis_types=None, **kwargs):
+        if len(args) == 2:  # new style: (axis_sizes, axis_names)
+            super().__init__(tuple(zip(args[1], args[0])))
+            return
+        if axis_types is not None and isinstance(axis_types, dict):
+            kwargs["axis_types"] = axis_types
+        super().__init__(*args, **kwargs)
+
+
+def install() -> None:
+    """Backport missing modern names onto ``jax.sharding`` (idempotent).
+
+    Only fills gaps — on a current jax this is a complete no-op. Runs at
+    ``repro.dist`` import time so any entry point (tests, launchers,
+    notebooks) that writes against the modern API works on 0.4.37.
+    """
+    js = jax.sharding
+    if not hasattr(js, "AxisType"):
+        js.AxisType = AxisType
+    if not hasattr(js, "get_abstract_mesh"):
+        js.get_abstract_mesh = get_abstract_mesh
+    if _ABSTRACT_MESH_OLD and js.AbstractMesh is _ABSTRACT_MESH:
+        js.AbstractMesh = _AbstractMeshShim

@@ -24,14 +24,15 @@ from repro.configs import SHAPES, get_config, list_archs              # noqa: E4
 from repro.launch import steps as ST                                  # noqa: E402
 from repro.launch.mesh import chips, make_production_mesh             # noqa: E402
 from repro import roofline as RL                                      # noqa: E402
+from repro.dist.compat import cost_analysis, use_mesh                  # noqa: E402
 
 
 def _custom_mesh(spec: str):
     axes_s, _, shape_s = spec.partition("=")
     axes = tuple(axes_s.split(","))
     shape = tuple(int(x) for x in shape_s.split(","))
-    from jax.sharding import AxisType
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    from repro.dist.compat import AxisType, make_mesh
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
@@ -52,7 +53,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.time()
     try:
         bundle = ST.build(cfg, shape, mesh, variant=variant)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(bundle.fn,
                               in_shardings=bundle.in_shardings,
                               out_shardings=bundle.out_shardings,
@@ -70,11 +71,11 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             try:
                 if not multi_pod:
                     cost_bundle = ST.build(cfg, shape, mesh, variant=variant)
-                    ca = jax.jit(
+                    ca = cost_analysis(jax.jit(
                         cost_bundle.fn, in_shardings=cost_bundle.in_shardings,
                         out_shardings=cost_bundle.out_shardings,
                         donate_argnums=cost_bundle.donate
-                        ).lower(*cost_bundle.in_specs).cost_analysis()
+                        ).lower(*cost_bundle.in_specs))
                     cost = {"flops": float(ca.get("flops", 0.0)) / chips(mesh),
                             "bytes": float(ca.get("bytes accessed", 0.0))
                             / chips(mesh)}
@@ -98,7 +99,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             print(f"[ok] {bundle.name} mesh={rec['mesh']} "
                   f"compile={rec['compile_s']}s", flush=True)
             print(f"     memory_analysis: {mem}", flush=True)
-            ca = compiled.cost_analysis() or {}
+            ca = cost_analysis(compiled)
             print(f"     cost_analysis: flops={ca.get('flops', 0):.3e} "
                   f"bytes={ca.get('bytes accessed', 0):.3e}", flush=True)
             print(f"     roofline: compute={rl.compute_s:.3e}s "
@@ -122,7 +123,7 @@ def run_sd(*, multi_pod: bool = False, variant: str = "full",
     t0 = time.time()
     try:
         bundle = ST.build_sd_denoise(mesh, variant=variant)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             compiled = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                                out_shardings=bundle.out_shardings,
                                donate_argnums=bundle.donate
@@ -139,7 +140,7 @@ def run_sd(*, multi_pod: bool = False, variant: str = "full",
         if verbose:
             print(f"[ok] {bundle.name} mesh={rec['mesh']} "
                   f"compile={rec['compile_s']}s", flush=True)
-            ca = compiled.cost_analysis() or {}
+            ca = cost_analysis(compiled)
             print(f"     cost_analysis: flops={ca.get('flops', 0):.3e} "
                   f"bytes={ca.get('bytes accessed', 0):.3e}", flush=True)
             print(f"     memory: args={mem.argument_size_in_bytes/1e9:.2f}GB "

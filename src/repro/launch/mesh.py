@@ -8,7 +8,8 @@ tests see the single real CPU device).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.dist.compat import AxisType, make_mesh
 
 
 # TPU v5e hardware constants used by the roofline analysis.
@@ -21,7 +22,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(*, data: int = 1, model: int = 1):
@@ -29,8 +30,8 @@ def make_host_mesh(*, data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         data, model = n, 1
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 def chips(mesh) -> int:

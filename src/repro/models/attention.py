@@ -37,12 +37,8 @@ def _constrain(x, logical):
     batch/kv-head layout of q,k,v inside the blocked scans — without it
     GSPMD's propagation through dynamic-slice + nested scans can replicate
     the batch dim (observed: 16x activation blowup on the train step)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
-        return x
-    from repro.dist.sharding import RULES_SERVE, logical_to_spec
-    spec = logical_to_spec(logical, RULES_SERVE, shape=x.shape, mesh=mesh)
-    return jax.lax.with_sharding_constraint(x, spec)
+    from repro.dist.sharding import RULES_SERVE, constrain
+    return constrain(x, logical, RULES_SERVE)
 
 
 def init_attention(cfg, mk):

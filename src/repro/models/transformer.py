@@ -25,7 +25,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.dist.sharding import AxisRules, logical_to_spec
+from repro.dist.sharding import AxisRules, constrain as _dist_constrain
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import mla as MLA
@@ -317,13 +317,7 @@ def prepare_decode_caches(cfg, caches, *, seq_len: int, capacity: int,
 
 
 def constrain(x, logical, rules: AxisRules | None):
-    if rules is None:
-        return x
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
-        return x
-    spec = logical_to_spec(logical, rules, shape=x.shape, mesh=mesh)
-    return jax.lax.with_sharding_constraint(x, spec)
+    return _dist_constrain(x, logical, rules)
 
 
 # ---------------------------------------------------------------------------

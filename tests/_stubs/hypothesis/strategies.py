@@ -1,0 +1,59 @@
+"""Strategies for the fallback hypothesis stub (see ``__init__.py``).
+
+Each strategy is just a seeded-draw callable; 15% of draws return boundary
+values so edge cases (empty/minimal/maximal inputs) are always visited.
+"""
+
+from __future__ import annotations
+
+_EDGE_P = 0.15
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rnd):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    def draw(rnd):
+        if rnd.random() < _EDGE_P:
+            return rnd.choice((min_value, max_value))
+        return rnd.randint(min_value, max_value)
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    def draw(rnd):
+        if rnd.random() < _EDGE_P:
+            return float(rnd.choice((min_value, max_value)))
+        return rnd.uniform(min_value, max_value)
+
+    return SearchStrategy(draw)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rnd: rnd.choice(elements))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int | None = None) -> SearchStrategy:
+    def draw(rnd):
+        hi = max_size if max_size is not None else min_size + 10
+        n = min_size if rnd.random() < _EDGE_P else rnd.randint(min_size, hi)
+        return [elements.example_from(rnd) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rnd: tuple(s.example_from(rnd) for s in strategies))

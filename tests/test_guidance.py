@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.guidance import cfg_combine, merge_cond_uncond, split_cond_uncond
@@ -57,3 +58,31 @@ def test_bf16_output_dtype_follows_cond():
     u = jnp.zeros((4,), jnp.bfloat16)
     c = jnp.ones((4,), jnp.bfloat16)
     assert cfg_combine(u, c, 2.0).dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("shape", [(5,), (3, 7), (2, 8, 8, 4)])
+@pytest.mark.parametrize("scale", [0.0, 7.5, -2.5])
+def test_pallas_kernel_matches_jnp_oracle(shape, scale):
+    """The fused TPU kernel (interpret mode on CPU) must agree with the jnp
+    oracle ``cfg_combine``, including the odd-size padding path. (s=1 is
+    deliberately absent: both sides short-circuit statically there, so the
+    kernel never runs — that guarantee is pinned by the bit-exact test
+    below.)"""
+    from repro.kernels.cfg_combine import cfg_combine_pallas
+
+    rng = np.random.default_rng(hash((shape, scale)) % 2**32)
+    u = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    c = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    out = cfg_combine_pallas(u, c, scale, interpret=True)
+    assert out.shape == shape and out.dtype == c.dtype
+    np.testing.assert_allclose(np.asarray(out), np.asarray(cfg_combine(u, c, scale)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pallas_kernel_bit_exact_at_scale_one():
+    from repro.kernels.cfg_combine import cfg_combine_pallas
+
+    rng = jax.random.PRNGKey(2)
+    u = jax.random.normal(rng, (4, 33))          # 132 elements: padded tile
+    c = jax.random.normal(jax.random.fold_in(rng, 1), (4, 33))
+    assert (cfg_combine_pallas(u, c, 1.0, interpret=True) == c).all()

@@ -75,3 +75,73 @@ def test_window_containment(total, a_frac, width):
 def test_sweep():
     plans = sweep(50, [0.0, 0.2, 0.5])
     assert [p.optimized_fraction for p in plans] == [0.0, 0.2, 0.5]
+
+
+def test_sweep_propagates_scale_and_suffix_shape():
+    plans = sweep(40, [0.1, 0.9], guidance_scale=3.0)
+    assert all(p.guidance_scale == 3.0 for p in plans)
+    assert all(p.is_suffix for p in plans)
+    assert [p.total_steps for p in plans] == [40, 40]
+    for p in plans:
+        p.validate_for_ar()
+
+
+def test_suffix_rounding_at_odd_totals():
+    """round() (banker's) decides the COND segment length at odd totals —
+    pinned here because serving-side pass accounting depends on it."""
+    p = GuidancePlan.suffix(7, 0.5)              # 3.5 -> 4 (ties to even)
+    assert p.optimized_steps == 4
+    assert p.segments == (Segment(0, 3, Mode.FULL), Segment(3, 7, Mode.COND))
+    assert GuidancePlan.suffix(5, 0.5).optimized_steps == 2   # 2.5 -> 2
+    assert GuidancePlan.suffix(51, 0.5).optimized_steps == 26
+    assert GuidancePlan.suffix(3, 1 / 3).optimized_steps == 1
+
+
+def test_suffix_degenerate_fractions():
+    full = GuidancePlan.suffix(20, 0.0)
+    assert full.segments == (Segment(0, 20, Mode.FULL),)
+    cond = GuidancePlan.suffix(20, 1.0)
+    assert cond.segments == (Segment(0, 20, Mode.COND),)
+    assert cond.denoiser_passes() == 20
+    cond.validate_for_ar()   # an all-COND plan is a valid suffix
+
+
+def test_window_bounds_validation():
+    with pytest.raises(ValueError):
+        GuidancePlan.window(10, 0.5, 0.5)      # empty window
+    with pytest.raises(ValueError):
+        GuidancePlan.window(10, 0.6, 0.4)      # inverted
+    with pytest.raises(ValueError):
+        GuidancePlan.window(10, -0.2, 0.5)     # start below 0
+    with pytest.raises(ValueError):
+        GuidancePlan.window(10, 0.2, 1.3)      # stop past the end
+    # inclusive bounds are fine and cover everything
+    assert GuidancePlan.window(10, 0.0, 1.0).optimized_steps == 10
+
+
+def test_validate_for_ar_rejects_non_suffix_plans():
+    prefix = GuidancePlan(10, (Segment(0, 4, Mode.COND),
+                               Segment(4, 10, Mode.FULL)))
+    assert not prefix.is_suffix
+    with pytest.raises(ValueError, match="suffix"):
+        prefix.validate_for_ar()
+    sandwich = GuidancePlan.window(20, 0.25, 0.75)
+    with pytest.raises(ValueError, match="suffix"):
+        sandwich.validate_for_ar()
+    GuidancePlan.full(10).validate_for_ar()          # no COND: trivially ok
+    GuidancePlan.suffix(10, 0.4).validate_for_ar()
+
+
+def test_passes_and_saving_arithmetic():
+    """denoiser_passes = 2*FULL + COND; predicted_saving = f/2 * U."""
+    p = GuidancePlan.suffix(100, 0.3)
+    assert p.optimized_steps == 30
+    assert p.denoiser_passes() == 2 * 70 + 30
+    assert p.predicted_saving() == pytest.approx(0.15)        # U defaults to 1
+    assert p.predicted_saving(0.8) == pytest.approx(0.12)
+    # passes saved relative to baseline equals predicted_saving at U=1
+    base = GuidancePlan.full(100).denoiser_passes()
+    assert 1 - p.denoiser_passes() / base == pytest.approx(p.predicted_saving())
+    # modes() expands segments consistently with the accounting
+    modes = p.modes()
+    assert len(modes) == 100 and modes.count(Mode.COND) == 30
