@@ -42,6 +42,17 @@ def main() -> None:
     for uid in list(out)[:3]:
         print(f"  {uid}: {out[uid][:12]}")
 
+    # the same workload on the phase-aware continuous engine: COND-phase
+    # requests cost 1 pass slot instead of 2, so more requests fly per tick
+    from repro.serve import ContinuousEngine, ServeRequest
+    eng = ContinuousEngine(params, cfg, num_slots=8, pass_budget=8,
+                           prompt_len=24, max_new=24, selective_fraction=0.5,
+                           stop_on_eos=False)
+    eng.serve([ServeRequest(uid=f"c-{i:02d}", prompt=PAPER_PROMPTS[i],
+                            max_new_tokens=24, guidance_scale=4.0)
+               for i in range(args.n)])
+    print(f"\ncontinuous engine: {eng.metrics.summary()}")
+
 
 if __name__ == "__main__":
     main()

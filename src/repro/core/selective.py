@@ -144,3 +144,80 @@ def sweep(total_steps: int, fractions: Iterable[float],
           guidance_scale: float = 7.5) -> list[GuidancePlan]:
     """Table-1 sweep: one plan per optimized fraction."""
     return [GuidancePlan.suffix(total_steps, f, guidance_scale) for f in fractions]
+
+
+@dataclass
+class PlanCursor:
+    """A request's live position inside its :class:`GuidancePlan`.
+
+    The serving scheduler (``repro.serve``) schedules *denoiser-pass slots*,
+    not requests: a step in a FULL segment costs 2 passes, a COND step costs
+    1. The cursor is the per-request source of truth for that cost — it
+    walks the plan one step per engine tick, so two requests admitted at
+    different times sit at different phases of different plans and the
+    scheduler can co-pack them against one pass budget.
+    """
+
+    plan: GuidancePlan
+    step: int = 0
+    passes_executed: int = 0
+
+    def __post_init__(self):
+        if not 0 <= self.step <= self.plan.total_steps:
+            raise ValueError(f"cursor step {self.step} outside plan "
+                             f"[0, {self.plan.total_steps}]")
+
+    @staticmethod
+    def for_request(total_steps: int, fraction: float,
+                    guidance_scale: float) -> "PlanCursor":
+        """Suffix-plan cursor (the only AR-legal shape, DESIGN.md §2)."""
+        plan = GuidancePlan.suffix(total_steps, fraction, guidance_scale)
+        plan.validate_for_ar()
+        return PlanCursor(plan)
+
+    @property
+    def done(self) -> bool:
+        return self.step >= self.plan.total_steps
+
+    @property
+    def mode(self) -> Mode:
+        """Mode of the *next* step to execute."""
+        if self.done:
+            raise ValueError("cursor exhausted")
+        for seg in self.plan.segments:
+            if seg.start <= self.step < seg.stop:
+                return seg.mode
+        raise AssertionError("unreachable: plans are contiguous")
+
+    @property
+    def cost(self) -> int:
+        """Denoiser passes the next step will consume (FULL=2, COND=1)."""
+        return 2 if self.mode is Mode.FULL else 1
+
+    @property
+    def at_transition(self) -> bool:
+        """True when the next step changes mode vs the previous one —
+        the scheduler re-packs the batch on these boundaries."""
+        if self.step == 0 or self.done:
+            return False
+        return self.mode is not self._mode_at(self.step - 1)
+
+    def _mode_at(self, i: int) -> Mode:
+        for seg in self.plan.segments:
+            if seg.start <= i < seg.stop:
+                return seg.mode
+        raise IndexError(i)
+
+    def remaining_passes(self) -> int:
+        return sum(2 * (min(s.stop, self.plan.total_steps) - max(s.start, self.step))
+                   if s.mode is Mode.FULL
+                   else (s.stop - max(s.start, self.step))
+                   for s in self.plan.segments if s.stop > self.step)
+
+    def advance(self) -> Mode:
+        """Execute the current step: record its cost, move on, return the
+        mode that was executed."""
+        mode = self.mode                     # raises if exhausted
+        self.passes_executed += 2 if mode is Mode.FULL else 1
+        self.step += 1
+        return mode

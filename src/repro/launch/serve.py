@@ -1,7 +1,11 @@
-"""Serving launcher: batched guided generation with selective guidance.
+"""Serving launcher: static-bucket and continuous-batching guided serving.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
         --requests 16 --fraction 0.5
+
+    # phase-aware continuous batching under a Poisson-ish arrival trace
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+        --mode continuous --requests 16 --rate 1.5 --pass-budget 8
 """
 
 from __future__ import annotations
@@ -14,15 +18,75 @@ from repro.configs import get_config
 from repro.data.prompts import PAPER_PROMPTS
 from repro.models import layers as L
 from repro.models import transformer as T
+from repro.serve import ContinuousEngine, ServeRequest, poisson_arrivals
 from repro.serving import Request, ServingEngine
+
+
+def run_static(params, cfg, args) -> None:
+    reqs = [Request(uid=f"r{i}", prompt=PAPER_PROMPTS[i % len(PAPER_PROMPTS)],
+                    max_new_tokens=args.max_new,
+                    guidance_scale=args.guidance_scale)
+            for i in range(args.requests)]
+    # baseline pass (no optimization) then the selective pass
+    for frac, tag in [(0.0, "baseline"), (args.fraction, "selective")]:
+        engine = ServingEngine(params, cfg, max_batch=args.batch,
+                               prompt_len=args.prompt_len, max_new=args.max_new,
+                               selective_fraction=frac, seed=args.seed)
+        engine.generate(reqs)                      # warmup/compile
+        engine.stats = type(engine.stats)()        # reset
+        out = engine.generate(reqs)
+        s = engine.stats
+        print(f"[{tag:9s}] frac={frac:.2f} requests={s.requests} "
+              f"tokens={s.tokens_generated} wall={s.wall_s:.3f}s "
+              f"tok/s={s.tokens_per_s:.1f} passes={s.denoiser_passes}")
+        sample_uid = reqs[0].uid
+        print(f"           sample[{sample_uid}]: {out[sample_uid][:16]}")
+
+
+def run_continuous(params, cfg, args) -> None:
+    """Poisson-ish arrivals into the phase-aware engine, vs the static
+    facade at the same pass budget."""
+    budget = args.pass_budget or 2 * args.batch
+    slots = args.slots or 2 * args.batch
+    arrivals = poisson_arrivals(args.seed, n=args.requests, rate=args.rate)
+    reqs = [ServeRequest(uid=f"c{i}", prompt=PAPER_PROMPTS[i % len(PAPER_PROMPTS)],
+                         max_new_tokens=args.max_new,
+                         guidance_scale=args.guidance_scale)
+            for i in range(args.requests)]
+
+    eng = ContinuousEngine(params, cfg, num_slots=slots, pass_budget=budget,
+                           prompt_len=args.prompt_len, max_new=args.max_new,
+                           selective_fraction=args.fraction, seed=args.seed,
+                           stop_on_eos=False)
+    eng.serve_trace(reqs, arrivals)
+    print(f"[continuous] {eng.metrics.summary()}")
+
+    static = ServingEngine(params, cfg, max_batch=args.batch,
+                           prompt_len=args.prompt_len, max_new=args.max_new,
+                           selective_fraction=args.fraction, seed=args.seed)
+    static.generate([Request(uid=r.uid, prompt=r.prompt,
+                             max_new_tokens=r.max_new_tokens,
+                             guidance_scale=r.guidance_scale) for r in reqs])
+    sm = static._engine.metrics
+    print(f"[static    ] {sm.summary()}")
+    print(f"in-flight/tick: continuous={eng.metrics.mean_in_flight():.2f} "
+          f"static={sm.mean_in_flight():.2f} "
+          f"(equal pass budget {budget})")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mode", choices=["static", "continuous"], default="static")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="continuous: arena slots (default 2*batch)")
+    ap.add_argument("--pass-budget", type=int, default=0,
+                    help="continuous: denoiser passes per tick (default 2*batch)")
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="continuous: mean arrivals per tick")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--fraction", type=float, default=0.2,
@@ -39,25 +103,10 @@ def main() -> None:
                          "(DESIGN.md §5)")
 
     params = T.init_model(cfg, L.ArrayMaker(jax.random.PRNGKey(args.seed)))
-    reqs = [Request(uid=f"r{i}", prompt=PAPER_PROMPTS[i % len(PAPER_PROMPTS)],
-                    max_new_tokens=args.max_new,
-                    guidance_scale=args.guidance_scale)
-            for i in range(args.requests)]
-
-    # baseline pass (no optimization) then the selective pass
-    for frac, tag in [(0.0, "baseline"), (args.fraction, "selective")]:
-        engine = ServingEngine(params, cfg, max_batch=args.batch,
-                               prompt_len=args.prompt_len, max_new=args.max_new,
-                               selective_fraction=frac, seed=args.seed)
-        engine.generate(reqs)                      # warmup/compile
-        engine.stats = type(engine.stats)()        # reset
-        out = engine.generate(reqs)
-        s = engine.stats
-        print(f"[{tag:9s}] frac={frac:.2f} requests={s.requests} "
-              f"tokens={s.tokens_generated} wall={s.wall_s:.3f}s "
-              f"tok/s={s.tokens_per_s:.1f} passes={s.denoiser_passes}")
-        sample_uid = reqs[0].uid
-        print(f"           sample[{sample_uid}]: {out[sample_uid][:16]}")
+    if args.mode == "continuous":
+        run_continuous(params, cfg, args)
+    else:
+        run_static(params, cfg, args)
 
 
 if __name__ == "__main__":

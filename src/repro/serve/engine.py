@@ -1,0 +1,432 @@
+"""Continuous-batching engine: the tick loop over mixed-phase jitted steps.
+
+Requests join and leave mid-flight. Each engine tick:
+
+1. expires queued requests past their deadline,
+2. admits new requests into free arena slots (one B=1 dual-stream prefill
+   per admission, written into the slot row),
+3. defragments the arena when freed holes exceed a threshold,
+4. asks the :class:`Scheduler` to pack active requests against the tick's
+   denoiser-pass budget (FULL=2, COND=1),
+5. executes one jitted **mixed-phase step** — the FULL group runs both
+   streams + Eq. 1, the COND group runs the conditional stream only — and
+6. advances cursors, emits tokens, retires completed requests.
+
+Compile cache: step functions are keyed on the tick's **occupancy
+signature** ``(n_full, n_cond)``, rounded up to power-of-two buckets so a
+B-slot engine compiles O(log²B) variants, not O(B²). Padded rows index
+slot ``num_slots`` — reads clamp (garbage compute on a dead row), writes
+use scatter-drop, so padding can never corrupt live state.
+
+Per-request state that the kernels need (current token, position, guidance
+scale, temperature, rng key, local step) lives in host numpy arrays
+indexed by slot; only the KV/latent arenas are device-resident. The
+gathered per-group step is ``vmap`` of a batch-of-one decode, which is
+what lets co-scheduled requests sit at *different* sequence positions —
+the capability the seed's lockstep batcher lacked.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ar_decode as AR
+from repro.core.guidance import cfg_combine
+from repro.core.selective import GuidancePlan, PlanCursor
+from repro.data.tokenizer import EOS, PAD, encode
+from repro.models import transformer as T
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import ArrivalQueue, ServeRequest
+from repro.serve.scheduler import Scheduler, TickPlan
+from repro.serve.state import StatePool
+
+
+def _sample(logits, key, temperature):
+    """Traced-safe sampling: argmax at temperature 0, categorical above.
+    ``temperature`` may be a per-row traced scalar."""
+    greedy = jnp.argmax(logits, axis=-1)
+    safe = jnp.maximum(temperature, 1e-6)
+    sampled = jax.random.categorical(key, logits / safe, axis=-1)
+    return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
+
+
+def _bucket(n: int) -> int:
+    """Round a group size up to the next power of two (0 stays 0)."""
+    if n <= 1:
+        return n
+    return 1 << (n - 1).bit_length()
+
+
+class _SlotArrays:
+    """Host-side per-slot scalars (token, position, scale, ...)."""
+
+    def __init__(self, n: int):
+        self.tok = np.zeros(n, np.int32)
+        self.pos = np.zeros(n, np.int32)
+        self.scale = np.zeros(n, np.float32)
+        self.temp = np.zeros(n, np.float32)
+        self.lstep = np.zeros(n, np.int32)
+        self.key = np.zeros((n, 2), np.uint32)
+
+    def permute(self, src: np.ndarray) -> None:
+        for name in ("tok", "pos", "scale", "temp", "lstep", "key"):
+            arr = getattr(self, name)
+            setattr(self, name, arr[src].copy())
+
+
+class _RequestState:
+    def __init__(self, req: ServeRequest, cursor: PlanCursor, slot: int):
+        self.req = req
+        self.cursor = cursor
+        self.slot = slot
+        self.generated: list[int] = []
+
+
+class ContinuousEngine:
+    """Phase-aware continuous batching over a slot arena.
+
+    ``pass_budget`` defaults to ``num_slots``: an all-FULL tick then carries
+    ``num_slots/2`` requests while an all-COND tick carries ``num_slots`` —
+    the 2x late-phase admission the paper's cost asymmetry buys.
+    """
+
+    def __init__(self, params, cfg, *, num_slots: int = 8,
+                 pass_budget: int | None = None, prompt_len: int = 32,
+                 max_new: int = 32, selective_fraction: float = 0.2,
+                 rules=None, seed: int = 0, stop_on_eos: bool = True,
+                 policy: str = "phase", starvation_limit: int = 4,
+                 defrag_threshold: float = 0.5, prefills_per_tick: int = 2,
+                 queue_depth: int = 256, bucket: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.pass_budget = pass_budget if pass_budget is not None else num_slots
+        self.prompt_len = prompt_len
+        self.max_new = max_new
+        self.capacity = prompt_len + max_new
+        self.selective_fraction = selective_fraction
+        self.rules = rules
+        self.stop_on_eos = stop_on_eos
+        self.defrag_threshold = defrag_threshold
+        self.prefills_per_tick = prefills_per_tick
+        self.bucket = bucket
+
+        self.queue = ArrivalQueue(max_depth=queue_depth)
+        self.pool = StatePool(num_slots)
+        self.scheduler = Scheduler(self.pass_budget, policy=policy,
+                                   starvation_limit=starvation_limit)
+        self.metrics = ServeMetrics()
+        self.results: dict[str, list[int]] = {}
+        self.tick_count = 0
+
+        self._base_key = jax.random.PRNGKey(seed)
+        self._req_seq = 0
+        self._states: dict[str, _RequestState] = {}
+        self._slots = _SlotArrays(num_slots)
+        self._jit: dict = {}
+        self._pool_c = None
+        self._pool_u = None
+
+    # -- public API --------------------------------------------------------
+
+    def submit(self, req: ServeRequest) -> bool:
+        """Queue a request at the current tick; False = rejected (queue
+        full, or the request's plan is invalid for this engine)."""
+        self.metrics.on_arrival(req.uid, self.tick_count)
+        try:
+            self._plan_for(req).validate_for_ar()
+        except ValueError:
+            self.metrics.rejected += 1
+            return False
+        ok = self.queue.push(req, self.tick_count)
+        if not ok:
+            self.metrics.rejected += 1
+        return ok
+
+    def drain(self, max_ticks: int = 100_000) -> None:
+        """Tick until queue and slots are empty."""
+        while len(self.queue) or self.scheduler.n_active:
+            if self.tick_count >= max_ticks:
+                raise RuntimeError(f"engine did not drain in {max_ticks} ticks")
+            self.tick()
+
+    def serve(self, requests: list[ServeRequest]) -> dict[str, list[int]]:
+        """Submit everything now, drain, return uid -> generated tokens."""
+        return self.serve_trace(requests, [0] * len(requests))
+
+    def serve_trace(self, requests: list[ServeRequest], arrivals,
+                    max_ticks: int = 100_000) -> dict[str, list[int]]:
+        """Drive an arrival trace: ``requests[i]`` is submitted once
+        ``arrivals[i]`` ticks (relative to now, non-decreasing) have
+        elapsed; drains and returns uid -> generated tokens. The single
+        trace driver shared by the launcher and the benchmarks."""
+        start = self.tick_count
+        i = 0
+        while i < len(requests) or self.scheduler.n_active or len(self.queue):
+            if self.tick_count - start >= max_ticks:
+                raise RuntimeError(f"trace did not drain in {max_ticks} ticks")
+            while i < len(requests) and \
+                    start + int(arrivals[i]) <= self.tick_count:
+                self.submit(requests[i])
+                i += 1
+            self.tick()
+        return {r.uid: self.results[r.uid] for r in requests
+                if r.uid in self.results}
+
+    def tick(self) -> TickPlan:
+        t0 = time.perf_counter()
+        now = self.tick_count
+        self.metrics.expired += len(self.queue.expire(now))
+        self._admit(now)
+        self._maybe_defrag()
+        plan = self.scheduler.plan_tick()
+        sampled = self._execute(plan) if plan.in_flight else []
+        events = self.scheduler.commit(plan)
+        for ev, nxt in zip(events, sampled):
+            state = self._states[ev.uid]
+            if ev.done:
+                self._finalize(ev.uid, now)           # last sample discarded
+                continue
+            if self.stop_on_eos and nxt == EOS:
+                self._finalize(ev.uid, now)
+                continue
+            state.generated.append(int(nxt))
+            slot = state.slot
+            self._slots.tok[slot] = nxt
+            self._slots.pos[slot] += 1
+            self._slots.lstep[slot] += 1
+            self.metrics.on_token(ev.uid, now)
+        self.metrics.record_tick(now, n_full=plan.n_full, n_cond=plan.n_cond,
+                                 budget=plan.budget,
+                                 active=self.scheduler.n_active,
+                                 queue_depth=len(self.queue))
+        self.metrics.wall_s += time.perf_counter() - t0
+        self.tick_count += 1
+        return plan
+
+    # -- admission ---------------------------------------------------------
+
+    def _plan_for(self, req: ServeRequest) -> GuidancePlan:
+        if req.plan is not None:
+            if req.plan.total_steps > self.max_new:
+                raise ValueError(f"plan of {req.plan.total_steps} steps "
+                                 f"exceeds engine max_new={self.max_new}")
+            return req.plan
+        total = max(1, min(req.max_new_tokens, self.max_new))
+        frac = (self.selective_fraction if req.selective_fraction is None
+                else req.selective_fraction)
+        return GuidancePlan.suffix(total, frac, req.guidance_scale)
+
+    def _tokenize(self, prompt) -> np.ndarray:
+        if isinstance(prompt, str):
+            ids = encode(prompt, self.cfg.vocab_size, self.prompt_len)
+        else:
+            ids = list(prompt)[: self.prompt_len]
+            ids = ids + [PAD] * (self.prompt_len - len(ids))
+        return np.asarray(ids, np.int32)[None]        # (1, S)
+
+    def _admit(self, now: int) -> None:
+        quota = min(self.scheduler.admission_quota(self.pool.n_free),
+                    self.prefills_per_tick)
+        for _ in range(quota):
+            req = self.queue.pop()
+            if req is None:
+                return
+            # plan construction before alloc: a raise here must not leak a
+            # slot (plans are also pre-validated at submit)
+            plan = self._plan_for(req)
+            plan.validate_for_ar()
+            cursor = PlanCursor(plan)
+            slot = self.pool.alloc(req.uid)
+            assert slot is not None
+            state = _RequestState(req, cursor, slot)
+            self._states[req.uid] = state
+            self.scheduler.admit(req.uid, slot, cursor, arrival=req.arrival)
+
+            key = np.asarray(jax.random.fold_in(self._base_key, self._req_seq))
+            self._req_seq += 1
+            self._slots.pos[slot] = self.prompt_len
+            self._slots.scale[slot] = req.guidance_scale
+            self._slots.temp[slot] = req.temperature
+            self._slots.lstep[slot] = 0
+            self._slots.key[slot] = key
+
+            if self._pool_c is None:
+                self._init_pools()
+            fn = self._prefill_fn()
+            self._pool_c, self._pool_u, tok0 = fn(
+                self.params, self._pool_c, self._pool_u,
+                jnp.asarray(self._tokenize(req.prompt)), slot,
+                jnp.asarray(key), np.float32(req.guidance_scale),
+                np.float32(req.temperature))
+            tok0 = int(tok0)
+            self.metrics.on_admit(req.uid, now)
+            if self.stop_on_eos and tok0 == EOS:
+                self._finalize(req.uid, now)
+                continue
+            self._slots.tok[slot] = tok0
+            state.generated.append(tok0)
+            self.metrics.on_token(req.uid, now)       # TTFT: prefill emits
+
+    def _finalize(self, uid: str, now: int) -> None:
+        state = self._states.pop(uid)
+        self.pool.free(state.slot)
+        self.scheduler.release(uid)
+        self.results[uid] = state.generated
+        self.metrics.on_complete(uid, now, state.cursor.passes_executed)
+
+    # -- defragmentation ---------------------------------------------------
+
+    def _maybe_defrag(self) -> None:
+        if self.pool.fragmentation() <= self.defrag_threshold:
+            return
+        src = self.pool.defrag_plan()
+        if src is None or self._pool_c is None:
+            return
+        fn = self._defrag_fn()
+        self._pool_c, self._pool_u = fn(self._pool_c, self._pool_u,
+                                        jnp.asarray(src))
+        self._slots.permute(src)
+        for slot, uid in self.pool.active():
+            self._states[uid].slot = slot
+            self.scheduler.reslot(uid, slot)
+
+    # -- jitted device functions ------------------------------------------
+
+    def _donate(self, *argnums):
+        return argnums if jax.default_backend() != "cpu" else ()
+
+    def _init_pools(self) -> None:
+        S, cap, cfg = self.prompt_len, self.capacity, self.cfg
+
+        def one_stream(params, prompt):
+            _, caches = AR.prefill(params, cfg, prompt, rules=self.rules)
+            return T.prepare_decode_caches(cfg, caches, seq_len=S,
+                                           capacity=cap)
+
+        row = jax.eval_shape(one_stream, self.params,
+                             jax.ShapeDtypeStruct((1, S), jnp.int32))
+        zeros = lambda s: jnp.zeros((self.num_slots,) + tuple(s.shape), s.dtype)
+        self._pool_c = jax.tree.map(zeros, row)
+        self._pool_u = jax.tree.map(zeros, row)
+
+    def _prefill_fn(self):
+        key = ("prefill", self.prompt_len)
+        if key in self._jit:
+            return self._jit[key]
+        S, cap, cfg, rules = self.prompt_len, self.capacity, self.cfg, self.rules
+
+        def fn(params, pool_c, pool_u, prompt, slot, rkey, scale, temp):
+            logits_c, cc = AR.prefill(params, cfg, prompt, rules=rules)
+            logits_u, cu = AR.prefill(params, cfg, AR.null_prompt(prompt),
+                                      rules=rules)
+            cc = T.prepare_decode_caches(cfg, cc, seq_len=S, capacity=cap)
+            cu = T.prepare_decode_caches(cfg, cu, seq_len=S, capacity=cap)
+            logits = cfg_combine(logits_u, logits_c, scale)
+            tok0 = _sample(logits, jax.random.fold_in(rkey, 0), temp)
+            pool_c = jax.tree.map(lambda p, r: p.at[slot].set(r), pool_c, cc)
+            pool_u = jax.tree.map(lambda p, r: p.at[slot].set(r), pool_u, cu)
+            return pool_c, pool_u, tok0[0]
+
+        self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1, 2))
+        return self._jit[key]
+
+    def _step_fn(self, n_full: int, n_cond: int):
+        """Mixed-phase decode step for one occupancy signature."""
+        key = ("step", n_full, n_cond)
+        if key in self._jit:
+            return self._jit[key]
+        cfg, rules = self.cfg, self.rules
+
+        def fn(params, pool_c, pool_u, f_idx, f_tok, f_pos, f_scale, f_temp,
+               f_key, f_lstep, c_idx, c_tok, c_pos, c_temp, c_key, c_lstep):
+
+            def one_full(cc, cu, tok, pos, scale, temp, rkey, lstep):
+                emb = T.embed_tokens(params, cfg, tok[None, None])
+                h_c, cc = T.decode_step(params, cfg, emb, cc, pos, rules=rules)
+                h_u, cu = T.decode_step(params, cfg, emb, cu, pos, rules=rules)
+                l_c = T.unembed(params, cfg, h_c)[:, 0, :].astype(jnp.float32)
+                l_u = T.unembed(params, cfg, h_u)[:, 0, :].astype(jnp.float32)
+                logits = cfg_combine(l_u, l_c, scale)
+                nxt = _sample(logits, jax.random.fold_in(rkey, 1 + lstep), temp)
+                return nxt[0], cc, cu
+
+            def one_cond(cc, tok, pos, temp, rkey, lstep):
+                emb = T.embed_tokens(params, cfg, tok[None, None])
+                h_c, cc = T.decode_step(params, cfg, emb, cc, pos, rules=rules)
+                logits = T.unembed(params, cfg, h_c)[:, 0, :].astype(jnp.float32)
+                nxt = _sample(logits, jax.random.fold_in(rkey, 1 + lstep), temp)
+                return nxt[0], cc
+
+            f_next = jnp.zeros((n_full,), jnp.int32)
+            c_next = jnp.zeros((n_cond,), jnp.int32)
+            if n_full:
+                rows_c = jax.tree.map(lambda a: a[f_idx], pool_c)
+                rows_u = jax.tree.map(lambda a: a[f_idx], pool_u)
+                f_next, rows_c, rows_u = jax.vmap(one_full)(
+                    rows_c, rows_u, f_tok, f_pos, f_scale, f_temp, f_key,
+                    f_lstep)
+                pool_c = jax.tree.map(
+                    lambda p, r: p.at[f_idx].set(r, mode="drop"), pool_c, rows_c)
+                pool_u = jax.tree.map(
+                    lambda p, r: p.at[f_idx].set(r, mode="drop"), pool_u, rows_u)
+            if n_cond:
+                rows_c = jax.tree.map(lambda a: a[c_idx], pool_c)
+                c_next, rows_c = jax.vmap(one_cond)(
+                    rows_c, c_tok, c_pos, c_temp, c_key, c_lstep)
+                pool_c = jax.tree.map(
+                    lambda p, r: p.at[c_idx].set(r, mode="drop"), pool_c, rows_c)
+            return pool_c, pool_u, f_next, c_next
+
+        self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1, 2))
+        return self._jit[key]
+
+    def _defrag_fn(self):
+        key = ("defrag",)
+        if key not in self._jit:
+            def fn(pool_c, pool_u, src):
+                take = lambda a: a[src]
+                return jax.tree.map(take, pool_c), jax.tree.map(take, pool_u)
+            self._jit[key] = jax.jit(fn, donate_argnums=self._donate(0, 1))
+        return self._jit[key]
+
+    # -- execution ---------------------------------------------------------
+
+    def _group_arrays(self, entries, bucket_n: int):
+        """Gathered per-slot scalars for one group, padded to ``bucket_n``
+        with the out-of-bounds slot index (clamped reads, dropped writes)."""
+        slots = [e.slot for e in entries]
+        pad = bucket_n - len(slots)
+        idx = np.asarray(slots + [self.num_slots] * pad, np.int32)
+        real = np.asarray(slots, np.int32)
+        gather = lambda a: np.concatenate(
+            [a[real], np.zeros((pad,) + a.shape[1:], a.dtype)]) if pad \
+            else a[real].copy()
+        return (jnp.asarray(idx), jnp.asarray(gather(self._slots.tok)),
+                jnp.asarray(gather(self._slots.pos)),
+                jnp.asarray(gather(self._slots.scale)),
+                jnp.asarray(gather(self._slots.temp)),
+                jnp.asarray(gather(self._slots.key)),
+                jnp.asarray(gather(self._slots.lstep)))
+
+    def _execute(self, plan: TickPlan) -> list[int]:
+        """Run one mixed-phase step; returns sampled next-tokens aligned
+        with ``plan.full + plan.cond``."""
+        nf_b = _bucket(plan.n_full) if self.bucket else plan.n_full
+        nc_b = _bucket(plan.n_cond) if self.bucket else plan.n_cond
+        fn = self._step_fn(nf_b, nc_b)
+        f_idx, f_tok, f_pos, f_scale, f_temp, f_key, f_lstep = \
+            self._group_arrays(plan.full, nf_b)
+        c_idx, c_tok, c_pos, _c_scale, c_temp, c_key, c_lstep = \
+            self._group_arrays(plan.cond, nc_b)
+        self._pool_c, self._pool_u, f_next, c_next = fn(
+            self.params, self._pool_c, self._pool_u,
+            f_idx, f_tok, f_pos, f_scale, f_temp, f_key, f_lstep,
+            c_idx, c_tok, c_pos, c_temp, c_key, c_lstep)
+        f_next = np.asarray(f_next)[: plan.n_full]
+        c_next = np.asarray(c_next)[: plan.n_cond]
+        return [int(t) for t in f_next] + [int(t) for t in c_next]

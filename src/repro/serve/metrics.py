@@ -1,0 +1,146 @@
+"""Serving metrics: per-tick occupancy and per-request latency accounting.
+
+Shared by the real engine (``repro.serve.engine``) and the offline
+simulator (``repro.serve.sim``) so policy numbers measured in simulation
+are directly comparable to numbers measured against the model.
+
+Two invariants the tests pin:
+
+* ``passes`` recorded per tick counts the *actual* scheduled work
+  (2·n_full + n_cond), never the bucket-padded compile shape;
+* over completed requests, ``denoiser_passes`` equals
+  ``sum(plan.denoiser_passes())`` exactly (when early-EOS stopping is off)
+  — the engine's measured work is the plans' declared work.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class TickRecord:
+    tick: int
+    n_full: int
+    n_cond: int
+    passes: int            # 2*n_full + n_cond, pre-padding
+    budget: int
+    active: int            # requests resident in slots
+    queue_depth: int
+
+
+@dataclass
+class RequestTimeline:
+    arrival: float
+    admitted: float | None = None
+    first_token: float | None = None      # tick of first emitted token
+    completed: float | None = None
+    tokens: int = 0
+    passes: int = 0
+
+    @property
+    def ttft(self) -> float | None:
+        if self.first_token is None:
+            return None
+        return self.first_token - self.arrival
+
+    @property
+    def tpot(self) -> float | None:
+        """Mean ticks per output token after the first."""
+        if self.completed is None or self.first_token is None or self.tokens < 2:
+            return None
+        return (self.completed - self.first_token) / (self.tokens - 1)
+
+
+@dataclass
+class ServeMetrics:
+    records: list[TickRecord] = field(default_factory=list)
+    max_records: int = 65536     # records beyond this rotate out (aggregates
+                                 # below are running counters, never trimmed)
+    timelines: dict[str, RequestTimeline] = field(default_factory=dict)
+    denoiser_passes: int = 0     # decode passes (plan units)
+    prefill_passes: int = 0      # prefill stream passes (2 per admission)
+    tokens_emitted: int = 0
+    completed: int = 0
+    expired: int = 0
+    rejected: int = 0
+    wall_s: float = 0.0
+    _ticks: int = 0
+    _scheduled: int = 0          # sum of per-tick requests in flight
+    _budget_offered: int = 0
+
+    # -- recording ---------------------------------------------------------
+
+    def record_tick(self, tick: int, *, n_full: int, n_cond: int, budget: int,
+                    active: int, queue_depth: int) -> None:
+        self.records.append(TickRecord(tick, n_full, n_cond,
+                                       2 * n_full + n_cond, budget, active,
+                                       queue_depth))
+        if len(self.records) > self.max_records:
+            del self.records[: -self.max_records]
+        self.denoiser_passes += 2 * n_full + n_cond
+        self._ticks += 1
+        self._scheduled += n_full + n_cond
+        self._budget_offered += budget
+
+    def on_arrival(self, uid: str, tick: float) -> None:
+        self.timelines[uid] = RequestTimeline(arrival=tick)
+
+    def on_admit(self, uid: str, tick: float) -> None:
+        self.timelines[uid].admitted = tick
+        self.prefill_passes += 2
+
+    def on_token(self, uid: str, tick: float) -> None:
+        tl = self.timelines[uid]
+        if tl.first_token is None:
+            tl.first_token = tick
+        tl.tokens += 1
+        self.tokens_emitted += 1
+
+    def on_complete(self, uid: str, tick: float, passes: int) -> None:
+        tl = self.timelines[uid]
+        tl.completed = tick
+        tl.passes = passes
+        self.completed += 1
+
+    # -- aggregates --------------------------------------------------------
+
+    @property
+    def ticks(self) -> int:
+        return self._ticks
+
+    def mean_in_flight(self) -> float:
+        """Mean requests *scheduled* per tick — the acceptance metric: the
+        phase-aware packer must beat the static engine on this at equal
+        pass budget."""
+        return self._scheduled / self._ticks if self._ticks else 0.0
+
+    def utilization(self) -> float:
+        """Denoiser-pass slots used / offered."""
+        if not self._budget_offered:
+            return 0.0
+        return self.denoiser_passes / self._budget_offered
+
+    def mean_ttft(self) -> float | None:
+        vals = [t.ttft for t in self.timelines.values() if t.ttft is not None]
+        return sum(vals) / len(vals) if vals else None
+
+    def mean_tpot(self) -> float | None:
+        vals = [t.tpot for t in self.timelines.values() if t.tpot is not None]
+        return sum(vals) / len(vals) if vals else None
+
+    def summary(self) -> dict:
+        return {
+            "ticks": self.ticks,
+            "completed": self.completed,
+            "expired": self.expired,
+            "rejected": self.rejected,
+            "tokens": self.tokens_emitted,
+            "denoiser_passes": self.denoiser_passes,
+            "prefill_passes": self.prefill_passes,
+            "mean_in_flight": round(self.mean_in_flight(), 3),
+            "utilization": round(self.utilization(), 3),
+            "mean_ttft": self.mean_ttft(),
+            "mean_tpot": self.mean_tpot(),
+            "wall_s": round(self.wall_s, 4),
+        }

@@ -1,0 +1,148 @@
+"""Slot-indexed state pool: alloc/free, defragmentation, pooled shardings.
+
+The continuous engine keeps one device-resident *arena* per stream — a
+cache pytree whose leading axis is the slot index — so requests can join
+and leave mid-flight: admission prefills into a free slot, completion frees
+it, and each tick gathers only the scheduled rows. :class:`StatePool` is
+the host-side allocator over that arena; it owns no device memory itself.
+
+Defragmentation: frees leave holes, and a fragmented arena keeps its
+highest-touched row hot (gathers/scatters address the full pool either
+way, but a compact prefix lets a deployment shrink the arena or shard it
+evenly). ``defrag_plan`` computes the permutation that compacts active
+slots to a prefix; the engine applies it to the device pools with one
+jitted gather and to its host-side per-slot arrays with numpy indexing.
+
+Sharding: the slot axis *is* the batch axis as far as the rule tables are
+concerned — ``pooled_cache_axes`` relabels the cache axes tree from
+``T.cache_specs`` so ``repro.dist`` can shard the arena over the data axis
+with the same allocator invariants as everything else (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.dist.sharding import AxisRules, logical_to_spec
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+class StatePool:
+    """Allocator over ``num_slots`` arena rows. Lowest-index-first alloc
+    keeps the active set near the front, which slows fragmentation."""
+
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError(num_slots)
+        self.num_slots = num_slots
+        self._uid_of: dict[int, str] = {}
+        self._slot_of: dict[str, int] = {}
+
+    # -- alloc / free ------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return len(self._uid_of)
+
+    @property
+    def n_free(self) -> int:
+        return self.num_slots - self.n_active
+
+    def alloc(self, uid: str) -> int | None:
+        """Claim the lowest free slot for ``uid``; None when full."""
+        if uid in self._slot_of:
+            raise ValueError(f"uid {uid!r} already resident")
+        if self.n_free == 0:
+            return None
+        slot = min(s for s in range(self.num_slots) if s not in self._uid_of)
+        self._uid_of[slot] = uid
+        self._slot_of[uid] = slot
+        return slot
+
+    def free(self, slot: int) -> None:
+        uid = self._uid_of.pop(slot)
+        del self._slot_of[uid]
+
+    def slot_of(self, uid: str) -> int:
+        return self._slot_of[uid]
+
+    def uid_of(self, slot: int) -> str:
+        return self._uid_of[slot]
+
+    def active(self) -> list[tuple[int, str]]:
+        """(slot, uid) pairs, slot-ordered."""
+        return sorted(self._uid_of.items())
+
+    # -- defragmentation ---------------------------------------------------
+
+    def fragmentation(self) -> float:
+        """Fraction of holes below the highest active slot (0 = compact)."""
+        if not self._uid_of:
+            return 0.0
+        top = max(self._uid_of)
+        holes = (top + 1) - self.n_active
+        return holes / (top + 1)
+
+    def defrag_plan(self) -> np.ndarray | None:
+        """Permutation ``src`` compacting active slots to a prefix, or None
+        if already compact.
+
+        ``new_pool[i] = old_pool[src[i]]``: the first ``n_active`` entries
+        of ``src`` are the old active slots in order; the remainder are the
+        old free slots (their contents are garbage either way). Applying
+        the plan also remaps this pool's own slot table.
+        """
+        active = [s for s, _ in self.active()]
+        if active == list(range(len(active))):
+            return None
+        free = [s for s in range(self.num_slots) if s not in self._uid_of]
+        src = np.asarray(active + free, np.int32)
+        remap = {old: new for new, old in enumerate(active)}
+        self._uid_of = {remap[s]: u for s, u in self._uid_of.items()}
+        self._slot_of = {u: s for s, u in self._uid_of.items()}
+        return src
+
+
+# ---------------------------------------------------------------------------
+# Pooled-arena sharding (dist tie-in)
+# ---------------------------------------------------------------------------
+
+
+def pooled_cache_axes(cfg, capacity: int, *, long_ctx: bool = False):
+    """Logical axes tree for a slot-pooled cache arena.
+
+    The arena stacks per-request (batch=1) caches along a new leading slot
+    axis; that axis plays the role of ``batch`` for the rule tables, and
+    the interior singleton batch dim is neutralised to replicated.
+    """
+    axes = T.cache_specs(cfg, L.AxesMaker(), 1, capacity, long_ctx=long_ctx)
+
+    def pool_leaf(names):
+        return ("batch",) + tuple(None if n == "batch" else n for n in names)
+
+    import jax
+    return jax.tree.map(pool_leaf, axes, is_leaf=L.is_axes_leaf)
+
+
+def pool_partition_specs(cfg, num_slots: int, capacity: int, *,
+                         rules: AxisRules, mesh, long_ctx: bool = False,
+                         dtype=None):
+    """PartitionSpec tree for the pooled arena under ``rules`` on ``mesh``.
+
+    Shapes come from ``T.cache_specs`` with the slot axis prepended, so the
+    specs obey the §3 allocator invariants (divisibility fallbacks incl.
+    ``kv_heads -> kv_seq``) exactly as the unpooled decode caches do.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    axes = pooled_cache_axes(cfg, capacity, long_ctx=long_ctx)
+    specs = T.cache_specs(cfg, L.SpecMaker(dtype or jnp.bfloat16), 1, capacity,
+                          long_ctx=long_ctx)
+
+    def one(names, spec):
+        shape = (num_slots,) + tuple(spec.shape)
+        return logical_to_spec(names, rules, shape=shape, mesh=mesh)
+
+    return jax.tree.map(one, axes, specs, is_leaf=L.is_axes_leaf)

@@ -1,28 +1,32 @@
-"""Batched guided-generation serving engine.
+"""Batched guided-generation serving — compatibility facade.
 
-Static-shape batching (production TPU style): requests are grouped into
-fixed (batch, prompt_len, max_new) buckets; each bucket signature compiles
-once and is cached. Selective guidance is a first-class scheduling feature:
-the engine builds a suffix :class:`GuidancePlan` per bucket and executes the
-phase-split decode — FULL segment (two streams) then COND segment (one
-stream) — so the paper's saving shows up directly in serve latency.
+The real engine now lives in ``repro.serve`` (phase-aware continuous
+batching over a slot arena, DESIGN.md §8). :class:`ServingEngine` keeps
+the seed's static-batching surface — fixed ``(batch, prompt_len,
+max_new)`` buckets, synchronous ``generate`` — but executes every bucket
+on a :class:`repro.serve.ContinuousEngine` configured with
+``pass_budget = 2 * max_batch``, under which a same-plan bucket steps in
+lockstep exactly as the old phase-split decode did.
 
-EOS and per-request ``max_new`` are handled by post-hoc truncation (the
-compiled shapes never change).
+Two seed bugs are fixed here rather than preserved:
+
+* per-request ``guidance_scale`` / ``temperature`` are honored (the seed
+  silently applied ``chunk[0]``'s values to the whole bucket) — the
+  continuous engine carries both per slot, so no compatibility grouping
+  is needed;
+* ``BucketStats.tokens_generated`` counts post-truncation tokens (EOS /
+  ``max_new_tokens``), not ``max_new`` per request, so ``tokens_per_s``
+  no longer overstates throughput.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.ar_decode import guided_decode
 from repro.core.selective import GuidancePlan
-from repro.data.tokenizer import EOS, PAD, encode
+from repro.data.tokenizer import EOS
+from repro.serve import ContinuousEngine, ServeRequest
 
 
 @dataclass
@@ -58,33 +62,25 @@ class ServingEngine:
         self.max_new = max_new
         self.selective_fraction = selective_fraction
         self.rules = rules
-        self.rng = jax.random.PRNGKey(seed)
-        self._compiled: dict = {}
         self.stats = BucketStats()
+        # budget 2*max_batch: a full bucket fits even when every request is
+        # in FULL phase, so same-plan buckets run lockstep (static batching
+        # as a special case of the continuous engine)
+        self._engine = ContinuousEngine(
+            params, cfg, num_slots=max_batch, pass_budget=2 * max_batch,
+            prompt_len=prompt_len, max_new=max_new,
+            selective_fraction=selective_fraction, rules=rules, seed=seed,
+            stop_on_eos=False, prefills_per_tick=max_batch,
+            queue_depth=max(256, max_batch))
 
-    # -- request prep ------------------------------------------------------
-
-    def _tokenize(self, req: Request) -> np.ndarray:
-        if isinstance(req.prompt, str):
-            ids = encode(req.prompt, self.cfg.vocab_size, self.prompt_len)
-        else:
-            ids = list(req.prompt)[: self.prompt_len]
-            ids = ids + [PAD] * (self.prompt_len - len(ids))
-        return np.asarray(ids, np.int32)
+    @property
+    def _compiled(self) -> dict:
+        """The underlying occupancy-signature compile cache (compat: the
+        seed engine exposed its jit cache under this name)."""
+        return self._engine._jit
 
     def _plan(self, scale: float, fraction: float) -> GuidancePlan:
         return GuidancePlan.suffix(self.max_new, fraction, guidance_scale=scale)
-
-    def _fn(self, plan: GuidancePlan, temperature: float):
-        key = (plan.segments, plan.guidance_scale, temperature)
-        if key not in self._compiled:
-            def run(params, tokens, rng):
-                gen, _ = guided_decode(params, self.cfg, tokens, plan,
-                                       rng=rng, temperature=temperature,
-                                       rules=self.rules)
-                return gen
-            self._compiled[key] = jax.jit(run)
-        return self._compiled[key]
 
     # -- main entry ---------------------------------------------------------
 
@@ -99,29 +95,35 @@ class ServingEngine:
         return out
 
     def _run_batch(self, chunk: list[Request], frac: float):
-        B = self.max_batch
-        toks = np.zeros((B, self.prompt_len), np.int32)
-        for j, req in enumerate(chunk):
-            toks[j] = self._tokenize(req)
-        scale = chunk[0].guidance_scale
-        temp = chunk[0].temperature
-        plan = self._plan(scale, frac)
-        fn = self._fn(plan, temp)
-        self.rng, sub = jax.random.split(self.rng)
+        eng = self._engine
+        passes0 = eng.metrics.denoiser_passes
         t0 = time.perf_counter()
-        gen = np.asarray(jax.block_until_ready(fn(self.params, jnp.asarray(toks), sub)))
+        served = eng.serve([
+            ServeRequest(uid=req.uid, prompt=req.prompt,
+                         max_new_tokens=req.max_new_tokens,
+                         guidance_scale=req.guidance_scale,
+                         temperature=req.temperature,
+                         selective_fraction=frac)
+            for req in chunk])
         dt = time.perf_counter() - t0
 
-        self.stats.batches += 1
-        self.stats.requests += len(chunk)
-        self.stats.tokens_generated += len(chunk) * self.max_new
-        self.stats.wall_s += dt
-        self.stats.denoiser_passes += plan.denoiser_passes() * len(chunk)
-
         out = {}
-        for j, req in enumerate(chunk):
-            ids = gen[j].tolist()[: req.max_new_tokens]
+        tokens = 0
+        for req in chunk:
+            ids = served[req.uid][: req.max_new_tokens]
             if EOS in ids:
                 ids = ids[: ids.index(EOS)]
             out[req.uid] = ids
+            tokens += len(ids)
+            # delivered: drop per-request state so a long-lived facade does
+            # not grow with total requests served (tick records rotate via
+            # ServeMetrics.max_records)
+            eng.results.pop(req.uid, None)
+            eng.metrics.timelines.pop(req.uid, None)
+
+        self.stats.batches += 1
+        self.stats.requests += len(chunk)
+        self.stats.tokens_generated += tokens
+        self.stats.wall_s += dt
+        self.stats.denoiser_passes += eng.metrics.denoiser_passes - passes0
         return out

@@ -1,0 +1,236 @@
+"""repro.serve scheduler / queue / pool / simulator tests (no model).
+
+Pins the pass-budget packing invariants: FULL=2/COND=1 costs, never over
+budget, bounded starvation, and exact denoiser-pass conservation — plus
+property tests over random plans and arrival traces via ``sim.py``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.selective import GuidancePlan, Mode, PlanCursor
+from repro.serve import (ArrivalQueue, Scheduler, ServeRequest, SimRequest,
+                         StatePool, compare_policies, poisson_trace, simulate)
+
+
+# ---------------------------------------------------------------------------
+# PlanCursor
+# ---------------------------------------------------------------------------
+
+
+def test_cursor_walks_plan_with_paper_costs():
+    c = PlanCursor.for_request(8, 0.5, 4.0)
+    costs, modes = [], []
+    while not c.done:
+        costs.append(c.cost)
+        modes.append(c.advance())
+    assert costs == [2, 2, 2, 2, 1, 1, 1, 1]
+    assert modes == [Mode.FULL] * 4 + [Mode.COND] * 4
+    assert c.passes_executed == c.plan.denoiser_passes() == 12
+    assert c.remaining_passes() == 0
+    with pytest.raises(ValueError):
+        _ = c.mode                     # exhausted
+
+
+def test_cursor_pass_conservation_mid_plan():
+    c = PlanCursor.for_request(10, 0.3, 4.0)
+    for _ in range(4):
+        c.advance()
+        assert c.passes_executed + c.remaining_passes() == c.plan.denoiser_passes()
+
+
+def test_cursor_transition_flag():
+    c = PlanCursor.for_request(4, 0.5, 4.0)
+    flags = []
+    while not c.done:
+        flags.append(c.at_transition)
+        c.advance()
+    assert flags == [False, False, True, False]
+
+
+def test_cursor_rejects_out_of_range_step():
+    plan = GuidancePlan.suffix(4, 0.5)
+    with pytest.raises(ValueError):
+        PlanCursor(plan, step=5)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler packing
+# ---------------------------------------------------------------------------
+
+
+def _admit(sched, uid, slot, total, frac):
+    cursor = PlanCursor(GuidancePlan.suffix(total, frac, 4.0))
+    sched.admit(uid, slot, cursor)
+    return cursor
+
+
+def test_scheduler_rejects_window_plans():
+    sched = Scheduler(4)
+    plan = GuidancePlan.window(8, 0.25, 0.75)
+    with pytest.raises(ValueError):
+        sched.admit("w", 0, PlanCursor(plan))
+
+
+def test_pack_never_exceeds_budget():
+    sched = Scheduler(5)
+    for i in range(6):
+        _admit(sched, f"r{i}", i, 8, 0.5 if i % 2 else 0.0)
+    plan = sched.plan_tick()
+    assert plan.cost == 2 * plan.n_full + plan.n_cond <= 5
+    for e in plan.full:
+        assert e.cursor.mode is Mode.FULL
+    for e in plan.cond:
+        assert e.cursor.mode is Mode.COND
+
+
+def test_cond_backfills_past_blocked_full():
+    sched = Scheduler(3)
+    _admit(sched, "f0", 0, 4, 0.0)       # FULL, cost 2
+    _admit(sched, "f1", 1, 4, 0.0)       # FULL, does not fit (1 left)
+    _admit(sched, "c0", 2, 4, 1.0)       # COND, cost 1 -> backfills
+    plan = sched.plan_tick()
+    assert [e.uid for e in plan.full] == ["f0"]
+    assert [e.uid for e in plan.cond] == ["c0"]
+    assert plan.skipped == ("f1",)
+    assert plan.cost == 3
+
+
+def test_full_request_not_starved_by_cond_stream():
+    """A FULL request facing a permanent COND flood is promoted within
+    ``starvation_limit`` ticks and the budget is reserved for it."""
+    limit = 3
+    sched = Scheduler(2, starvation_limit=limit)
+    _admit(sched, "c0", 0, 100, 1.0)
+    _admit(sched, "c1", 1, 100, 1.0)
+    _admit(sched, "f", 2, 100, 0.0)      # cost 2 == budget, never fits after c0,c1
+    waited = 0
+    for _ in range(limit + 2):
+        plan = sched.plan_tick()
+        sched.commit(plan)
+        if any(e.uid == "f" for e in plan.full):
+            break
+        waited += 1
+    else:
+        pytest.fail("FULL request starved")
+    assert waited <= limit + 1
+
+
+def test_static_policy_drains_before_admitting():
+    sched = Scheduler(4, policy="static")
+    assert sched.admission_quota(free_slots=8) == 2    # budget//2 lockstep
+    _admit(sched, "a", 0, 4, 0.0)
+    assert sched.admission_quota(free_slots=8) == 0    # resident batch
+    plan = sched.plan_tick()
+    assert plan.n_full == 1
+    sched.commit(plan)
+
+
+# ---------------------------------------------------------------------------
+# Pool / queue
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_free_defrag():
+    pool = StatePool(4)
+    slots = [pool.alloc(f"r{i}") for i in range(3)]
+    assert slots == [0, 1, 2]
+    pool.free(0)
+    pool.free(1)
+    assert pool.fragmentation() == pytest.approx(2 / 3)   # 2 holes under slot 2
+    src = pool.defrag_plan()
+    assert src is not None and src[0] == 2             # r2 moves to slot 0
+    assert pool.slot_of("r2") == 0
+    assert pool.fragmentation() == 0.0
+    assert pool.defrag_plan() is None                  # idempotent
+    assert sorted(src.tolist()) == [0, 1, 2, 3]        # a permutation
+
+
+def test_pool_alloc_when_full_returns_none():
+    pool = StatePool(1)
+    assert pool.alloc("a") == 0
+    assert pool.alloc("b") is None
+
+
+def test_queue_admission_control_and_deadlines():
+    q = ArrivalQueue(max_depth=2)
+    assert q.push(ServeRequest("a", ""), now=0)
+    assert q.push(ServeRequest("b", "", ttl=1.0), now=0)
+    assert not q.push(ServeRequest("c", ""), now=0)    # full -> rejected
+    assert q.stats.rejected == 1
+    assert [r.uid for r in q.expire(now=2)] == ["b"]   # deadline 1 < 2
+    assert q.pop().uid == "a"
+    assert q.pop() is None
+
+
+# ---------------------------------------------------------------------------
+# Simulator: properties over random plans and traces
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=2, max_value=12),
+       st.integers(min_value=1, max_value=10),
+       st.lists(st.tuples(st.integers(min_value=0, max_value=15),
+                          st.integers(min_value=1, max_value=10),
+                          st.floats(min_value=0.0, max_value=1.0)),
+                min_size=1, max_size=25),
+       st.sampled_from(["phase", "static"]))
+def test_sim_invariants(budget, slots, items, policy):
+    trace = [SimRequest(f"r{i:03d}", arrival,
+                        GuidancePlan.suffix(total, frac, 4.0))
+             for i, (arrival, total, frac) in enumerate(items)]
+    rep = simulate(trace, num_slots=slots, pass_budget=budget, policy=policy)
+    m = rep.metrics
+    # budget + cost-model invariants, every tick
+    for r in m.records:
+        assert r.passes == 2 * r.n_full + r.n_cond <= budget
+        assert r.n_full + r.n_cond <= slots
+    # exact pass conservation over completed requests
+    assert m.completed == len(trace)
+    assert m.denoiser_passes == sum(r.plan.denoiser_passes() for r in trace)
+    assert m.tokens_emitted == sum(r.plan.total_steps for r in trace)
+    assert 0.0 <= m.utilization() <= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_sim_phase_no_starvation(seed):
+    trace = poisson_trace(seed, n=25, rate=2.0, total_steps=8, fraction=0.5)
+    rep = simulate(trace, num_slots=6, pass_budget=6, policy="phase",
+                   starvation_limit=4)
+    assert rep.metrics.completed == 25
+    # bounded wait: aging promotes anything passed over too long
+    assert rep.max_wait <= 4 + 6
+
+
+def test_poisson_trace_deterministic():
+    a = poisson_trace(7, n=10, rate=1.0, total_steps=8, fraction=0.5)
+    b = poisson_trace(7, n=10, rate=1.0, total_steps=8, fraction=0.5)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+
+
+def test_mixed_phase_sim_beats_static():
+    """ISSUE acceptance shape, offline: half the requests in FULL phase,
+    half in COND phase, equal pass budget -> the phase-aware packer holds
+    strictly more requests in flight per tick."""
+    trace = []
+    for i in range(4):
+        trace.append(SimRequest(f"f{i}", 0, GuidancePlan.suffix(8, 0.0, 4.0)))
+        trace.append(SimRequest(f"c{i}", 0, GuidancePlan.suffix(8, 1.0, 4.0)))
+    reps = compare_policies(trace, num_slots=8, pass_budget=8)
+    phase, static = reps["phase"].metrics, reps["static"].metrics
+    assert phase.mean_in_flight() > static.mean_in_flight()
+    assert phase.ticks <= static.ticks
+    assert phase.denoiser_passes == static.denoiser_passes == 96
+
+
+def test_open_arrivals_phase_beats_static_on_latency():
+    trace = poisson_trace(0, n=40, rate=1.2, total_steps=12, fraction=0.5)
+    reps = compare_policies(trace, num_slots=8, pass_budget=8)
+    phase, static = reps["phase"].metrics, reps["static"].metrics
+    assert phase.mean_in_flight() > static.mean_in_flight()
+    assert phase.mean_ttft() < static.mean_ttft()
+    assert phase.ticks < static.ticks
