@@ -11,7 +11,12 @@ the paper's FULL/COND cost asymmetry into requests-in-flight: COND-phase
 requests cost 1 pass slot instead of 2, so the engine co-schedules up to
 2x as many late-phase requests per tick.
 
-    PYTHONPATH=src python -m benchmarks.serve_throughput [--tiny]
+Part 3 (``--kv paged``): the same comparison through the paged KV arena
+(block tables over a shared page pool) plus a mixed-``prompt_len`` trace —
+reporting reserved vs peak-in-use HBM and the unconditional pages
+reclaimed at FULL->COND transitions, at the same pass budget.
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput [--tiny] [--kv paged]
 """
 
 from __future__ import annotations
@@ -59,7 +64,8 @@ def _static_sweep(params, cfg, *, n_req: int, prompt_len: int, max_new: int,
 
 def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
                           max_new: int, fraction: float, batch: int,
-                          rate: float, seed: int = 0) -> dict:
+                          rate: float, seed: int = 0,
+                          kv: str = "slot", page_size: int = 4) -> dict:
     arrivals = poisson_arrivals(seed, n=n_req, rate=rate)
     budget = 2 * batch
 
@@ -71,13 +77,15 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
 
     eng = ContinuousEngine(params, cfg, num_slots=2 * batch, pass_budget=budget,
                            prompt_len=prompt_len, max_new=max_new,
-                           selective_fraction=fraction, stop_on_eos=False)
+                           selective_fraction=fraction, stop_on_eos=False,
+                           kv=kv, page_size=page_size)
     # arrivals are relative to the current tick, so the measured run
     # replays the same trace shape the warmup compiled for
     eng.serve_trace(make_reqs("w"), arrivals)     # warmup/compile
     eng.metrics = ServeMetrics()
     eng.serve_trace(make_reqs("c"), arrivals)
     cont = eng.metrics
+    hbm = eng.kv_hbm_bytes()
 
     static = ServingEngine(params, cfg, max_batch=batch, prompt_len=prompt_len,
                            max_new=max_new, selective_fraction=fraction)
@@ -95,12 +103,43 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
              f"in_flight={m.mean_in_flight():.2f};util={m.utilization():.3f};"
              f"ticks={m.ticks};passes={m.denoiser_passes};"
              f"budget={budget}")
+    emit(f"serve/kv_{kv}", hbm["peak_in_use_bytes"],
+         f"reserved={hbm['reserved_bytes']};"
+         f"reclaimed={cont.pages_reclaimed};"
+         f"peak_pages={cont.peak_pages_in_use}")
     return {"continuous": cont.summary(), "static": stat.summary(),
-            "pass_budget": budget,
+            "pass_budget": budget, "kv": kv, "hbm": hbm,
             "in_flight_gain": cont.mean_in_flight() / max(stat.mean_in_flight(), 1e-9)}
 
 
-def run(tiny: bool = False) -> dict:
+def _paged_mixed_lengths(params, cfg, *, prompt_len: int, max_new: int,
+                         fraction: float, batch: int,
+                         page_size: int = 4) -> dict:
+    """Paged-arena headline: a mixed-``prompt_len`` trace (impossible under
+    the slot arena) shares one pool, and the COND suffix reclaims every
+    request's unconditional pages mid-flight."""
+    lens = [max(1, prompt_len // 4), max(1, prompt_len // 2), prompt_len]
+    eng = ContinuousEngine(params, cfg, num_slots=2 * batch,
+                           pass_budget=2 * batch, prompt_len=prompt_len,
+                           max_new=max_new, selective_fraction=fraction,
+                           stop_on_eos=False, kv="paged", page_size=page_size)
+    reqs = [ServeRequest(uid=f"m{i}",
+                         prompt=PAPER_PROMPTS[i % len(PAPER_PROMPTS)],
+                         max_new_tokens=max_new,
+                         prompt_len=lens[i % len(lens)])
+            for i in range(2 * batch)]
+    out = eng.serve(reqs)
+    m = eng.metrics
+    hbm = eng.kv_hbm_bytes()
+    emit("serve/paged_mixed", hbm["peak_in_use_bytes"],
+         f"lens={'/'.join(map(str, lens))};completed={m.completed};"
+         f"reclaimed={m.pages_reclaimed};peak_pages={m.peak_pages_in_use};"
+         f"reserved={hbm['reserved_bytes']}")
+    assert len(out) == len(reqs)
+    return {"lens": lens, "summary": m.summary(), "hbm": hbm}
+
+
+def run(tiny: bool = False, kv: str = "slot") -> dict:
     cfg = get_smoke_config("llama3.2-1b")
     params = T.init_model(cfg, L.ArrayMaker(jax.random.PRNGKey(0)))
     if tiny:
@@ -116,16 +155,32 @@ def run(tiny: bool = False) -> dict:
     compare = _continuous_vs_static(params, cfg, n_req=n_req,
                                     prompt_len=prompt_len, max_new=max_new,
                                     fraction=fractions[-1], batch=batch,
-                                    rate=4.0 if tiny else 1.5)
-    return {"rows": rows, "compare": compare}
+                                    rate=4.0 if tiny else 1.5, kv=kv)
+    out = {"rows": rows, "compare": compare}
+    if kv == "paged":
+        out["paged_mixed"] = _paged_mixed_lengths(
+            params, cfg, prompt_len=prompt_len, max_new=max_new,
+            fraction=fractions[-1], batch=batch)
+    return out
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: tiny shapes, two fractions")
-    out = run(tiny=ap.parse_args().tiny)
+    ap.add_argument("--kv", choices=["slot", "paged"], default="slot",
+                    help="KV arena for the continuous engine")
+    args = ap.parse_args()
+    out = run(tiny=args.tiny, kv=args.kv)
     print("continuous-vs-static:", out["compare"]["continuous"])
     print("                     ", out["compare"]["static"])
     print(f"in-flight gain at equal pass budget: "
           f"{out['compare']['in_flight_gain']:.2f}x")
+    hbm = out["compare"]["hbm"]
+    print(f"kv={args.kv}: reserved={hbm['reserved_bytes']/2**20:.2f}MiB "
+          f"peak_in_use={hbm['peak_in_use_bytes']/2**20:.2f}MiB")
+    if "paged_mixed" in out:
+        pm = out["paged_mixed"]
+        print(f"paged mixed lens={pm['lens']}: "
+              f"reclaimed={pm['summary']['pages_reclaimed']} pages, "
+              f"peak={pm['summary']['peak_pages_in_use']}")

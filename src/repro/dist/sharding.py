@@ -106,6 +106,10 @@ RULES_SERVE = AxisRules("serve", {
     # fallback owners of the model axis (TP for MoE, flash-decode for GQA)
     "mlp":          AxisRule(("model",), 2),
     "kv_seq":       AxisRule(("model",), 2),
+    # paged KV pool: the page-pool axis plays the arena role the slot/batch
+    # axis plays for whole-row arenas; interior page offsets replicate
+    "pages":        AxisRule(("pod", "data"), 1),
+    "page":         AxisRule((), 3),
     # replicated at serve time
     "seq":          AxisRule((), 3),
     "embed":        AxisRule((), 3),
@@ -128,6 +132,8 @@ RULES_TRAIN = AxisRules("train", {
     # owner present on the same tensor, e.g. vocab on the logits)
     "seq":          AxisRule(("model",), 1),
     "kv_seq":       AxisRule(("model",), 2),
+    "pages":        AxisRule(("data",), 2),
+    "page":         AxisRule((), 3),
     # FSDP: params' embed dim sharded over data (batch never appears on the
     # same tensor, so the axes don't contest)
     "embed":        AxisRule(("data",), 2),
@@ -148,8 +154,10 @@ RULES_LONG = AxisRules("long", {
     "mlp":          AxisRule(("model",), 2),
     # 500k-token caches: the sequence dim absorbs every axis the batch and
     # kv-head dims left on the table (batch=1 and MQA/GQA head counts are
-    # the norm at long context)
+    # the norm at long context); a paged pool's page axis does the same
     "kv_seq":       AxisRule(("pod", "data", "model"), 2),
+    "pages":        AxisRule(("pod", "data", "model"), 2),
+    "page":         AxisRule((), 3),
     "seq":          AxisRule((), 3),
     "embed":        AxisRule((), 3),
     "expert_embed": AxisRule((), 3),

@@ -1,0 +1,118 @@
+"""Block-table flash-decode attention over a paged KV pool — Pallas TPU.
+
+The serving arena stores KV in a pool of fixed-size pages
+(``num_pages, page_size, kv_heads, head_dim``); each request owns a
+per-stream *block table* mapping its logical page index to a physical
+page. This kernel is the paged form of ``decode_attention.py``: grid
+``(B, K, nb)`` sweeps each request's logical pages in order, resolving
+the physical page through the scalar-prefetched block table inside the
+BlockSpec index map — KV is DMA'd page-by-page straight out of the pool,
+never gathered into a contiguous per-request buffer. Online-softmax
+state (m, l, acc) lives in VMEM scratch exactly as in the dense kernel.
+
+Positions are per-row (mixed-length serving): ``pos[b]`` masks validity
+(``kpos <= pos[b]``, plus an optional sliding window). Block-table
+entries past a request's allocated pages hold an out-of-range physical
+index; the index map clamps them (the DMA reads *some* page) and the
+position mask kills every element of such a page, so padding is inert.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, scale: float, window, page_size: int, nb: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]
+    q = q_ref[...]                                   # (rep, hd)
+    k = k_ref[...]                                   # (page_size, hd)
+    v = v_ref[...]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    valid = kpos <= pos
+    if window is not None:
+        valid = valid & (kpos > pos - window)
+    s = jnp.where(valid, s, NEG_INF)                 # (rep, page_size)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[..., None]
+                    + jax.lax.dot_general(p.astype(v.dtype), v,
+                                          (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[...] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, pos, *,
+                                  window: int | None = None,
+                                  interpret: bool = True):
+    """q (B,H,hd); k_pages/v_pages (P, page_size, K, hd); block_table
+    (B, nb) int32 (out-of-range entries = padding); pos (B,) int32.
+    Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    P, page_size, K = k_pages.shape[:3]
+    nb = block_table.shape[1]
+    rep = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B, K, rep, hd)
+    kr = k_pages.transpose(0, 2, 1, 3)               # (P, K, page_size, hd)
+    vr = v_pages.transpose(0, 2, 1, 3)
+    bt = jnp.asarray(block_table, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
+
+    def kv_index(b, g, j, bt, pos):
+        return (jnp.minimum(bt[b, j], P - 1), g, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, nb),
+        in_specs=[
+            pl.BlockSpec((None, None, rep, hd),
+                         lambda b, g, j, bt, pos: (b, g, 0, 0)),
+            pl.BlockSpec((None, None, page_size, hd), kv_index),
+            pl.BlockSpec((None, None, page_size, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, hd),
+                               lambda b, g, j, bt, pos: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window,
+                          page_size=page_size, nb=nb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, rep, hd), q.dtype),
+        interpret=interpret,
+    )(bt, pos_arr, qr, kr, vr)
+    return out.reshape(B, H, hd)

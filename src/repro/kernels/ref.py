@@ -45,6 +45,32 @@ def ref_flash_attention(q, k, v, *, causal: bool = True,
     return o.reshape(B, S, H, hd)
 
 
+def ref_paged_decode_attention(q, k_pages, v_pages, block_table, pos, *,
+                               window: int | None = None):
+    """Paged oracle: gather each row's pages through its block table into a
+    contiguous (nb*page_size) cache, then the masked-softmax decode step
+    with per-row positions. q (B,H,hd); k_pages/v_pages (P,ps,K,hd);
+    block_table (B,nb) int32 (out-of-range entries = padding, their logical
+    positions are masked by ``kpos <= pos``); pos (B,) int32."""
+    B, H, hd = q.shape
+    P, ps, K = k_pages.shape[:3]
+    nb = block_table.shape[1]
+    rep = H // K
+    bt = jnp.clip(block_table, 0, P - 1)
+    k = k_pages[bt].reshape(B, nb * ps, K, hd)
+    v = v_pages[bt].reshape(B, nb * ps, K, hd)
+    qg = q.reshape(B, K, rep, hd)
+    s = jnp.einsum("bkrh,bskh->bkrs", qg, k).astype(jnp.float32) / math.sqrt(hd)
+    kpos = jnp.arange(nb * ps)
+    valid = kpos[None, :] <= pos[:, None]
+    if window is not None:
+        valid = valid & (kpos[None, :] > pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkrs,bskh->bkrh", w, v)
+    return o.reshape(B, H, hd)
+
+
 def ref_decode_attention(q, k, v, pos, *, window: int | None = None):
     """q (B,H,hd) one token; k,v (B,S,K,hd); pos scalar int (the query's
     position; cache entries [0, pos] are valid)."""

@@ -57,9 +57,13 @@ def run_continuous(params, cfg, args) -> None:
     eng = ContinuousEngine(params, cfg, num_slots=slots, pass_budget=budget,
                            prompt_len=args.prompt_len, max_new=args.max_new,
                            selective_fraction=args.fraction, seed=args.seed,
-                           stop_on_eos=False)
+                           stop_on_eos=False, kv=args.kv,
+                           page_size=args.page_size)
     eng.serve_trace(reqs, arrivals)
     print(f"[continuous] {eng.metrics.summary()}")
+    hbm = eng.kv_hbm_bytes()
+    print(f"[kv={args.kv:5s}] reserved={hbm['reserved_bytes']/2**20:.2f}MiB "
+          f"peak_in_use={hbm['peak_in_use_bytes']/2**20:.2f}MiB")
 
     static = ServingEngine(params, cfg, max_batch=args.batch,
                            prompt_len=args.prompt_len, max_new=args.max_new,
@@ -87,6 +91,10 @@ def main() -> None:
                     help="continuous: denoiser passes per tick (default 2*batch)")
     ap.add_argument("--rate", type=float, default=1.0,
                     help="continuous: mean arrivals per tick")
+    ap.add_argument("--kv", choices=["slot", "paged"], default="slot",
+                    help="continuous: KV arena model (paged = block tables)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="continuous --kv paged: positions per KV page")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--fraction", type=float, default=0.2,

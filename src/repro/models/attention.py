@@ -293,6 +293,88 @@ def attn_decode_ring(params, cfg, x, cache, pos, *, window: int):
 
 
 # ---------------------------------------------------------------------------
+# Paged decode path
+# ---------------------------------------------------------------------------
+
+
+def _paged_kernel() -> bool:
+    """REPRO_PAGED_ATTN=pallas: route paged decode attention through the
+    block-table Pallas kernel instead of the jnp gather oracle."""
+    return os.environ.get("REPRO_PAGED_ATTN") == "pallas"
+
+
+def paged_cache_spec(cfg, mk, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16):
+    """One layer's share of the paged KV pool.
+
+    Pages are whole-pool resources (``pages`` leading axis), not
+    per-request rows; the ``pages``/``page`` logical names are wired into
+    the §3 rule tables so ``dist`` shards the pool like any other cache.
+    """
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": mk((num_pages, page_size, K, hd),
+                ("pages", "page", "kv_heads", "head_dim"), init="zeros",
+                dtype=dtype),
+        "v": mk((num_pages, page_size, K, hd),
+                ("pages", "page", "kv_heads", "head_dim"), init="zeros",
+                dtype=dtype),
+    }
+
+
+def attn_decode_paged(params, cfg, x, pool, block_table, pos, *,
+                      window=None):
+    """One token per row vs the shared paged KV pool.
+
+    x (B,1,D); pool {k,v: (P, page_size, K, hd)} — shared across every
+    resident request; block_table (B, nb) int32 maps each row's logical
+    page index to a physical page (entries >= P are padding: writes drop,
+    reads clamp and are masked); pos (B,) int32 per-row positions — rows
+    at *different* sequence positions step together, which is what lets
+    mixed-length requests share one pool.
+
+    Returns (out (B,1,D), updated pool). The new K/V is scattered into
+    the row's current page before attention, so the semantics match
+    ``attn_decode`` exactly on the covered positions.
+    """
+    B = x.shape[0]
+    P, ps = pool["k"].shape[:2]
+    nb = block_table.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k_new, v_new = _qkv(params, cfg, x, pos[:, None])
+    wpage = jnp.take_along_axis(block_table, (pos // ps)[:, None], axis=1)[:, 0]
+    woff = pos % ps
+    k_pool = pool["k"].at[wpage, woff].set(
+        k_new[:, 0].astype(pool["k"].dtype), mode="drop")
+    v_pool = pool["v"].at[wpage, woff].set(
+        v_new[:, 0].astype(pool["v"].dtype), mode="drop")
+    new_pool = {"k": k_pool, "v": v_pool}
+    qg = _group(q, cfg.num_kv_heads)                 # (B,1,K,rep,hd)
+    hd = q.shape[-1]
+    if _paged_kernel():
+        from repro.kernels.paged_decode_attention import \
+            paged_decode_attention_pallas
+        ctx = paged_decode_attention_pallas(
+            q[:, 0], k_pool, v_pool, block_table, pos, window=window,
+            interpret=jax.default_backend() != "tpu")
+        ctx = ctx.reshape(B, 1, cfg.num_kv_heads, qg.shape[3], hd)
+        return _out_proj(params, ctx, x.dtype), new_pool
+    bt = jnp.clip(block_table, 0, P - 1)
+    k = k_pool[bt].reshape(B, nb * ps, cfg.num_kv_heads, hd)
+    v = v_pool[bt].reshape(B, nb * ps, cfg.num_kv_heads, hd)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qg, k).astype(jnp.float32) \
+        / math.sqrt(hd)
+    kpos = jnp.arange(nb * ps)
+    valid = kpos[None, :] <= pos[:, None]
+    if window is not None:
+        valid = valid & (kpos[None, :] > pos[:, None] - window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bkrqs,bskh->bqkrh", w, v)
+    return _out_proj(params, ctx, x.dtype), new_pool
+
+
+# ---------------------------------------------------------------------------
 # Cache construction
 # ---------------------------------------------------------------------------
 

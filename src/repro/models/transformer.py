@@ -185,6 +185,32 @@ def block_decode(params, cfg, kind, x, cache, pos, *, moe_layer: bool,
     return x, cache
 
 
+def block_decode_paged(params, cfg, kind, x, pool, block_table, pos, *,
+                       moe_layer: bool, long_ctx: bool = False):
+    """One-token step per row against the shared paged KV pool.
+
+    Only attention caches page (KV grows with the sequence); recurrent /
+    xLSTM state is O(1) per request and MLA latents keep their own layout,
+    so paged serving is restricted to plain GQA attention stacks —
+    enforced structurally by :func:`paged_cache_specs`.
+    """
+    h = _norm(cfg, params["norm1"], x)
+    window = _window(cfg, kind, long_ctx)
+    mix, pool = A.attn_decode_paged(params["attn"], cfg, h, pool,
+                                    block_table, pos, window=window)
+    x = x + mix
+    if "mlp" in params:
+        h2 = _norm(cfg, params["norm2"], x)
+        if moe_layer:
+            y, _ = MOE.moe_forward(params["mlp"], cfg, h2)
+        elif cfg.is_encoder:
+            y = L.gelu_mlp(params["mlp"], h2)
+        else:
+            y = L.swiglu(params["mlp"], h2)
+        x = x + y
+    return x, pool
+
+
 def block_cache_spec(cfg, mk, kind, batch: int, capacity: int, *,
                      long_ctx: bool = False, dtype=jnp.bfloat16):
     window = _window(cfg, kind, long_ctx)
@@ -255,6 +281,82 @@ def cache_specs(cfg, mk, batch: int, capacity: int, *, long_ctx=False,
                         for kind in pattern])
             seen += n * len(pattern)
     return out
+
+
+def paged_cache_specs(cfg, mk, num_pages: int, page_size: int,
+                      dtype=jnp.bfloat16):
+    """Per-layer paged KV pools, same segment structure as ``cache_specs``.
+
+    Every block must be a plain GQA attention block (``attn``/``swa``
+    without MLA): pages hold KV rows, and non-KV state (recurrent, xLSTM,
+    MLA latents) has no page structure to share. Raises ``ValueError``
+    for unpageable stacks so the serving engine can fail admission early.
+    """
+    if cfg.mla is not None:
+        raise ValueError("paged KV arena requires plain GQA attention "
+                         "(MLA latent caches are not paged)")
+    segs = segments(cfg)
+    out = []
+    for seg in segs:
+        kinds = [seg[1]] if seg[0] == "plain" else list(seg[1])
+        for kind in kinds:
+            if kind not in ("attn", "swa"):
+                raise ValueError(f"paged KV arena requires attention "
+                                 f"blocks, got {kind!r}")
+        if seg[0] == "plain":
+            out.append(A.paged_cache_spec(cfg, mk, num_pages, page_size,
+                                          dtype=dtype))
+        else:
+            _, pattern, n = seg
+            smk = L.StackedMaker(mk, n)
+            out.append([A.paged_cache_spec(cfg, smk, num_pages, page_size,
+                                           dtype=dtype) for _ in pattern])
+    return out
+
+
+def decode_step_paged(params, cfg, token_embeds, pools, block_table, pos, *,
+                      rules=None, long_ctx=False):
+    """One-token step for the whole stack against paged KV pools.
+
+    token_embeds (B,1,D); ``pools`` from :func:`paged_cache_specs`;
+    block_table (B, nb) int32 shared by every layer (one table per
+    request-stream, the pool is per-layer); pos (B,) int32 per-row.
+    Returns (hidden (B,1,D), new pools).
+    """
+    x = token_embeds
+    segs = segments(cfg)
+    leading_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    new_pools = []
+    seen = 0
+    for seg, seg_params, seg_pool in zip(segs, params["segments"], pools):
+        x = constrain(x, ("batch", None, None), rules)
+        if seg[0] == "plain":
+            moe_layer = _is_moe_layer(cfg, seen < leading_dense)
+            x, p = block_decode_paged(seg_params, cfg, seg[1], x, seg_pool,
+                                      block_table, pos, moe_layer=moe_layer,
+                                      long_ctx=long_ctx)
+            new_pools.append(p)
+            seen += 1
+        else:
+            _, pattern, n = seg
+            moe_layer = _is_moe_layer(cfg, False)
+
+            def body(x, xs):
+                grp_params, grp_pool = xs
+                new_ps = []
+                for kind, bp, p in zip(pattern, grp_params, grp_pool):
+                    x, p2 = block_decode_paged(bp, cfg, kind, x, p,
+                                               block_table, pos,
+                                               moe_layer=moe_layer,
+                                               long_ctx=long_ctx)
+                    new_ps.append(p2)
+                return x, new_ps
+
+            x, ps = jax.lax.scan(body, x, (seg_params, seg_pool),
+                                 unroll=_unroll(n))
+            new_pools.append(ps)
+            seen += n * len(pattern)
+    return x, new_pools
 
 
 def prepare_decode_caches(cfg, caches, *, seq_len: int, capacity: int,

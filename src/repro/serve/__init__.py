@@ -1,22 +1,30 @@
-"""Phase-aware continuous-batching serving subsystem (DESIGN.md §8).
+"""Phase-aware continuous-batching serving subsystem (DESIGN.md §8–§9).
 
 The unit of scheduling is the denoiser-pass slot: a FULL-phase request
 costs 2 passes per tick, a COND-phase request costs 1 — the paper's cost
-asymmetry as a packing problem. ``repro.serving.ServingEngine`` remains as
-a static-batching compatibility facade over :class:`ContinuousEngine`.
+asymmetry as a packing problem. The same asymmetry governs memory under
+the paged KV arena (``kv="paged"``): a request's unconditional pages are
+reclaimed the moment its plan enters the COND suffix, so selective
+guidance saves HBM as well as FLOPs. ``repro.serving.ServingEngine``
+remains as a static-batching compatibility facade over
+:class:`ContinuousEngine`.
 """
 
+from repro.serve.autotune import BudgetAutotuner
 from repro.serve.engine import ContinuousEngine
 from repro.serve.metrics import ServeMetrics, TickRecord
 from repro.serve.queue import ArrivalQueue, ServeRequest
 from repro.serve.scheduler import Scheduler, TickPlan
 from repro.serve.sim import (SimRequest, compare_policies, poisson_arrivals,
                              poisson_trace, simulate)
-from repro.serve.state import StatePool, pool_partition_specs, pooled_cache_axes
+from repro.serve.state import (PageAllocator, StatePool, paged_partition_specs,
+                               pages_for, pool_partition_specs,
+                               pooled_cache_axes)
 
 __all__ = [
-    "ArrivalQueue", "ContinuousEngine", "Scheduler", "ServeMetrics",
-    "ServeRequest", "SimRequest", "StatePool", "TickPlan", "TickRecord",
-    "compare_policies", "pool_partition_specs", "pooled_cache_axes",
+    "ArrivalQueue", "BudgetAutotuner", "ContinuousEngine", "PageAllocator",
+    "Scheduler", "ServeMetrics", "ServeRequest", "SimRequest", "StatePool",
+    "TickPlan", "TickRecord", "compare_policies", "paged_partition_specs",
+    "pages_for", "pool_partition_specs", "pooled_cache_axes",
     "poisson_arrivals", "poisson_trace", "simulate",
 ]

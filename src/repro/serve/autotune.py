@@ -1,0 +1,81 @@
+"""Pass-budget autotuning from the roofline step-latency model.
+
+The per-tick ``pass_budget`` was a constant; this module derives it from
+the same roofline terms ``repro.roofline`` extracts for the dry-run
+reports. The engine lowers + compiles one step per *occupancy signature*
+(``(n_full, n_cond)``), the autotuner turns each compiled executable into
+a predicted step latency ``max(compute_s, memory_s, collective_s)`` and a
+per-pass cost ``latency / (2*n_full + n_cond)``, and the budget is the
+largest pass count whose predicted tick latency fits the operator's
+``target_tick_s``. The engine observes the two pure signatures ((1,0) and
+(0,1)) once, on its first tick; the budget uses the *worst* observed
+per-pass cost so it never overpacks on the strength of a cheap signature.
+``observe`` accepts any signature, so a deployment that wants the model to
+sharpen as more shapes compile can feed it every step compile it performs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro import roofline
+
+
+def signature_latency(compiled, *, chips: int = 1) -> float:
+    """Roofline-predicted seconds for one compiled engine step."""
+    r = roofline.analyze("serve_step", compiled, chips)
+    return max(r.compute_s, r.memory_s, r.collective_s)
+
+
+@dataclass
+class BudgetAutotuner:
+    """Maps observed (signature -> compiled step) pairs to a pass budget.
+
+    ``target_tick_s`` is the latency envelope one tick must fit;
+    ``min_budget`` keeps the budget schedulable (one FULL step needs 2);
+    ``max_budget`` caps runaway targets (default: no cap).
+    """
+
+    target_tick_s: float
+    min_budget: int = 2
+    max_budget: int | None = None
+    chips: int = 1
+    per_pass_s: dict[tuple[int, int], float] = field(default_factory=dict)
+
+    def observe(self, signature: tuple[int, int], compiled) -> float:
+        """Record one compiled step's roofline latency; returns the
+        signature's per-pass seconds."""
+        n_full, n_cond = signature
+        passes = 2 * n_full + n_cond
+        if passes <= 0:
+            raise ValueError(signature)
+        per_pass = signature_latency(compiled, chips=self.chips) / passes
+        self.per_pass_s[signature] = per_pass
+        return per_pass
+
+    @property
+    def worst_per_pass_s(self) -> float | None:
+        if not self.per_pass_s:
+            return None
+        return max(self.per_pass_s.values())
+
+    def budget(self) -> int | None:
+        """Largest pass count whose predicted tick time fits the target
+        (clamped to [min_budget, max_budget]); None before any observe."""
+        per_pass = self.worst_per_pass_s
+        if per_pass is None:
+            return None
+        raw = int(self.target_tick_s / per_pass) if per_pass > 0 else \
+            (self.max_budget or self.min_budget)
+        if self.max_budget is not None:
+            raw = min(raw, self.max_budget)
+        return max(self.min_budget, raw)
+
+    def report(self) -> dict:
+        return {
+            "target_tick_s": self.target_tick_s,
+            "per_pass_s": {f"{nf},{nc}": v
+                           for (nf, nc), v in sorted(self.per_pass_s.items())},
+            "worst_per_pass_s": self.worst_per_pass_s,
+            "budget": self.budget(),
+        }

@@ -3,27 +3,40 @@
 Requests join and leave mid-flight. Each engine tick:
 
 1. expires queued requests past their deadline,
-2. admits new requests into free arena slots (one B=1 dual-stream prefill
-   per admission, written into the slot row),
-3. defragments the arena when freed holes exceed a threshold,
+2. admits new requests (prefill) into the KV arena,
+3. compacts the arena when needed (slot arena only; page frees are O(1)),
 4. asks the :class:`Scheduler` to pack active requests against the tick's
    denoiser-pass budget (FULL=2, COND=1),
 5. executes one jitted **mixed-phase step** — the FULL group runs both
    streams + Eq. 1, the COND group runs the conditional stream only — and
-6. advances cursors, emits tokens, retires completed requests.
+6. advances cursors, emits tokens, retires completed requests, and (paged
+   arena) reclaims a request's unconditional pages the moment its plan
+   crosses into the COND suffix.
 
-Compile cache: step functions are keyed on the tick's **occupancy
+Two KV arenas (``kv=`` toggle, DESIGN.md §8–§9):
+
+* ``"slot"`` — whole-capacity rows per request-stream; every request uses
+  the engine-wide ``prompt_len``; per-group steps are ``vmap`` of a
+  batch-of-one decode against gathered rows.
+* ``"paged"`` — one physical page pool shared by both streams of every
+  request, addressed through per-request-stream block tables
+  (:class:`PageAllocator`). Requests with *different* ``prompt_len``
+  share the pool; admission reserves exactly the pages each stream can
+  ever touch (the unconditional stream only spans its FULL prefix), and
+  k>1 same-bucket admissions prefill through one batched compile.
+
+Compile caches: step functions are keyed on the tick's **occupancy
 signature** ``(n_full, n_cond)``, rounded up to power-of-two buckets so a
-B-slot engine compiles O(log²B) variants, not O(B²). Padded rows index
-slot ``num_slots`` — reads clamp (garbage compute on a dead row), writes
-use scatter-drop, so padding can never corrupt live state.
+B-slot engine compiles O(log²B) variants, not O(B²); prefills are keyed
+on **pow2-padded length buckets** ``(S_bucket, k_bucket)`` so mixed-length
+admission does not recompile per distinct prompt length. Padded rows use
+out-of-range indices — reads clamp (garbage compute on dead data), writes
+drop — so padding can never corrupt live state.
 
-Per-request state that the kernels need (current token, position, guidance
-scale, temperature, rng key, local step) lives in host numpy arrays
-indexed by slot; only the KV/latent arenas are device-resident. The
-gathered per-group step is ``vmap`` of a batch-of-one decode, which is
-what lets co-scheduled requests sit at *different* sequence positions —
-the capability the seed's lockstep batcher lacked.
+``pass_budget="auto"`` derives the budget from the roofline step-latency
+model per occupancy signature (``repro.serve.autotune``) instead of a
+constant: the engine lowers the two pure signatures, prices a denoiser
+pass, and packs as many passes as fit ``target_tick_s``.
 """
 
 from __future__ import annotations
@@ -36,13 +49,17 @@ import numpy as np
 
 from repro.core import ar_decode as AR
 from repro.core.guidance import cfg_combine
-from repro.core.selective import GuidancePlan, PlanCursor
+from repro.core.selective import GuidancePlan, Mode, PlanCursor
 from repro.data.tokenizer import EOS, PAD, encode
 from repro.models import transformer as T
+from repro.serve.autotune import BudgetAutotuner
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import ArrivalQueue, ServeRequest
 from repro.serve.scheduler import Scheduler, TickPlan
-from repro.serve.state import StatePool
+from repro.serve.state import (PageAllocator, StatePool, pages_for,
+                               stream_page_needs)
+
+KV_MODES = ("slot", "paged")
 
 
 def _sample(logits, key, temperature):
@@ -87,25 +104,31 @@ class _RequestState:
 
 
 class ContinuousEngine:
-    """Phase-aware continuous batching over a slot arena.
+    """Phase-aware continuous batching over a slot or paged KV arena.
 
     ``pass_budget`` defaults to ``num_slots``: an all-FULL tick then carries
     ``num_slots/2`` requests while an all-COND tick carries ``num_slots`` —
-    the 2x late-phase admission the paper's cost asymmetry buys.
+    the 2x late-phase admission the paper's cost asymmetry buys. Pass
+    ``pass_budget="auto"`` to derive it from the roofline latency model
+    against ``target_tick_s`` instead.
     """
 
     def __init__(self, params, cfg, *, num_slots: int = 8,
-                 pass_budget: int | None = None, prompt_len: int = 32,
+                 pass_budget=None, prompt_len: int = 32,
                  max_new: int = 32, selective_fraction: float = 0.2,
                  rules=None, seed: int = 0, stop_on_eos: bool = True,
                  policy: str = "phase", starvation_limit: int = 4,
                  defrag_threshold: float = 0.5, prefills_per_tick: int = 2,
-                 queue_depth: int = 256, bucket: bool = True):
+                 queue_depth: int = 256, bucket: bool = True,
+                 kv: str = "slot", page_size: int = 8,
+                 num_pages: int | None = None,
+                 target_tick_s: float = 50e-3):
+        if kv not in KV_MODES:
+            raise ValueError(f"kv {kv!r} not in {KV_MODES}")
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
-        self.pass_budget = pass_budget if pass_budget is not None else num_slots
-        self.prompt_len = prompt_len
+        self.prompt_len = prompt_len           # engine-wide maximum
         self.max_new = max_new
         self.capacity = prompt_len + max_new
         self.selective_fraction = selective_fraction
@@ -114,9 +137,30 @@ class ContinuousEngine:
         self.defrag_threshold = defrag_threshold
         self.prefills_per_tick = prefills_per_tick
         self.bucket = bucket
+        self.kv = kv
+        self.page_size = page_size
+        self.nb_max = pages_for(self.capacity, page_size)
+
+        self._budget_auto = pass_budget == "auto"
+        if self._budget_auto:
+            self.pass_budget = max(2, num_slots)    # provisional until tuned
+            self._autotuner = BudgetAutotuner(target_tick_s, min_budget=2,
+                                              max_budget=2 * num_slots)
+        else:
+            self.pass_budget = pass_budget if pass_budget is not None \
+                else num_slots
+            self._autotuner = None
 
         self.queue = ArrivalQueue(max_depth=queue_depth)
-        self.pool = StatePool(num_slots)
+        self.pool = StatePool(num_slots)       # slot rows / host row ids
+        self.pages: PageAllocator | None = None
+        if kv == "paged":
+            # fail fast on unpageable stacks (recurrent state, MLA latents)
+            from repro.models import layers as L
+            T.paged_cache_specs(cfg, L.AxesMaker(), 1, page_size)
+            self.num_pages = num_pages if num_pages is not None \
+                else 2 * num_slots * self.nb_max
+            self.pages = PageAllocator(self.num_pages, page_size)
         self.scheduler = Scheduler(self.pass_budget, policy=policy,
                                    starvation_limit=starvation_limit)
         self.metrics = ServeMetrics()
@@ -128,17 +172,26 @@ class ContinuousEngine:
         self._states: dict[str, _RequestState] = {}
         self._slots = _SlotArrays(num_slots)
         self._jit: dict = {}
-        self._pool_c = None
-        self._pool_u = None
+        self._pool_c = None                    # slot: cond arena
+        self._pool_u = None                    # slot: uncond arena
+        self._pool_p = None                    # paged: the shared page pool
 
     # -- public API --------------------------------------------------------
 
     def submit(self, req: ServeRequest) -> bool:
         """Queue a request at the current tick; False = rejected (queue
-        full, or the request's plan is invalid for this engine)."""
+        full, or the request's plan/length is invalid for this engine)."""
         self.metrics.on_arrival(req.uid, self.tick_count)
         try:
-            self._plan_for(req).validate_for_ar()
+            plan = self._plan_for(req)
+            plan.validate_for_ar()
+            S = self._prompt_len_for(req)
+            if self.kv == "paged":
+                # a request that can never fit the pool must not wedge the
+                # FCFS head of the queue forever
+                if sum(stream_page_needs(plan, S, self.page_size)) > \
+                        self.num_pages:
+                    raise ValueError("page need exceeds pool")
         except ValueError:
             self.metrics.rejected += 1
             return False
@@ -181,8 +234,14 @@ class ContinuousEngine:
         t0 = time.perf_counter()
         now = self.tick_count
         self.metrics.expired += len(self.queue.expire(now))
-        self._admit(now)
-        self._maybe_defrag()
+        if self._autotuner is not None and not self._autotuner.per_pass_s:
+            self.autotune_budget()
+        if self.kv == "paged":
+            self._admit_paged(now)
+            self.metrics.note_pages(self.pages.n_in_use)
+        else:
+            self._admit(now)
+            self._maybe_defrag()
         plan = self.scheduler.plan_tick()
         sampled = self._execute(plan) if plan.in_flight else []
         events = self.scheduler.commit(plan)
@@ -200,10 +259,18 @@ class ContinuousEngine:
             self._slots.pos[slot] += 1
             self._slots.lstep[slot] += 1
             self.metrics.on_token(ev.uid, now)
-        self.metrics.record_tick(now, n_full=plan.n_full, n_cond=plan.n_cond,
-                                 budget=plan.budget,
-                                 active=self.scheduler.n_active,
-                                 queue_depth=len(self.queue))
+            if self.kv == "paged" and ev.mode is Mode.FULL \
+                    and not state.cursor.done \
+                    and state.cursor.mode is Mode.COND:
+                # the plan just crossed into its COND suffix: the uncond
+                # stream is dead, return its pages to the shared pool now
+                freed = self.pages.free(ev.uid, "u")
+                if freed:
+                    self.metrics.on_reclaim(freed)
+        self.metrics.record_tick(
+            now, n_full=plan.n_full, n_cond=plan.n_cond, budget=plan.budget,
+            active=self.scheduler.n_active, queue_depth=len(self.queue),
+            pages_in_use=self.pages.n_in_use if self.pages else 0)
         self.metrics.wall_s += time.perf_counter() - t0
         self.tick_count += 1
         return plan
@@ -221,13 +288,23 @@ class ContinuousEngine:
                 else req.selective_fraction)
         return GuidancePlan.suffix(total, frac, req.guidance_scale)
 
-    def _tokenize(self, prompt) -> np.ndarray:
+    def _prompt_len_for(self, req: ServeRequest) -> int:
+        S = self.prompt_len if req.prompt_len is None else req.prompt_len
+        if self.kv == "slot":
+            if S != self.prompt_len:
+                raise ValueError(f"slot arena serves fixed prompt_len="
+                                 f"{self.prompt_len}, got {S}")
+        elif not 1 <= S <= self.prompt_len:
+            raise ValueError(f"prompt_len {S} outside [1, {self.prompt_len}]")
+        return S
+
+    def _tokenize(self, prompt, length: int) -> np.ndarray:
         if isinstance(prompt, str):
-            ids = encode(prompt, self.cfg.vocab_size, self.prompt_len)
+            ids = encode(prompt, self.cfg.vocab_size, length)
         else:
-            ids = list(prompt)[: self.prompt_len]
-            ids = ids + [PAD] * (self.prompt_len - len(ids))
-        return np.asarray(ids, np.int32)[None]        # (1, S)
+            ids = list(prompt)[:length]
+            ids = ids + [PAD] * (length - len(ids))
+        return np.asarray(ids, np.int32)[None]        # (1, length)
 
     def _admit(self, now: int) -> None:
         quota = min(self.scheduler.admission_quota(self.pool.n_free),
@@ -245,7 +322,8 @@ class ContinuousEngine:
             assert slot is not None
             state = _RequestState(req, cursor, slot)
             self._states[req.uid] = state
-            self.scheduler.admit(req.uid, slot, cursor, arrival=req.arrival)
+            self.scheduler.admit(req.uid, slot, cursor, arrival=req.arrival,
+                                 deadline=req.deadline)
 
             key = np.asarray(jax.random.fold_in(self._base_key, self._req_seq))
             self._req_seq += 1
@@ -260,8 +338,8 @@ class ContinuousEngine:
             fn = self._prefill_fn()
             self._pool_c, self._pool_u, tok0 = fn(
                 self.params, self._pool_c, self._pool_u,
-                jnp.asarray(self._tokenize(req.prompt)), slot,
-                jnp.asarray(key), np.float32(req.guidance_scale),
+                jnp.asarray(self._tokenize(req.prompt, self.prompt_len)),
+                slot, jnp.asarray(key), np.float32(req.guidance_scale),
                 np.float32(req.temperature))
             tok0 = int(tok0)
             self.metrics.on_admit(req.uid, now)
@@ -272,14 +350,96 @@ class ContinuousEngine:
             state.generated.append(tok0)
             self.metrics.on_token(req.uid, now)       # TTFT: prefill emits
 
+    def _admit_paged(self, now: int) -> None:
+        """Pop admissible requests (row + full worst-case page reservation
+        available), then prefill them in per-length-bucket batches — one
+        compile serves k>1 simultaneous admissions of a bucket."""
+        quota = min(self.scheduler.admission_quota(self.pool.n_free),
+                    self.prefills_per_tick)
+        batch: list[tuple[ServeRequest, int, int, np.ndarray]] = []
+        while len(batch) < quota:
+            req = self.queue.peek()
+            if req is None:
+                break
+            plan = self._plan_for(req)
+            S = self._prompt_len_for(req)
+            need_c, need_u = stream_page_needs(plan, S, self.page_size)
+            if self.pages.n_free < need_c + need_u:
+                break                         # head-of-line waits for pages
+            self.queue.pop()
+            cursor = PlanCursor(plan)
+            slot = self.pool.alloc(req.uid)
+            assert slot is not None
+            self.pages.alloc(req.uid, "c", need_c)
+            if need_u:
+                self.pages.alloc(req.uid, "u", need_u)
+            self._states[req.uid] = _RequestState(req, cursor, slot)
+            self.scheduler.admit(req.uid, slot, cursor, arrival=req.arrival,
+                                 deadline=req.deadline)
+            key = np.asarray(jax.random.fold_in(self._base_key, self._req_seq))
+            self._req_seq += 1
+            self._slots.pos[slot] = S
+            self._slots.scale[slot] = req.guidance_scale
+            self._slots.temp[slot] = req.temperature
+            self._slots.lstep[slot] = 0
+            self._slots.key[slot] = key
+            batch.append((req, slot, S, key))
+        if not batch:
+            return
+        if self._pool_p is None:
+            self._init_paged_pool()
+        groups: dict[int, list] = {}
+        for item in batch:
+            groups.setdefault(_bucket(item[2]), []).append(item)
+        for Sb in sorted(groups):
+            self._prefill_paged_group(Sb, groups[Sb], now)
+
+    def _prefill_paged_group(self, Sb: int, items: list, now: int) -> None:
+        kb = _bucket(len(items))
+        nb_pre = pages_for(Sb, self.page_size)
+        tokens = np.full((kb, Sb), PAD, np.int32)
+        true_len = np.ones(kb, np.int32)
+        btc = np.full((kb, nb_pre), self.num_pages, np.int32)
+        btu = np.full((kb, nb_pre), self.num_pages, np.int32)
+        keys = np.zeros((kb, 2), np.uint32)
+        scales = np.zeros(kb, np.float32)
+        temps = np.zeros(kb, np.float32)
+        for i, (req, _slot, S, key) in enumerate(items):
+            tokens[i, :S] = self._tokenize(req.prompt, S)[0]
+            true_len[i] = S
+            btc[i] = self.pages.table(req.uid, "c", nb_pre)
+            btu[i] = self.pages.table(req.uid, "u", nb_pre)
+            keys[i] = key
+            scales[i] = req.guidance_scale
+            temps[i] = req.temperature
+        fn = self._paged_prefill_fn(Sb, kb)
+        self._pool_p, tok0 = fn(self.params, self._pool_p,
+                                jnp.asarray(tokens), jnp.asarray(true_len),
+                                jnp.asarray(btc), jnp.asarray(btu),
+                                jnp.asarray(keys), jnp.asarray(scales),
+                                jnp.asarray(temps))
+        tok0 = np.asarray(tok0)
+        for i, (req, slot, _S, _key) in enumerate(items):
+            state = self._states[req.uid]
+            self.metrics.on_admit(req.uid, now)
+            t0 = int(tok0[i])
+            if self.stop_on_eos and t0 == EOS:
+                self._finalize(req.uid, now)
+                continue
+            self._slots.tok[slot] = t0
+            state.generated.append(t0)
+            self.metrics.on_token(req.uid, now)       # TTFT: prefill emits
+
     def _finalize(self, uid: str, now: int) -> None:
         state = self._states.pop(uid)
         self.pool.free(state.slot)
+        if self.pages is not None:
+            self.pages.free_all(uid)
         self.scheduler.release(uid)
         self.results[uid] = state.generated
         self.metrics.on_complete(uid, now, state.cursor.passes_executed)
 
-    # -- defragmentation ---------------------------------------------------
+    # -- defragmentation (slot arena only) ---------------------------------
 
     def _maybe_defrag(self) -> None:
         if self.pool.fragmentation() <= self.defrag_threshold:
@@ -314,8 +474,18 @@ class ContinuousEngine:
         self._pool_c = jax.tree.map(zeros, row)
         self._pool_u = jax.tree.map(zeros, row)
 
+    def _init_paged_pool(self) -> None:
+        from repro.models import layers as L
+        specs = T.paged_cache_specs(self.cfg, L.SpecMaker(jnp.bfloat16),
+                                    self.num_pages, self.page_size)
+        self._pool_p = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
     def _prefill_fn(self):
-        key = ("prefill", self.prompt_len)
+        # pow2-padded length bucket key: the slot engine serves one fixed
+        # prompt_len, but the key shape is shared with the paged prefills
+        # so mixed-length engines never compile per distinct length
+        key = ("prefill", _bucket(self.prompt_len), 1)
         if key in self._jit:
             return self._jit[key]
         S, cap, cfg, rules = self.prompt_len, self.capacity, self.cfg, self.rules
@@ -333,6 +503,61 @@ class ContinuousEngine:
             return pool_c, pool_u, tok0[0]
 
         self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1, 2))
+        return self._jit[key]
+
+    def _paged_prefill_fn(self, Sb: int, kb: int):
+        """Batched dual-stream prefill for one (length-bucket, k-bucket):
+        tokens (kb, Sb) at true lengths ``true_len``, KV scattered through
+        per-row block tables into the shared page pool."""
+        key = ("prefill", Sb, kb)
+        if key in self._jit:
+            return self._jit[key]
+        cfg, rules, ps = self.cfg, self.rules, self.page_size
+
+        def scatter(pool_leaf, cache_leaf, pages, offs):
+            # cache (kb, Sb, K, hd), pool (P, ps, K, hd) — or with a
+            # leading layers axis on both for scan segments; pages / offs
+            # (kb*Sb,). Out-of-range pages (padding, or positions a short
+            # prompt never covers) drop.
+            if pool_leaf.ndim == 5:                         # stacked
+                n = cache_leaf.shape[0]
+                vals = cache_leaf.reshape(n, kb * Sb, *cache_leaf.shape[3:])
+                return pool_leaf.at[:, pages, offs].set(
+                    vals.astype(pool_leaf.dtype), mode="drop")
+            vals = cache_leaf.reshape(kb * Sb, *cache_leaf.shape[2:])
+            return pool_leaf.at[pages, offs].set(
+                vals.astype(pool_leaf.dtype), mode="drop")
+
+        def fn(params, pool, tokens, true_len, btc, btu, keys, scales, temps):
+            h_c, caches_c, _ = T.forward(params, cfg, tokens,
+                                         want_caches=True, rules=rules)
+            h_u, caches_u, _ = T.forward(params, cfg,
+                                         AR.null_prompt(tokens),
+                                         want_caches=True, rules=rules)
+            last = (true_len - 1)[:, None, None]
+            take = lambda h: jnp.take_along_axis(
+                h, jnp.broadcast_to(last, (kb, 1, h.shape[-1])), axis=1)
+            l_c = T.unembed(params, cfg, take(h_c))[:, 0, :].astype(jnp.float32)
+            l_u = T.unembed(params, cfg, take(h_u))[:, 0, :].astype(jnp.float32)
+            logits = cfg_combine(l_u, l_c, scales[:, None])
+
+            def sample0(lg, k, t):
+                return _sample(lg[None], jax.random.fold_in(k, 0), t)[0]
+
+            tok0 = jax.vmap(sample0)(logits, keys, temps)
+
+            posidx = jnp.arange(Sb)
+            offs = jnp.tile(posidx % ps, kb)
+            slot_of = posidx // ps                          # (Sb,) table col
+            pages_c = btc[:, slot_of].reshape(kb * Sb)
+            pages_u = btu[:, slot_of].reshape(kb * Sb)
+            pool = jax.tree.map(
+                lambda p, c: scatter(p, c, pages_c, offs), pool, caches_c)
+            pool = jax.tree.map(
+                lambda p, c: scatter(p, c, pages_u, offs), pool, caches_u)
+            return pool, tok0
+
+        self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1))
         return self._jit[key]
 
     def _step_fn(self, n_full: int, n_cond: int):
@@ -385,6 +610,46 @@ class ContinuousEngine:
         self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1, 2))
         return self._jit[key]
 
+    def _paged_step_fn(self, n_full: int, n_cond: int):
+        """Mixed-phase decode step against the shared page pool: both
+        streams of the FULL group and the cond stream of the COND group
+        write/read through their block tables; per-row positions let
+        mixed-length requests step together."""
+        key = ("pstep", n_full, n_cond)
+        if key in self._jit:
+            return self._jit[key]
+        cfg, rules = self.cfg, self.rules
+
+        def sample_rows(logits, keys, temps, lsteps):
+            def one(lg, k, t, ls):
+                return _sample(lg[None], jax.random.fold_in(k, 1 + ls), t)[0]
+            return jax.vmap(one)(logits, keys, temps, lsteps)
+
+        def fn(params, pool, f_btc, f_btu, f_tok, f_pos, f_scale, f_temp,
+               f_key, f_lstep, c_btc, c_tok, c_pos, c_temp, c_key, c_lstep):
+            f_next = jnp.zeros((n_full,), jnp.int32)
+            c_next = jnp.zeros((n_cond,), jnp.int32)
+            if n_full:
+                emb = T.embed_tokens(params, cfg, f_tok[:, None])
+                h_c, pool = T.decode_step_paged(params, cfg, emb, pool,
+                                                f_btc, f_pos, rules=rules)
+                h_u, pool = T.decode_step_paged(params, cfg, emb, pool,
+                                                f_btu, f_pos, rules=rules)
+                l_c = T.unembed(params, cfg, h_c)[:, 0, :].astype(jnp.float32)
+                l_u = T.unembed(params, cfg, h_u)[:, 0, :].astype(jnp.float32)
+                logits = cfg_combine(l_u, l_c, f_scale[:, None])
+                f_next = sample_rows(logits, f_key, f_temp, f_lstep)
+            if n_cond:
+                emb = T.embed_tokens(params, cfg, c_tok[:, None])
+                h_c, pool = T.decode_step_paged(params, cfg, emb, pool,
+                                                c_btc, c_pos, rules=rules)
+                logits = T.unembed(params, cfg, h_c)[:, 0, :].astype(jnp.float32)
+                c_next = sample_rows(logits, c_key, c_temp, c_lstep)
+            return pool, f_next, c_next
+
+        self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1))
+        return self._jit[key]
+
     def _defrag_fn(self):
         key = ("defrag",)
         if key not in self._jit:
@@ -393,6 +658,98 @@ class ContinuousEngine:
                 return jax.tree.map(take, pool_c), jax.tree.map(take, pool_u)
             self._jit[key] = jax.jit(fn, donate_argnums=self._donate(0, 1))
         return self._jit[key]
+
+    # -- pass-budget autotuning (roofline hook) ----------------------------
+
+    def autotune_budget(self) -> dict:
+        """Derive ``pass_budget`` from the roofline step-latency model.
+
+        Lowers + compiles the two pure occupancy signatures ((1,0) and
+        (0,1)), prices a denoiser pass from each
+        (``repro.serve.autotune``), and installs the largest budget whose
+        predicted tick latency fits ``target_tick_s``. Idempotent; also
+        runs automatically on the first tick when ``pass_budget="auto"``.
+        """
+        if self._autotuner is None:
+            raise ValueError('autotuning requires pass_budget="auto"')
+        if self.kv == "paged":
+            if self._pool_p is None:
+                self._init_paged_pool()
+        elif self._pool_c is None:
+            self._init_pools()
+        i32 = lambda *s: np.zeros(s, np.int32)
+        f32 = lambda *s: np.zeros(s, np.float32)
+        u32 = lambda *s: np.zeros(s, np.uint32)
+        # dummy rows address out-of-range slots/pages (reads clamp, writes
+        # drop), so the warm-up execution below cannot corrupt live state
+        oob_slot = lambda n: np.full(n, self.num_slots, np.int32)
+        oob_bt = lambda n: np.full((n, self.nb_max), self.num_pages, np.int32)
+        for sig in ((1, 0), (0, 1)):
+            nf, nc = sig
+            if self.kv == "paged":
+                fn = self._paged_step_fn(nf, nc)
+                args = (self.params, self._pool_p,
+                        oob_bt(nf), oob_bt(nf),
+                        i32(nf), i32(nf), f32(nf), f32(nf), u32(nf, 2),
+                        i32(nf), oob_bt(nc), i32(nc), i32(nc),
+                        f32(nc), u32(nc, 2), i32(nc))
+            else:
+                fn = self._step_fn(nf, nc)
+                args = (self.params, self._pool_c, self._pool_u,
+                        oob_slot(nf), i32(nf), i32(nf), f32(nf), f32(nf),
+                        u32(nf, 2), i32(nf), oob_slot(nc), i32(nc), i32(nc),
+                        f32(nc), u32(nc, 2), i32(nc))
+            self._autotuner.observe(sig, fn.lower(*args).compile())
+            # warm the jit dispatch cache too: the AOT compile above does
+            # not populate it, and (1,0)/(0,1) are the most common real
+            # signatures — pay both compiles here, not on live traffic
+            out = fn(*args)
+            if self.kv == "paged":
+                self._pool_p = out[0]
+            else:
+                self._pool_c, self._pool_u = out[0], out[1]
+        budget = self._autotuner.budget()
+        self.pass_budget = budget
+        self.scheduler.pass_budget = budget
+        return self._autotuner.report()
+
+    # -- HBM accounting ----------------------------------------------------
+
+    def kv_hbm_bytes(self) -> dict:
+        """Reserved vs peak-in-use KV arena bytes — the number the
+        ``--kv paged|slot`` benchmark toggle compares at equal budget.
+        Computed from abstract specs / ``eval_shape`` only: asking for the
+        accounting never allocates the arena."""
+        import math as _math
+        from repro.models import layers as L
+        leaf_bytes = lambda s: _math.prod(s.shape) * np.dtype(s.dtype).itemsize
+        if self.kv == "paged":
+            specs = T.paged_cache_specs(self.cfg, L.SpecMaker(jnp.bfloat16),
+                                        self.num_pages, self.page_size)
+            reserved = sum(leaf_bytes(l) for l in jax.tree.leaves(specs))
+            per_page = reserved / self.num_pages
+            return {"kv": "paged", "reserved_bytes": reserved,
+                    "page_bytes": per_page,
+                    "peak_in_use_bytes":
+                        int(self.metrics.peak_pages_in_use * per_page),
+                    "num_pages": self.num_pages,
+                    "page_size": self.page_size}
+        S, cap, cfg = self.prompt_len, self.capacity, self.cfg
+
+        def one_stream(params, prompt):
+            _, caches = AR.prefill(params, cfg, prompt, rules=self.rules)
+            return T.prepare_decode_caches(cfg, caches, seq_len=S,
+                                           capacity=cap)
+
+        row = jax.eval_shape(one_stream, self.params,
+                             jax.ShapeDtypeStruct((1, S), jnp.int32))
+        row_bytes = sum(leaf_bytes(l) for l in jax.tree.leaves(row))
+        reserved = 2 * self.num_slots * row_bytes    # both streams, all rows
+        peak_active = max((r.active for r in self.metrics.records), default=0)
+        return {"kv": "slot", "reserved_bytes": reserved,
+                "row_bytes": 2 * row_bytes,
+                "peak_in_use_bytes": int(peak_active * 2 * row_bytes),
+                "num_slots": self.num_slots}
 
     # -- execution ---------------------------------------------------------
 
@@ -413,20 +770,37 @@ class ContinuousEngine:
                 jnp.asarray(gather(self._slots.key)),
                 jnp.asarray(gather(self._slots.lstep)))
 
+    def _group_tables(self, entries, bucket_n: int, stream: str):
+        """Block tables for one group, padded rows all out-of-range."""
+        out = np.full((bucket_n, self.nb_max), self.num_pages, np.int32)
+        for i, e in enumerate(entries):
+            out[i] = self.pages.table(e.uid, stream, self.nb_max)
+        return jnp.asarray(out)
+
     def _execute(self, plan: TickPlan) -> list[int]:
         """Run one mixed-phase step; returns sampled next-tokens aligned
         with ``plan.full + plan.cond``."""
         nf_b = _bucket(plan.n_full) if self.bucket else plan.n_full
         nc_b = _bucket(plan.n_cond) if self.bucket else plan.n_cond
-        fn = self._step_fn(nf_b, nc_b)
         f_idx, f_tok, f_pos, f_scale, f_temp, f_key, f_lstep = \
             self._group_arrays(plan.full, nf_b)
         c_idx, c_tok, c_pos, _c_scale, c_temp, c_key, c_lstep = \
             self._group_arrays(plan.cond, nc_b)
-        self._pool_c, self._pool_u, f_next, c_next = fn(
-            self.params, self._pool_c, self._pool_u,
-            f_idx, f_tok, f_pos, f_scale, f_temp, f_key, f_lstep,
-            c_idx, c_tok, c_pos, c_temp, c_key, c_lstep)
+        if self.kv == "paged":
+            fn = self._paged_step_fn(nf_b, nc_b)
+            self._pool_p, f_next, c_next = fn(
+                self.params, self._pool_p,
+                self._group_tables(plan.full, nf_b, "c"),
+                self._group_tables(plan.full, nf_b, "u"),
+                f_tok, f_pos, f_scale, f_temp, f_key, f_lstep,
+                self._group_tables(plan.cond, nc_b, "c"),
+                c_tok, c_pos, c_temp, c_key, c_lstep)
+        else:
+            fn = self._step_fn(nf_b, nc_b)
+            self._pool_c, self._pool_u, f_next, c_next = fn(
+                self.params, self._pool_c, self._pool_u,
+                f_idx, f_tok, f_pos, f_scale, f_temp, f_key, f_lstep,
+                c_idx, c_tok, c_pos, c_temp, c_key, c_lstep)
         f_next = np.asarray(f_next)[: plan.n_full]
         c_next = np.asarray(c_next)[: plan.n_cond]
         return [int(t) for t in f_next] + [int(t) for t in c_next]

@@ -27,6 +27,7 @@ class TickRecord:
     budget: int
     active: int            # requests resident in slots
     queue_depth: int
+    pages_in_use: int = 0  # paged arena only: granted pages this tick
 
 
 @dataclass
@@ -60,6 +61,9 @@ class ServeMetrics:
     timelines: dict[str, RequestTimeline] = field(default_factory=dict)
     denoiser_passes: int = 0     # decode passes (plan units)
     prefill_passes: int = 0      # prefill stream passes (2 per admission)
+    pages_reclaimed: int = 0     # paged arena: pages returned before
+                                 # completion (COND-transition reclaim)
+    peak_pages_in_use: int = 0   # paged arena: high-water page occupancy
     tokens_emitted: int = 0
     completed: int = 0
     expired: int = 0
@@ -72,16 +76,30 @@ class ServeMetrics:
     # -- recording ---------------------------------------------------------
 
     def record_tick(self, tick: int, *, n_full: int, n_cond: int, budget: int,
-                    active: int, queue_depth: int) -> None:
+                    active: int, queue_depth: int,
+                    pages_in_use: int = 0) -> None:
         self.records.append(TickRecord(tick, n_full, n_cond,
                                        2 * n_full + n_cond, budget, active,
-                                       queue_depth))
+                                       queue_depth, pages_in_use))
         if len(self.records) > self.max_records:
             del self.records[: -self.max_records]
         self.denoiser_passes += 2 * n_full + n_cond
+        self.peak_pages_in_use = max(self.peak_pages_in_use, pages_in_use)
         self._ticks += 1
         self._scheduled += n_full + n_cond
         self._budget_offered += budget
+
+    def note_pages(self, pages_in_use: int) -> None:
+        """Sample page occupancy mid-tick. Admission grants pages before
+        the same tick's finalize/reclaim frees them, so the end-of-tick
+        ``record_tick`` sample alone would undercount the true device
+        high-water mark (e.g. a prefill-EOS request's pages)."""
+        self.peak_pages_in_use = max(self.peak_pages_in_use, pages_in_use)
+
+    def on_reclaim(self, pages: int) -> None:
+        """Pages returned to the pool *before* request completion — the
+        COND-transition HBM saving the paged arena exists to measure."""
+        self.pages_reclaimed += pages
 
     def on_arrival(self, uid: str, tick: float) -> None:
         self.timelines[uid] = RequestTimeline(arrival=tick)
@@ -140,6 +158,8 @@ class ServeMetrics:
             "prefill_passes": self.prefill_passes,
             "mean_in_flight": round(self.mean_in_flight(), 3),
             "utilization": round(self.utilization(), 3),
+            "pages_reclaimed": self.pages_reclaimed,
+            "peak_pages_in_use": self.peak_pages_in_use,
             "mean_ttft": self.mean_ttft(),
             "mean_tpot": self.mean_tpot(),
             "wall_s": round(self.wall_s, 4),

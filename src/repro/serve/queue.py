@@ -38,6 +38,8 @@ class ServeRequest:
     selective_fraction: float | None = None
     plan: GuidancePlan | None = None
     ttl: float | None = None
+    prompt_len: int | None = None   # paged engines admit mixed lengths;
+                                    # None = the engine-wide default
 
     # set by the queue at push time
     arrival: float = field(default=0.0, init=False)

@@ -16,7 +16,11 @@ Policies
   backfill the gap — but once any request has been passed over
   ``starvation_limit`` ticks it is promoted to the front of the order and,
   if it still does not fit, packing stops behind it so the budget frees up
-  next tick (bounded wait even under adversarial COND floods).
+  next tick (bounded wait even under adversarial COND floods). Within each
+  class (starved, fresh) deadline-bearing requests pack earliest-deadline
+  first (EDF); deadline-free requests keep pure FCFS order behind them, so
+  latency-sensitive traffic jumps the line without touching the aging
+  guard's starvation bound.
 * ``"static"`` — the seed engine's behavior as a policy: the resident
   batch steps in lockstep and admission opens only when the batch has
   fully drained. Used as the baseline in ``sim`` and benchmarks.
@@ -43,6 +47,15 @@ class ActiveRequest:
     arrival: float = 0.0
     seq: int = 0                  # admission order, the FCFS key
     skipped_ticks: int = 0        # consecutive ticks passed over
+    deadline: float | None = None # EDF key within a class (None = last)
+
+    @property
+    def edf_key(self) -> tuple:
+        """Earliest-deadline-first within a class: deadline-bearing
+        requests first (earliest deadline wins), then FCFS by seq."""
+        return (self.deadline is None,
+                self.deadline if self.deadline is not None else 0.0,
+                self.seq)
 
 
 @dataclass(frozen=True)
@@ -113,11 +126,13 @@ class Scheduler:
         return sorted(self._active.values(), key=lambda e: e.seq)
 
     def admit(self, uid: str, slot: int, cursor: PlanCursor, *,
-              arrival: float = 0.0) -> ActiveRequest:
+              arrival: float = 0.0,
+              deadline: float | None = None) -> ActiveRequest:
         if uid in self._active:
             raise ValueError(f"uid {uid!r} already active")
         cursor.plan.validate_for_ar()
-        entry = ActiveRequest(uid, slot, cursor, arrival, self._seq)
+        entry = ActiveRequest(uid, slot, cursor, arrival, self._seq,
+                              deadline=deadline)
         self._seq += 1
         self._active[uid] = entry
         return entry
@@ -155,10 +170,16 @@ class Scheduler:
         return TickPlan(full, cond, self.pass_budget)
 
     def _plan_phase(self) -> TickPlan:
-        starved = [e for e in self.active()
-                   if e.skipped_ticks >= self.starvation_limit]
-        fresh = [e for e in self.active()
-                 if e.skipped_ticks < self.starvation_limit]
+        # EDF within FCFS classes: the starved class still pre-empts the
+        # fresh class (the aging guard's bound is untouched), but inside
+        # each class deadline-bearing requests pack earliest-deadline
+        # first; deadline-free requests keep pure FCFS behind them.
+        starved = sorted((e for e in self.active()
+                          if e.skipped_ticks >= self.starvation_limit),
+                         key=lambda e: e.edf_key)
+        fresh = sorted((e for e in self.active()
+                        if e.skipped_ticks < self.starvation_limit),
+                       key=lambda e: e.edf_key)
         remaining = self.pass_budget
         full: list[ActiveRequest] = []
         cond: list[ActiveRequest] = []

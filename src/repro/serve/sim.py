@@ -18,11 +18,12 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.selective import GuidancePlan, PlanCursor
+from repro.core.selective import GuidancePlan, Mode, PlanCursor
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import ArrivalQueue, ServeRequest
 from repro.serve.scheduler import Scheduler
-from repro.serve.state import StatePool
+from repro.serve.state import (PageAllocator, StatePool, pages_for,
+                               stream_page_needs)
 
 
 @dataclass(frozen=True)
@@ -31,6 +32,13 @@ class SimRequest:
     arrival: int                       # tick the request enters the queue
     plan: GuidancePlan
     ttl: float | None = None
+    prompt_len: int = 8                # paged arena: mixed lengths share
+                                       # one pool (slot sim ignores this)
+
+    @property
+    def full_steps(self) -> int:
+        return sum(s.length for s in self.plan.segments
+                   if s.mode is Mode.FULL)
 
 
 @dataclass
@@ -66,12 +74,31 @@ def poisson_trace(seed: int, *, n: int, rate: float, total_steps: int,
 def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
              policy: str = "phase", starvation_limit: int = 4,
              prefills_per_tick: int | None = None, queue_depth: int = 4096,
-             max_ticks: int = 100_000) -> SimReport:
+             max_ticks: int = 100_000, kv: str = "slot",
+             page_size: int = 4, num_pages: int | None = None) -> SimReport:
     """Replay ``trace`` against a scheduler policy; returns a
-    :class:`SimReport` whose metrics mirror the real engine's."""
+    :class:`SimReport` whose metrics mirror the real engine's.
+
+    ``kv="paged"`` replays the same trace against the paged-arena
+    bookkeeping (the real :class:`PageAllocator`): admission additionally
+    reserves each request's worst-case pages (uncond = FULL prefix only),
+    unconditional pages are reclaimed at the FULL->COND transition, and
+    per-tick ``pages_in_use`` / ``pages_reclaimed`` land in the metrics.
+    """
     trace = sorted(trace, key=lambda r: (r.arrival, r.uid))
     queue = ArrivalQueue(max_depth=queue_depth)
     pool = StatePool(num_slots)
+    pages: PageAllocator | None = None
+    need_of: dict[str, tuple[int, int]] = {}
+    if kv == "paged":
+        cap = max((r.prompt_len + r.plan.total_steps for r in trace),
+                  default=page_size)
+        if num_pages is None:
+            num_pages = 2 * num_slots * pages_for(cap, page_size)
+        pages = PageAllocator(num_pages, page_size)
+        for r in trace:
+            need_of[r.uid] = stream_page_needs(r.plan, r.prompt_len,
+                                               page_size)
     sched = Scheduler(pass_budget, policy=policy,
                       starvation_limit=starvation_limit)
     metrics = ServeMetrics()
@@ -92,9 +119,12 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
         while next_arrival < len(trace) and trace[next_arrival].arrival <= tick:
             sr = trace[next_arrival]
             next_arrival += 1
-            req = ServeRequest(sr.uid, prompt=[], ttl=sr.ttl, plan=sr.plan)
+            req = ServeRequest(sr.uid, prompt=[], ttl=sr.ttl, plan=sr.plan,
+                               prompt_len=sr.prompt_len)
             metrics.on_arrival(sr.uid, tick)
-            if not queue.push(req, tick):
+            if pages is not None and sum(need_of[sr.uid]) > pages.num_pages:
+                metrics.rejected += 1       # can never fit: don't wedge FCFS
+            elif not queue.push(req, tick):
                 metrics.rejected += 1
         # deadline expiry
         metrics.expired += len(queue.expire(tick))
@@ -103,17 +133,30 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
         if prefills_per_tick is not None:
             quota = min(quota, prefills_per_tick)
         for _ in range(quota):
-            req = queue.pop()
+            req = queue.peek()
             if req is None:
                 break
+            if pages is not None:
+                need_c, need_u = need_of[req.uid]
+                if pages.n_free < need_c + need_u:
+                    break              # head-of-line waits for pages
+                queue.pop()
+                pages.alloc(req.uid, "c", need_c)
+                if need_u:
+                    pages.alloc(req.uid, "u", need_u)
+            else:
+                queue.pop()
             slot = pool.alloc(req.uid)
             assert slot is not None
             cursor = PlanCursor(req.plan)
             cursors[req.uid] = cursor
-            sched.admit(req.uid, slot, cursor, arrival=req.arrival)
+            sched.admit(req.uid, slot, cursor, arrival=req.arrival,
+                        deadline=req.deadline)
             last_scheduled[req.uid] = tick
             metrics.on_admit(req.uid, tick)
             metrics.on_token(req.uid, tick)        # prefill emits token 0
+        if pages is not None:
+            metrics.note_pages(pages.n_in_use)
         # pack + execute (bookkeeping only)
         plan = sched.plan_tick()
         events = sched.commit(plan)
@@ -124,14 +167,20 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             cursor = cursors[ev.uid]
             if not ev.done:
                 metrics.on_token(ev.uid, tick)     # step i emits token i+1
+                if pages is not None and ev.mode is Mode.FULL \
+                        and cursor.mode is Mode.COND:
+                    metrics.on_reclaim(pages.free(ev.uid, "u"))
             else:
                 pool.free(ev.slot)
+                if pages is not None:
+                    pages.free_all(ev.uid)
                 sched.release(ev.uid)
                 metrics.on_complete(ev.uid, tick, cursor.passes_executed)
                 report.completions[ev.uid] = tick
         metrics.record_tick(tick, n_full=plan.n_full, n_cond=plan.n_cond,
                             budget=plan.budget, active=sched.n_active,
-                            queue_depth=len(queue))
+                            queue_depth=len(queue),
+                            pages_in_use=pages.n_in_use if pages else 0)
         tick += 1
     return report
 

@@ -1,4 +1,14 @@
-"""Slot-indexed state pool: alloc/free, defragmentation, pooled shardings.
+"""Arena state: slot pool, ref-counted page allocator, pooled shardings.
+
+Two arena models coexist behind the engine's ``kv`` toggle:
+
+* **slot** (:class:`StatePool`) — whole-capacity rows, one per request-
+  stream; frees leave holes that a defrag gather-permute compacts.
+* **paged** (:class:`PageAllocator`) — caches live in a pool of fixed-
+  size pages addressed through per-request-stream block tables; frees
+  are O(1) page returns (nothing to defragment) and a request's
+  unconditional pages are reclaimed the moment its plan enters the COND
+  suffix — the paper's selective guidance saves HBM, not just FLOPs.
 
 The continuous engine keeps one device-resident *arena* per stream — a
 cache pytree whose leading axis is the slot index — so requests can join
@@ -105,6 +115,146 @@ class StatePool:
 
 
 # ---------------------------------------------------------------------------
+# Paged arena: ref-counted page allocator + block-table registry
+# ---------------------------------------------------------------------------
+
+
+def pages_for(span: int, page_size: int) -> int:
+    """Pages needed to cover ``span`` positions (0 positions -> 0 pages)."""
+    if span <= 0:
+        return 0
+    return -(-span // page_size)
+
+
+def stream_page_needs(plan, prompt_len: int,
+                      page_size: int) -> tuple[int, int]:
+    """Worst-case ``(cond, uncond)`` pages one request can ever touch.
+
+    The cond stream spans the whole generation; the uncond stream only
+    its FULL prefix — and none at all under an all-COND plan, so
+    selective guidance halves a late-phase request's HBM from admission.
+    The single definition shared by engine admission, submit-time
+    validation and the simulator (reservation policy: all pages are
+    granted up front, so a request can never wedge mid-decode).
+    """
+    from repro.core.selective import Mode
+    n_full = sum(s.length for s in plan.segments if s.mode is Mode.FULL)
+    need_c = pages_for(prompt_len + plan.total_steps, page_size)
+    need_u = pages_for(prompt_len + n_full, page_size) if n_full else 0
+    return need_c, need_u
+
+
+class PageAllocator:
+    """Ref-counted allocator over a pool of ``num_pages`` fixed-size pages.
+
+    Each request-stream (``(uid, stream)``) owns an ordered list of pages
+    — its block table. Frees are O(1) returns to a free list (the slot
+    arena's defrag gather-permute has no paged equivalent: there is
+    nothing to compact). Pages are ref-counted so read-only pages (e.g. a
+    shared prompt prefix) can be granted to several owners via
+    :meth:`share`; a page returns to the free list only when its last
+    owner releases it.
+
+    Invariants (property-tested in ``tests/test_paged.py``):
+
+    * a free page has refcount 0; a granted page has refcount >= 1 and is
+      never handed out again by :meth:`alloc` (no double-grant);
+    * ``sum(refcounts) == sum(len(owned pages) over owners)``;
+    * ``n_free + len({pages with ref > 0}) == num_pages``.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError((num_pages, page_size))
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list, initialized so alloc hands out low indices first
+        self._free = list(range(num_pages - 1, -1, -1))
+        self._ref = np.zeros(num_pages, np.int32)
+        self._owned: dict[tuple[str, str], list[int]] = {}
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_in_use(self) -> int:
+        return self.num_pages - self.n_free
+
+    def owners(self) -> list[tuple[str, str]]:
+        return sorted(self._owned)
+
+    def owned(self, uid: str, stream: str) -> list[int]:
+        return list(self._owned.get((uid, stream), ()))
+
+    # -- grant / release ---------------------------------------------------
+
+    def alloc(self, uid: str, stream: str, n: int) -> list[int] | None:
+        """Grant ``n`` fresh pages to ``(uid, stream)``; None when fewer
+        than ``n`` are free (no partial grants — admission control must be
+        all-or-nothing so a request can never wedge mid-decode)."""
+        key = (uid, stream)
+        if key in self._owned:
+            raise ValueError(f"{key} already owns pages")
+        if n < 0:
+            raise ValueError(n)
+        if len(self._free) < n:
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self._ref[p] == 0
+            self._ref[p] = 1
+        self._owned[key] = pages
+        return list(pages)
+
+    def share(self, uid: str, stream: str, pages: list[int]) -> list[int]:
+        """Register ``(uid, stream)`` as an additional owner of already-
+        granted pages (refcount++). Used for read-only prefix sharing."""
+        key = (uid, stream)
+        if key in self._owned:
+            raise ValueError(f"{key} already owns pages")
+        for p in pages:
+            if not 0 <= p < self.num_pages or self._ref[p] < 1:
+                raise ValueError(f"page {p} is not granted")
+        for p in pages:
+            self._ref[p] += 1
+        self._owned[key] = list(pages)
+        return list(pages)
+
+    def free(self, uid: str, stream: str) -> int:
+        """Release ``(uid, stream)``'s pages; returns how many physical
+        pages actually went back to the free list (refcount hit 0)."""
+        pages = self._owned.pop((uid, stream), None)
+        if pages is None:
+            return 0
+        reclaimed = 0
+        for p in pages:
+            self._ref[p] -= 1
+            assert self._ref[p] >= 0
+            if self._ref[p] == 0:
+                self._free.append(p)
+                reclaimed += 1
+        return reclaimed
+
+    def free_all(self, uid: str) -> int:
+        return sum(self.free(uid, stream) for stream in ("c", "u"))
+
+    # -- block tables ------------------------------------------------------
+
+    def table(self, uid: str, stream: str, width: int) -> np.ndarray:
+        """Block table of ``width`` entries: the stream's pages in logical
+        order, padded with the out-of-range index ``num_pages`` (device
+        writes drop, reads clamp and are position-masked)."""
+        pages = self._owned.get((uid, stream), ())
+        out = np.full(width, self.num_pages, np.int32)
+        n = min(len(pages), width)
+        out[:n] = pages[:n]
+        return out
+
+
+# ---------------------------------------------------------------------------
 # Pooled-arena sharding (dist tie-in)
 # ---------------------------------------------------------------------------
 
@@ -144,5 +294,27 @@ def pool_partition_specs(cfg, num_slots: int, capacity: int, *,
     def one(names, spec):
         shape = (num_slots,) + tuple(spec.shape)
         return logical_to_spec(names, rules, shape=shape, mesh=mesh)
+
+    return jax.tree.map(one, axes, specs, is_leaf=L.is_axes_leaf)
+
+
+def paged_partition_specs(cfg, num_pages: int, page_size: int, *,
+                          rules: AxisRules, mesh, dtype=None):
+    """PartitionSpec tree for the paged KV pool under ``rules``.
+
+    Unlike the slot arena there is no relabelling step: the pool's own
+    logical names (``pages``/``page``, §3) are first-class rule-table
+    entries, so the same allocator (divisibility fallbacks and all)
+    shards the page pool directly.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    axes = T.paged_cache_specs(cfg, L.AxesMaker(), num_pages, page_size)
+    specs = T.paged_cache_specs(cfg, L.SpecMaker(dtype or jnp.bfloat16),
+                                num_pages, page_size)
+
+    def one(names, spec):
+        return logical_to_spec(names, rules, shape=spec.shape, mesh=mesh)
 
     return jax.tree.map(one, axes, specs, is_leaf=L.is_axes_leaf)

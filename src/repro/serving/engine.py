@@ -54,7 +54,8 @@ class BucketStats:
 class ServingEngine:
     def __init__(self, params, cfg, *, max_batch: int = 8, prompt_len: int = 32,
                  max_new: int = 32, selective_fraction: float = 0.2,
-                 rules=None, seed: int = 0):
+                 rules=None, seed: int = 0, kv: str = "slot",
+                 page_size: int = 8):
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
@@ -65,13 +66,14 @@ class ServingEngine:
         self.stats = BucketStats()
         # budget 2*max_batch: a full bucket fits even when every request is
         # in FULL phase, so same-plan buckets run lockstep (static batching
-        # as a special case of the continuous engine)
+        # as a special case of the continuous engine); kv picks the arena
+        # (slot rows vs the paged pool) without changing the facade surface
         self._engine = ContinuousEngine(
             params, cfg, num_slots=max_batch, pass_budget=2 * max_batch,
             prompt_len=prompt_len, max_new=max_new,
             selective_fraction=selective_fraction, rules=rules, seed=seed,
             stop_on_eos=False, prefills_per_tick=max_batch,
-            queue_depth=max(256, max_batch))
+            queue_depth=max(256, max_batch), kv=kv, page_size=page_size)
 
     @property
     def _compiled(self) -> dict:

@@ -118,6 +118,53 @@ def test_full_request_not_starved_by_cond_stream():
     assert waited <= limit + 1
 
 
+def test_edf_orders_within_class_without_breaking_fcfs():
+    """Deadline-bearing requests pack earliest-deadline-first inside a
+    class; deadline-free requests keep FCFS order behind them."""
+    sched = Scheduler(3)
+    c0 = PlanCursor(GuidancePlan.suffix(8, 1.0, 4.0))
+    c1 = PlanCursor(GuidancePlan.suffix(8, 1.0, 4.0))
+    c2 = PlanCursor(GuidancePlan.suffix(8, 1.0, 4.0))
+    c3 = PlanCursor(GuidancePlan.suffix(8, 1.0, 4.0))
+    sched.admit("old_nodl", 0, c0)                      # FCFS head, no deadline
+    sched.admit("late_dl", 1, c1, deadline=90.0)
+    sched.admit("tight_dl", 2, c2, deadline=10.0)
+    sched.admit("new_nodl", 3, c3)
+    plan = sched.plan_tick()
+    assert [e.uid for e in plan.cond] == ["tight_dl", "late_dl", "old_nodl"]
+    assert plan.skipped == ("new_nodl",)
+
+
+def test_edf_respects_aging_guard_classes():
+    """A starved request pre-empts deadline-bearing fresh traffic: EDF
+    reorders *within* the starved/fresh classes, never across them."""
+    sched = Scheduler(2, starvation_limit=2)
+    starved = PlanCursor(GuidancePlan.suffix(8, 0.0, 4.0))    # FULL, cost 2
+    sched.admit("starved", 0, starved)
+    sched._active["starved"].skipped_ticks = 2                # aged out
+    fresh = PlanCursor(GuidancePlan.suffix(8, 1.0, 4.0))
+    sched.admit("urgent", 1, fresh, deadline=0.0)
+    plan = sched.plan_tick()
+    assert [e.uid for e in plan.full] == ["starved"]
+    assert plan.skipped == ("urgent",)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_sim_edf_starvation_bound_holds_with_deadlines(seed):
+    """EDF within classes must not break the aging guard's bound: a trace
+    where half the requests carry deadlines still drains with the same
+    bounded worst wait as the deadline-free property test."""
+    base = poisson_trace(seed, n=25, rate=2.0, total_steps=8, fraction=0.5)
+    trace = [SimRequest(r.uid, r.arrival, r.plan,
+                        ttl=None if i % 2 else 50.0)
+             for i, r in enumerate(base)]
+    rep = simulate(trace, num_slots=6, pass_budget=6, policy="phase",
+                   starvation_limit=4)
+    assert rep.metrics.completed + rep.metrics.expired == 25
+    assert rep.max_wait <= 4 + 6
+
+
 def test_static_policy_drains_before_admitting():
     sched = Scheduler(4, policy="static")
     assert sched.admission_quota(free_slots=8) == 2    # budget//2 lockstep
