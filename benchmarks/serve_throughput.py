@@ -16,7 +16,15 @@ Part 3 (``--kv paged``): the same comparison through the paged KV arena
 reporting reserved vs peak-in-use HBM and the unconditional pages
 reclaimed at FULL->COND transitions, at the same pass budget.
 
-    PYTHONPATH=src python -m benchmarks.serve_throughput [--tiny] [--kv paged]
+Part 4 (``--reservation lazy``, implies ``--kv paged``): worst-case page
+reservation vs on-demand growth at **equal pool size** on a COND-heavy
+burst — lazy admission sustains strictly more concurrent requests than
+eager reservation (the ISSUE-4 acceptance number: admitted requests per
+GB), and the offline simulator reproduces the engine's ``pages_grown`` /
+``preemptions`` counts exactly.
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput [--tiny] \
+        [--kv paged] [--reservation lazy]
 """
 
 from __future__ import annotations
@@ -27,11 +35,12 @@ import jax
 
 from benchmarks.common import emit
 from repro.configs import get_smoke_config
+from repro.core.selective import GuidancePlan
 from repro.data.prompts import PAPER_PROMPTS
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.serve import (ContinuousEngine, ServeMetrics, ServeRequest,
-                         poisson_arrivals)
+                         SimRequest, pages_for, poisson_arrivals, simulate)
 from repro.serving import Request, ServingEngine
 
 FRACTIONS = [0.0, 0.2, 0.5]
@@ -65,7 +74,8 @@ def _static_sweep(params, cfg, *, n_req: int, prompt_len: int, max_new: int,
 def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
                           max_new: int, fraction: float, batch: int,
                           rate: float, seed: int = 0,
-                          kv: str = "slot", page_size: int = 4) -> dict:
+                          kv: str = "slot", page_size: int = 4,
+                          reservation: str = "eager") -> dict:
     arrivals = poisson_arrivals(seed, n=n_req, rate=rate)
     budget = 2 * batch
 
@@ -78,7 +88,8 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
     eng = ContinuousEngine(params, cfg, num_slots=2 * batch, pass_budget=budget,
                            prompt_len=prompt_len, max_new=max_new,
                            selective_fraction=fraction, stop_on_eos=False,
-                           kv=kv, page_size=page_size)
+                           kv=kv, page_size=page_size,
+                           reservation=reservation)
     # arrivals are relative to the current tick, so the measured run
     # replays the same trace shape the warmup compiled for
     eng.serve_trace(make_reqs("w"), arrivals)     # warmup/compile
@@ -139,7 +150,66 @@ def _paged_mixed_lengths(params, cfg, *, prompt_len: int, max_new: int,
     return {"lens": lens, "summary": m.summary(), "hbm": hbm}
 
 
-def run(tiny: bool = False, kv: str = "slot") -> dict:
+def _lazy_vs_eager(params, cfg, *, prompt_len: int, max_new: int,
+                   batch: int, page_size: int = 4) -> dict:
+    """ISSUE-4 acceptance: a COND-heavy burst at equal pool size. Eager
+    admission reserves each request's worst-case span up front, so the
+    pool caps concurrency; lazy admission grants prompt pages only and
+    grows at tick boundaries (preempting by priority when it runs dry),
+    sustaining strictly more concurrent requests — more admitted requests
+    per GB of KV pool. The offline simulator must reproduce the lazy
+    engine's growth/preemption counters exactly."""
+    n_req = 2 * batch
+    plan = GuidancePlan.suffix(max_new, 1.0, 4.0)   # COND-heavy: late phase
+    num_pages = n_req * pages_for(prompt_len, page_size) + 2
+    arrivals = [0] * n_req                          # burst: pool contended
+
+    def engine(reservation):
+        eng = ContinuousEngine(params, cfg, num_slots=n_req,
+                               pass_budget=n_req, prompt_len=prompt_len,
+                               max_new=max_new, stop_on_eos=False,
+                               kv="paged", page_size=page_size,
+                               num_pages=num_pages, reservation=reservation,
+                               prefills_per_tick=n_req)
+        reqs = [ServeRequest(uid=f"z{i}",
+                             prompt=PAPER_PROMPTS[i % len(PAPER_PROMPTS)],
+                             max_new_tokens=max_new, plan=plan,
+                             priority=i % 2)
+                for i in range(n_req)]
+        out = eng.serve_trace(reqs, arrivals)
+        assert len(out) == n_req
+        return eng.metrics
+
+    peak = {}
+    for res in ("eager", "lazy"):
+        m = engine(res)
+        peak[res] = max(r.active for r in m.records)
+        emit(f"serve/reservation_{res}", peak[res],
+             f"pool={num_pages}pages;grown={m.pages_grown};"
+             f"preempt={m.preemptions};ticks={m.ticks}")
+        if res == "lazy":
+            lazy_m = m
+    assert peak["lazy"] > peak["eager"], \
+        f"lazy must admit more concurrent requests: {peak}"
+
+    trace = [SimRequest(f"z{i}", 0, plan, prompt_len=prompt_len,
+                        priority=i % 2) for i in range(n_req)]
+    rep = simulate(trace, num_slots=n_req, pass_budget=n_req, kv="paged",
+                   page_size=page_size, num_pages=num_pages,
+                   reservation="lazy", prefills_per_tick=n_req)
+    sim_m = rep.metrics
+    for key in ("pages_grown", "preemptions", "shared_page_hits",
+                "cow_copies"):
+        got, want = getattr(sim_m, key), getattr(lazy_m, key)
+        assert got == want, f"sim {key}={got} != engine {want}"
+    return {"peak_concurrent": peak, "num_pages": num_pages,
+            "lazy": lazy_m.summary(), "sim_matches": True}
+
+
+def run(tiny: bool = False, kv: str = "slot",
+        reservation: str = "eager") -> dict:
+    if reservation == "lazy":
+        kv = "paged"                                # lazy implies paged
     cfg = get_smoke_config("llama3.2-1b")
     params = T.init_model(cfg, L.ArrayMaker(jax.random.PRNGKey(0)))
     if tiny:
@@ -155,12 +225,17 @@ def run(tiny: bool = False, kv: str = "slot") -> dict:
     compare = _continuous_vs_static(params, cfg, n_req=n_req,
                                     prompt_len=prompt_len, max_new=max_new,
                                     fraction=fractions[-1], batch=batch,
-                                    rate=4.0 if tiny else 1.5, kv=kv)
+                                    rate=4.0 if tiny else 1.5, kv=kv,
+                                    reservation=reservation)
     out = {"rows": rows, "compare": compare}
     if kv == "paged":
         out["paged_mixed"] = _paged_mixed_lengths(
             params, cfg, prompt_len=prompt_len, max_new=max_new,
             fraction=fractions[-1], batch=batch)
+    if reservation == "lazy":
+        out["lazy_vs_eager"] = _lazy_vs_eager(
+            params, cfg, prompt_len=prompt_len, max_new=max_new,
+            batch=batch)
     return out
 
 
@@ -170,17 +245,31 @@ if __name__ == "__main__":
                     help="CI smoke: tiny shapes, two fractions")
     ap.add_argument("--kv", choices=["slot", "paged"], default="slot",
                     help="KV arena for the continuous engine")
+    ap.add_argument("--reservation", choices=["eager", "lazy"],
+                    default="eager",
+                    help="paged arena page policy (lazy = on-demand growth "
+                         "+ uncond prefix sharing + priority preemption; "
+                         "implies --kv paged)")
     args = ap.parse_args()
-    out = run(tiny=args.tiny, kv=args.kv)
+    out = run(tiny=args.tiny, kv=args.kv, reservation=args.reservation)
     print("continuous-vs-static:", out["compare"]["continuous"])
     print("                     ", out["compare"]["static"])
     print(f"in-flight gain at equal pass budget: "
           f"{out['compare']['in_flight_gain']:.2f}x")
     hbm = out["compare"]["hbm"]
-    print(f"kv={args.kv}: reserved={hbm['reserved_bytes']/2**20:.2f}MiB "
+    print(f"kv={out['compare']['kv']}: "
+          f"reserved={hbm['reserved_bytes']/2**20:.2f}MiB "
           f"peak_in_use={hbm['peak_in_use_bytes']/2**20:.2f}MiB")
     if "paged_mixed" in out:
         pm = out["paged_mixed"]
         print(f"paged mixed lens={pm['lens']}: "
               f"reclaimed={pm['summary']['pages_reclaimed']} pages, "
               f"peak={pm['summary']['peak_pages_in_use']}")
+    if "lazy_vs_eager" in out:
+        lv = out["lazy_vs_eager"]
+        print(f"reservation @ {lv['num_pages']} pages: "
+              f"peak concurrent lazy={lv['peak_concurrent']['lazy']} "
+              f"eager={lv['peak_concurrent']['eager']}; "
+              f"lazy grown={lv['lazy']['pages_grown']} "
+              f"preemptions={lv['lazy']['preemptions']} "
+              f"(sim reproduces: {lv['sim_matches']})")

@@ -58,12 +58,19 @@ def run_continuous(params, cfg, args) -> None:
                            prompt_len=args.prompt_len, max_new=args.max_new,
                            selective_fraction=args.fraction, seed=args.seed,
                            stop_on_eos=False, kv=args.kv,
-                           page_size=args.page_size)
+                           page_size=args.page_size,
+                           reservation=args.reservation)
     eng.serve_trace(reqs, arrivals)
     print(f"[continuous] {eng.metrics.summary()}")
     hbm = eng.kv_hbm_bytes()
     print(f"[kv={args.kv:5s}] reserved={hbm['reserved_bytes']/2**20:.2f}MiB "
           f"peak_in_use={hbm['peak_in_use_bytes']/2**20:.2f}MiB")
+    if args.reservation == "lazy":
+        m = eng.metrics
+        print(f"[lazy      ] pages_grown={m.pages_grown} "
+              f"shared_page_hits={m.shared_page_hits} "
+              f"cow_copies={m.cow_copies} preemptions={m.preemptions} "
+              f"resumes={m.resumes}")
 
     static = ServingEngine(params, cfg, max_batch=args.batch,
                            prompt_len=args.prompt_len, max_new=args.max_new,
@@ -95,6 +102,12 @@ def main() -> None:
                     help="continuous: KV arena model (paged = block tables)")
     ap.add_argument("--page-size", type=int, default=8,
                     help="continuous --kv paged: positions per KV page")
+    ap.add_argument("--reservation", choices=["eager", "lazy"],
+                    default="eager",
+                    help="continuous --kv paged: eager = worst-case page "
+                         "reservation at admission; lazy = prompt pages "
+                         "only, on-demand growth, uncond prefix sharing "
+                         "and priority preemption (DESIGN.md §10)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--fraction", type=float, default=0.2,
@@ -103,6 +116,9 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.reservation == "lazy" and args.kv != "paged":
+        ap.error("--reservation lazy requires --kv paged "
+                 "(the slot arena reserves whole rows)")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

@@ -14,17 +14,22 @@ from repro.serve.autotune import BudgetAutotuner
 from repro.serve.engine import ContinuousEngine
 from repro.serve.metrics import ServeMetrics, TickRecord
 from repro.serve.queue import ArrivalQueue, ServeRequest
-from repro.serve.scheduler import Scheduler, TickPlan
+from repro.serve.scheduler import (Scheduler, TickPlan, provision_growth,
+                                   victim_key)
 from repro.serve.sim import (SimRequest, compare_policies, poisson_arrivals,
                              poisson_trace, simulate)
-from repro.serve.state import (PageAllocator, StatePool, paged_partition_specs,
+from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
+                               fresh_lazy_needs, paged_partition_specs,
                                pages_for, pool_partition_specs,
-                               pooled_cache_axes)
+                               pooled_cache_axes, resume_lazy_needs,
+                               stream_page_needs)
 
 __all__ = [
     "ArrivalQueue", "BudgetAutotuner", "ContinuousEngine", "PageAllocator",
-    "Scheduler", "ServeMetrics", "ServeRequest", "SimRequest", "StatePool",
-    "TickPlan", "TickRecord", "compare_policies", "paged_partition_specs",
-    "pages_for", "pool_partition_specs", "pooled_cache_axes",
-    "poisson_arrivals", "poisson_trace", "simulate",
+    "PrefixShareRegistry", "Scheduler", "ServeMetrics", "ServeRequest",
+    "SimRequest", "StatePool", "TickPlan", "TickRecord", "compare_policies",
+    "fresh_lazy_needs", "paged_partition_specs", "pages_for",
+    "pool_partition_specs", "pooled_cache_axes", "poisson_arrivals",
+    "poisson_trace", "provision_growth", "resume_lazy_needs", "simulate",
+    "stream_page_needs", "victim_key",
 ]

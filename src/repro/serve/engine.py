@@ -21,9 +21,20 @@ Two KV arenas (``kv=`` toggle, DESIGN.md §8–§9):
 * ``"paged"`` — one physical page pool shared by both streams of every
   request, addressed through per-request-stream block tables
   (:class:`PageAllocator`). Requests with *different* ``prompt_len``
-  share the pool; admission reserves exactly the pages each stream can
-  ever touch (the unconditional stream only spans its FULL prefix), and
-  k>1 same-bucket admissions prefill through one batched compile.
+  share the pool; under ``reservation="eager"`` admission reserves
+  exactly the pages each stream can ever touch (the unconditional stream
+  only spans its FULL prefix), and k>1 same-bucket admissions prefill
+  through one batched compile.
+
+``reservation="lazy"`` (paged only, DESIGN.md §10) admits with prompt
+pages alone and grows the decode span on demand at tick boundaries; the
+unconditional prompt prefix is shared across same-length requests via
+the canonical :class:`PrefixShareRegistry` (copy-on-write when a shared
+partial page diverges), and when the pool runs dry the engine preempts
+the lowest-priority/latest-deadline in-flight request — pages freed,
+cursor + generated tokens + RNG key checkpointed, re-admitted through
+the front of the queue with its KV rebuilt by one batched forward, token
+stream bit-identical to an uninterrupted run.
 
 Compile caches: step functions are keyed on the tick's **occupancy
 signature** ``(n_full, n_cond)``, rounded up to power-of-two buckets so a
@@ -55,11 +66,13 @@ from repro.models import transformer as T
 from repro.serve.autotune import BudgetAutotuner
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import ArrivalQueue, ServeRequest
-from repro.serve.scheduler import Scheduler, TickPlan
-from repro.serve.state import (PageAllocator, StatePool, pages_for,
+from repro.serve.scheduler import (Scheduler, TickPlan, provision_growth)
+from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
+                               fresh_lazy_needs, pages_for, resume_lazy_needs,
                                stream_page_needs)
 
 KV_MODES = ("slot", "paged")
+RESERVATION_MODES = ("eager", "lazy")
 
 
 def _sample(logits, key, temperature):
@@ -103,6 +116,45 @@ class _RequestState:
         self.generated: list[int] = []
 
 
+class _ResumeState:
+    """Checkpoint of a preempted request: everything exact resume needs.
+
+    The KV pages themselves are *not* checkpointed — they are freed for
+    the preemptor and rebuilt at re-admission by one forward over
+    ``prompt + generated[:-1]`` (the positions the evicted run had already
+    written), scattered through fresh block tables. The per-request RNG
+    key and the plan cursor make the continuation bit-compatible with an
+    uninterrupted run.
+    """
+
+    def __init__(self, *, step: int, passes: int, generated: list[int],
+                 key: np.ndarray):
+        self.step = step                  # plan steps executed (== lstep)
+        self.passes = passes
+        self.generated = generated        # prefill token + one per step
+        self.key = key
+
+
+class _PrefillItem:
+    """One admission normalized for the batched bucketed prefill: fresh
+    eager/lazy admissions, prefix-sharing admissions (uncond scatter
+    masked), and resumes (longer token row, no token emitted)."""
+
+    def __init__(self, req: ServeRequest, slot: int, tokens: np.ndarray,
+                 true_len: int, u_mask_below: int | None, key: np.ndarray,
+                 emit: bool, u_tokens: np.ndarray | None = None):
+        self.req = req
+        self.slot = slot
+        self.tokens = tokens              # (true_len,) int32
+        self.true_len = true_len
+        self.u_mask_below = u_mask_below  # mask uncond scatter below this
+                                          # table column (None = mask all)
+        self.key = key
+        self.emit = emit
+        self.u_tokens = u_tokens          # uncond-stream row; None = all-null
+                                          # (resume: null prompt + generated)
+
+
 class ContinuousEngine:
     """Phase-aware continuous batching over a slot or paged KV arena.
 
@@ -122,9 +174,16 @@ class ContinuousEngine:
                  queue_depth: int = 256, bucket: bool = True,
                  kv: str = "slot", page_size: int = 8,
                  num_pages: int | None = None,
+                 reservation: str = "eager",
                  target_tick_s: float = 50e-3):
         if kv not in KV_MODES:
             raise ValueError(f"kv {kv!r} not in {KV_MODES}")
+        if reservation not in RESERVATION_MODES:
+            raise ValueError(f"reservation {reservation!r} not in "
+                             f"{RESERVATION_MODES}")
+        if reservation == "lazy" and kv != "paged":
+            raise ValueError('reservation="lazy" requires kv="paged" '
+                             "(the slot arena reserves whole rows)")
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -151,9 +210,12 @@ class ContinuousEngine:
                 else num_slots
             self._autotuner = None
 
+        self.reservation = reservation
         self.queue = ArrivalQueue(max_depth=queue_depth)
         self.pool = StatePool(num_slots)       # slot rows / host row ids
         self.pages: PageAllocator | None = None
+        self._prefix: PrefixShareRegistry | None = None
+        self._resume: dict[str, _ResumeState] = {}
         if kv == "paged":
             # fail fast on unpageable stacks (recurrent state, MLA latents)
             from repro.models import layers as L
@@ -161,6 +223,8 @@ class ContinuousEngine:
             self.num_pages = num_pages if num_pages is not None \
                 else 2 * num_slots * self.nb_max
             self.pages = PageAllocator(self.num_pages, page_size)
+            if reservation == "lazy":
+                self._prefix = PrefixShareRegistry(self.pages)
         self.scheduler = Scheduler(self.pass_budget, policy=policy,
                                    starvation_limit=starvation_limit)
         self.metrics = ServeMetrics()
@@ -233,7 +297,9 @@ class ContinuousEngine:
     def tick(self) -> TickPlan:
         t0 = time.perf_counter()
         now = self.tick_count
-        self.metrics.expired += len(self.queue.expire(now))
+        for dead in self.queue.expire(now):
+            self._resume.pop(dead.uid, None)   # a preempted request's ttl
+            self.metrics.expired += 1          # keeps running while queued
         if self._autotuner is not None and not self._autotuner.per_pass_s:
             self.autotune_budget()
         if self.kv == "paged":
@@ -243,6 +309,19 @@ class ContinuousEngine:
             self._admit(now)
             self._maybe_defrag()
         plan = self.scheduler.plan_tick()
+        if self.reservation == "lazy" and plan.in_flight:
+            # on-demand page growth / CoW detach / priority preemption —
+            # the same decision procedure the simulator replays offline
+            plan = provision_growth(
+                plan, self.scheduler, self.pages,
+                page_size=self.page_size,
+                pos_of=lambda uid: int(
+                    self._slots.pos[self._states[uid].slot]),
+                metrics=self.metrics,
+                preempt=lambda uid: self._preempt(uid, now),
+                copy_page=self._copy_page,
+                reclaim_cache=self._prefix.evict_under_pressure)
+            self.metrics.note_pages(self.pages.n_in_use)
         sampled = self._execute(plan) if plan.in_flight else []
         events = self.scheduler.commit(plan)
         for ev, nxt in zip(events, sampled):
@@ -264,7 +343,7 @@ class ContinuousEngine:
                     and state.cursor.mode is Mode.COND:
                 # the plan just crossed into its COND suffix: the uncond
                 # stream is dead, return its pages to the shared pool now
-                freed = self.pages.free(ev.uid, "u")
+                freed = self._release_uncond(ev.uid)
                 if freed:
                     self.metrics.on_reclaim(freed)
         self.metrics.record_tick(
@@ -323,7 +402,7 @@ class ContinuousEngine:
             state = _RequestState(req, cursor, slot)
             self._states[req.uid] = state
             self.scheduler.admit(req.uid, slot, cursor, arrival=req.arrival,
-                                 deadline=req.deadline)
+                                 deadline=req.deadline, priority=req.priority)
 
             key = np.asarray(jax.random.fold_in(self._base_key, self._req_seq))
             self._req_seq += 1
@@ -351,90 +430,231 @@ class ContinuousEngine:
             self.metrics.on_token(req.uid, now)       # TTFT: prefill emits
 
     def _admit_paged(self, now: int) -> None:
-        """Pop admissible requests (row + full worst-case page reservation
-        available), then prefill them in per-length-bucket batches — one
-        compile serves k>1 simultaneous admissions of a bucket."""
+        """Pop admissible requests, then prefill them in per-length-bucket
+        batches — one compile serves k>1 simultaneous admissions of a
+        bucket. Under ``reservation="eager"`` admission requires the full
+        worst-case page span; under ``"lazy"`` only the prompt pages
+        (decode pages grow on demand), the uncond prompt prefix is shared
+        through the canonical registry, and preempted requests re-admit
+        through the same batched prefill (their KV rebuilt from
+        prompt + generated tokens, no token emitted)."""
         quota = min(self.scheduler.admission_quota(self.pool.n_free),
                     self.prefills_per_tick)
-        batch: list[tuple[ServeRequest, int, int, np.ndarray]] = []
+        batch: list[_PrefillItem] = []
+        lazy = self.reservation == "lazy"
         while len(batch) < quota:
             req = self.queue.peek()
             if req is None:
                 break
             plan = self._plan_for(req)
             S = self._prompt_len_for(req)
-            need_c, need_u = stream_page_needs(plan, S, self.page_size)
-            if self.pages.n_free < need_c + need_u:
+            if lazy and req.uid in self._resume:
+                item = self._try_admit_resume(req, plan, S, now)
+            elif lazy:
+                item = self._try_admit_lazy(req, plan, S, now)
+            else:
+                item = self._try_admit_eager(req, plan, S, now)
+            if item is None:
                 break                         # head-of-line waits for pages
-            self.queue.pop()
-            cursor = PlanCursor(plan)
-            slot = self.pool.alloc(req.uid)
-            assert slot is not None
-            self.pages.alloc(req.uid, "c", need_c)
-            if need_u:
-                self.pages.alloc(req.uid, "u", need_u)
-            self._states[req.uid] = _RequestState(req, cursor, slot)
-            self.scheduler.admit(req.uid, slot, cursor, arrival=req.arrival,
-                                 deadline=req.deadline)
-            key = np.asarray(jax.random.fold_in(self._base_key, self._req_seq))
-            self._req_seq += 1
-            self._slots.pos[slot] = S
-            self._slots.scale[slot] = req.guidance_scale
-            self._slots.temp[slot] = req.temperature
-            self._slots.lstep[slot] = 0
-            self._slots.key[slot] = key
-            batch.append((req, slot, S, key))
+            batch.append(item)
         if not batch:
             return
         if self._pool_p is None:
             self._init_paged_pool()
         groups: dict[int, list] = {}
         for item in batch:
-            groups.setdefault(_bucket(item[2]), []).append(item)
+            groups.setdefault(_bucket(item.true_len), []).append(item)
         for Sb in sorted(groups):
             self._prefill_paged_group(Sb, groups[Sb], now)
 
-    def _prefill_paged_group(self, Sb: int, items: list, now: int) -> None:
+    def _admit_common(self, req: ServeRequest, cursor: PlanCursor,
+                      pos: int) -> int:
+        """Slot-row claim + scheduler admission + per-slot scalars shared
+        by the eager / lazy / resume paged admission paths."""
+        slot = self.pool.alloc(req.uid)
+        assert slot is not None
+        state = _RequestState(req, cursor, slot)
+        self._states[req.uid] = state
+        self.scheduler.admit(req.uid, slot, cursor, arrival=req.arrival,
+                             deadline=req.deadline, priority=req.priority)
+        self._slots.pos[slot] = pos
+        self._slots.scale[slot] = req.guidance_scale
+        self._slots.temp[slot] = req.temperature
+        return slot
+
+    def _fresh_key(self) -> np.ndarray:
+        key = np.asarray(jax.random.fold_in(self._base_key, self._req_seq))
+        self._req_seq += 1
+        return key
+
+    def _try_admit_eager(self, req: ServeRequest, plan: GuidancePlan,
+                         S: int, now: int) -> _PrefillItem | None:
+        need_c, need_u = stream_page_needs(plan, S, self.page_size)
+        if self.pages.n_free < need_c + need_u:
+            return None
+        self.queue.pop()
+        self.pages.alloc(req.uid, "c", need_c)
+        if need_u:
+            self.pages.alloc(req.uid, "u", need_u)
+        slot = self._admit_common(req, PlanCursor(plan), S)
+        key = self._fresh_key()
+        self._slots.lstep[slot] = 0
+        self._slots.key[slot] = key
+        return _PrefillItem(req, slot, self._tokenize(req.prompt, S)[0],
+                            S, 0, key, emit=True)
+
+    def _try_admit_lazy(self, req: ServeRequest, plan: GuidancePlan,
+                        S: int, now: int) -> _PrefillItem | None:
+        shared = self._prefix.lookup(S) is not None
+        need_c, need_u, wants_u = fresh_lazy_needs(plan, S, self.page_size,
+                                                   shared=shared)
+        if self.pages.n_free < need_c + need_u:
+            return None
+        self.queue.pop()
+        self.pages.alloc(req.uid, "c", need_c)
+        u_mask: int | None = 0                 # founder scatters everything
+        if wants_u and shared:
+            got = self._prefix.acquire(S, req.uid)
+            self.metrics.on_share(len(got))
+            u_mask = None                      # canonical content: no writes
+        elif wants_u:
+            self.pages.alloc(req.uid, "u", need_u)
+            self._prefix.publish(S, req.uid)   # this prefill is canonical
+        slot = self._admit_common(req, PlanCursor(plan), S)
+        key = self._fresh_key()
+        self._slots.lstep[slot] = 0
+        self._slots.key[slot] = key
+        return _PrefillItem(req, slot, self._tokenize(req.prompt, S)[0],
+                            S, u_mask, key, emit=True)
+
+    def _try_admit_resume(self, req: ServeRequest, plan: GuidancePlan,
+                          S: int, now: int) -> _PrefillItem | None:
+        rs = self._resume[req.uid]
+        shared = self._prefix.lookup(S) is not None
+        need_c, need_u, wants_u, n_share = resume_lazy_needs(
+            plan, rs.step, S, self.page_size, shared=shared)
+        if self.pages.n_free < need_c + need_u:
+            return None
+        self.queue.pop()
+        del self._resume[req.uid]
+        self.pages.alloc(req.uid, "c", need_c)
+        u_mask: int | None = None
+        if wants_u:
+            if n_share:
+                self._prefix.acquire(S, req.uid, count=n_share)
+                self.metrics.on_share(n_share)
+                if need_u:
+                    self.pages.grow(req.uid, "u", need_u)
+                u_mask = n_share               # write only the private tail
+            else:
+                self.pages.alloc(req.uid, "u", need_u)
+                u_mask = 0
+        L = S + rs.step
+        cursor = PlanCursor(plan, step=rs.step, passes_executed=rs.passes)
+        slot = self._admit_common(req, cursor, L)
+        state = self._states[req.uid]
+        state.generated = list(rs.generated)
+        self._slots.tok[slot] = rs.generated[-1]
+        self._slots.lstep[slot] = rs.step
+        self._slots.key[slot] = rs.key
+        self.metrics.on_resume(req.uid, now)
+        row = np.concatenate([self._tokenize(req.prompt, S)[0],
+                              np.asarray(rs.generated[:-1], np.int32)])
+        # the uncond stream consumed the *sampled* tokens during decode:
+        # null the prompt only, replay the generated suffix verbatim
+        u_row = row.copy()
+        u_row[:S] = PAD
+        return _PrefillItem(req, slot, row, L, u_mask, rs.key, emit=False,
+                            u_tokens=u_row)
+
+    def _prefill_paged_group(self, Sb: int, items: list[_PrefillItem],
+                             now: int) -> None:
         kb = _bucket(len(items))
         nb_pre = pages_for(Sb, self.page_size)
         tokens = np.full((kb, Sb), PAD, np.int32)
+        tokens_u = np.full((kb, Sb), PAD, np.int32)   # PAD == null token
         true_len = np.ones(kb, np.int32)
         btc = np.full((kb, nb_pre), self.num_pages, np.int32)
         btu = np.full((kb, nb_pre), self.num_pages, np.int32)
         keys = np.zeros((kb, 2), np.uint32)
         scales = np.zeros(kb, np.float32)
         temps = np.zeros(kb, np.float32)
-        for i, (req, _slot, S, key) in enumerate(items):
-            tokens[i, :S] = self._tokenize(req.prompt, S)[0]
-            true_len[i] = S
-            btc[i] = self.pages.table(req.uid, "c", nb_pre)
-            btu[i] = self.pages.table(req.uid, "u", nb_pre)
-            keys[i] = key
-            scales[i] = req.guidance_scale
-            temps[i] = req.temperature
+        for i, it in enumerate(items):
+            tokens[i, :it.true_len] = it.tokens
+            if it.u_tokens is not None:
+                tokens_u[i, :it.true_len] = it.u_tokens
+            true_len[i] = it.true_len
+            btc[i] = self.pages.table(it.req.uid, "c", nb_pre)
+            tu = self.pages.table(it.req.uid, "u", nb_pre)
+            if it.u_mask_below is None:
+                tu[:] = self.num_pages         # shared/absent: writes drop
+            else:
+                tu[:it.u_mask_below] = self.num_pages
+            btu[i] = tu
+            keys[i] = it.key
+            scales[i] = it.req.guidance_scale
+            temps[i] = it.req.temperature
         fn = self._paged_prefill_fn(Sb, kb)
         self._pool_p, tok0 = fn(self.params, self._pool_p,
-                                jnp.asarray(tokens), jnp.asarray(true_len),
+                                jnp.asarray(tokens), jnp.asarray(tokens_u),
+                                jnp.asarray(true_len),
                                 jnp.asarray(btc), jnp.asarray(btu),
                                 jnp.asarray(keys), jnp.asarray(scales),
                                 jnp.asarray(temps))
         tok0 = np.asarray(tok0)
-        for i, (req, slot, _S, _key) in enumerate(items):
-            state = self._states[req.uid]
-            self.metrics.on_admit(req.uid, now)
+        for i, it in enumerate(items):
+            if not it.emit:
+                continue                       # resume: KV rebuilt, no emit
+            state = self._states[it.req.uid]
+            self.metrics.on_admit(it.req.uid, now)
             t0 = int(tok0[i])
             if self.stop_on_eos and t0 == EOS:
-                self._finalize(req.uid, now)
+                self._finalize(it.req.uid, now)
                 continue
-            self._slots.tok[slot] = t0
+            self._slots.tok[it.slot] = t0
             state.generated.append(t0)
-            self.metrics.on_token(req.uid, now)       # TTFT: prefill emits
+            self.metrics.on_token(it.req.uid, now)    # TTFT: prefill emits
+
+    def _release_uncond(self, uid: str) -> int:
+        """Free a request's unconditional pages at the COND transition,
+        dropping its prefix-registry membership with them. Canonical
+        pages the registry frees here (the departing request was the
+        entry's last user) count toward the reclaim too — they return to
+        the pool mid-flight just the same."""
+        freed = self.pages.free(uid, "u")
+        if self._prefix is not None:
+            freed += self._prefix.release(uid)
+        return freed
+
+    def _preempt(self, uid: str, now: int) -> None:
+        """RUNNING -> PREEMPTED: evict ``uid`` back to the queue. Its
+        pages are freed for the preemptor; the plan cursor, generated
+        tokens and RNG key are checkpointed so the eventual resume is
+        token-identical to an uninterrupted run."""
+        state = self._states.pop(uid)
+        self._resume[uid] = _ResumeState(
+            step=state.cursor.step, passes=state.cursor.passes_executed,
+            generated=list(state.generated),
+            key=self._slots.key[state.slot].copy())
+        self.pool.free(state.slot)
+        self.pages.free_all(uid)
+        self._prefix.release(uid)
+        self.scheduler.release(uid)
+        self.queue.requeue(state.req)
+        self.metrics.on_preempt(uid, now)
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Device copy backing a CoW detach (page payload, all layers)."""
+        fn = self._copy_page_fn()
+        self._pool_p = fn(self._pool_p, np.int32(src), np.int32(dst))
 
     def _finalize(self, uid: str, now: int) -> None:
         state = self._states.pop(uid)
         self.pool.free(state.slot)
         if self.pages is not None:
             self.pages.free_all(uid)
+            if self._prefix is not None:
+                self._prefix.release(uid)
         self.scheduler.release(uid)
         self.results[uid] = state.generated
         self.metrics.on_complete(uid, now, state.cursor.passes_executed)
@@ -528,11 +748,14 @@ class ContinuousEngine:
             return pool_leaf.at[pages, offs].set(
                 vals.astype(pool_leaf.dtype), mode="drop")
 
-        def fn(params, pool, tokens, true_len, btc, btu, keys, scales, temps):
+        def fn(params, pool, tokens, tokens_u, true_len, btc, btu, keys,
+               scales, temps):
             h_c, caches_c, _ = T.forward(params, cfg, tokens,
                                          want_caches=True, rules=rules)
-            h_u, caches_u, _ = T.forward(params, cfg,
-                                         AR.null_prompt(tokens),
+            # tokens_u is the explicit null stream: all-PAD for fresh
+            # admissions (== AR.null_prompt), null prompt + replayed
+            # generated suffix for preemption resumes
+            h_u, caches_u, _ = T.forward(params, cfg, tokens_u,
                                          want_caches=True, rules=rules)
             last = (true_len - 1)[:, None, None]
             take = lambda h: jnp.take_along_axis(
@@ -657,6 +880,21 @@ class ContinuousEngine:
                 take = lambda a: a[src]
                 return jax.tree.map(take, pool_c), jax.tree.map(take, pool_u)
             self._jit[key] = jax.jit(fn, donate_argnums=self._donate(0, 1))
+        return self._jit[key]
+
+    def _copy_page_fn(self):
+        """CoW payload copy ``pool[dst] = pool[src]`` across every layer
+        leaf (stacked segments carry a leading layers axis). ``src``/
+        ``dst`` are traced scalars: one compile serves every detach."""
+        key = ("copy_page",)
+        if key not in self._jit:
+            def fn(pool, src, dst):
+                def one(leaf):
+                    if leaf.ndim == 5:              # (layers, P, ps, K, hd)
+                        return leaf.at[:, dst].set(leaf[:, src])
+                    return leaf.at[dst].set(leaf[src])
+                return jax.tree.map(one, pool)
+            self._jit[key] = jax.jit(fn, donate_argnums=self._donate(0))
         return self._jit[key]
 
     # -- pass-budget autotuning (roofline hook) ----------------------------

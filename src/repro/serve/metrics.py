@@ -64,6 +64,13 @@ class ServeMetrics:
     pages_reclaimed: int = 0     # paged arena: pages returned before
                                  # completion (COND-transition reclaim)
     peak_pages_in_use: int = 0   # paged arena: high-water page occupancy
+    pages_grown: int = 0         # lazy reservation: pages granted on demand
+                                 # at tick boundaries (vs reserved up front)
+    shared_page_hits: int = 0    # uncond prompt-prefix pages served by the
+                                 # canonical copy instead of a fresh grant
+    cow_copies: int = 0          # shared pages detached copy-on-write
+    preemptions: int = 0         # in-flight requests evicted back to queue
+    resumes: int = 0             # preempted requests re-admitted
     tokens_emitted: int = 0
     completed: int = 0
     expired: int = 0
@@ -100,6 +107,29 @@ class ServeMetrics:
         """Pages returned to the pool *before* request completion — the
         COND-transition HBM saving the paged arena exists to measure."""
         self.pages_reclaimed += pages
+
+    def on_grow(self, pages: int) -> None:
+        """Pages granted on demand at a tick boundary (lazy reservation)."""
+        self.pages_grown += pages
+
+    def on_share(self, pages: int) -> None:
+        """Uncond prefix pages served from the canonical shared copy."""
+        self.shared_page_hits += pages
+
+    def on_cow(self) -> None:
+        """A shared page detached copy-on-write ahead of a decode write."""
+        self.cow_copies += 1
+
+    def on_preempt(self, uid: str, tick: float) -> None:
+        """An in-flight request evicted back to the queue (pages freed,
+        cursor/tokens checkpointed for exact resume)."""
+        self.preemptions += 1
+
+    def on_resume(self, uid: str, tick: float) -> None:
+        """A preempted request re-admitted: its KV is rebuilt by one
+        forward over prompt + generated tokens (both streams run)."""
+        self.resumes += 1
+        self.prefill_passes += 2
 
     def on_arrival(self, uid: str, tick: float) -> None:
         self.timelines[uid] = RequestTimeline(arrival=tick)
@@ -160,6 +190,11 @@ class ServeMetrics:
             "utilization": round(self.utilization(), 3),
             "pages_reclaimed": self.pages_reclaimed,
             "peak_pages_in_use": self.peak_pages_in_use,
+            "pages_grown": self.pages_grown,
+            "shared_page_hits": self.shared_page_hits,
+            "cow_copies": self.cow_copies,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
             "mean_ttft": self.mean_ttft(),
             "mean_tpot": self.mean_tpot(),
             "wall_s": round(self.wall_s, 4),

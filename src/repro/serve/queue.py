@@ -27,7 +27,10 @@ class ServeRequest:
     per-request (the static engine's single-bucket flattening of these was a
     bug); ``plan`` overrides the suffix plan the engine would otherwise
     build; ``ttl`` is a deadline in ticks relative to arrival (``None`` =
-    never expires).
+    never expires); ``priority`` layers under the scheduler's EDF/aging
+    guard (larger = packs first, preempted last — lazy-reservation engines
+    evict the lowest-priority in-flight request when the page pool runs
+    dry).
     """
 
     uid: str
@@ -40,6 +43,7 @@ class ServeRequest:
     ttl: float | None = None
     prompt_len: int | None = None   # paged engines admit mixed lengths;
                                     # None = the engine-wide default
+    priority: int = 0
 
     # set by the queue at push time
     arrival: float = field(default=0.0, init=False)
@@ -52,6 +56,7 @@ class QueueStats:
     rejected: int = 0
     expired: int = 0
     popped: int = 0
+    requeued: int = 0
 
 
 class ArrivalQueue:
@@ -86,6 +91,16 @@ class ArrivalQueue:
         req.deadline = None if req.ttl is None else now + req.ttl
         self._q.append(req)
         return True
+
+    def requeue(self, req: ServeRequest) -> None:
+        """Return a preempted request to the *front* of the queue,
+        preserving its original arrival and deadline (the eviction is the
+        engine's doing, not the request's — it must not lose its FCFS
+        standing or gain fresh deadline budget). Bypasses the depth bound:
+        the request was already admitted once and its state is
+        checkpointed; dropping it here would lose work."""
+        self.stats.requeued += 1
+        self._q.appendleft(req)
 
     def expire(self, now: float) -> list[ServeRequest]:
         """Drop (and return) every queued request whose deadline passed."""

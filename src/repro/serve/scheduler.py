@@ -17,10 +17,18 @@ Policies
   ``starvation_limit`` ticks it is promoted to the front of the order and,
   if it still does not fit, packing stops behind it so the budget frees up
   next tick (bounded wait even under adversarial COND floods). Within each
-  class (starved, fresh) deadline-bearing requests pack earliest-deadline
-  first (EDF); deadline-free requests keep pure FCFS order behind them, so
+  class (starved, fresh) higher ``priority`` packs first; inside a priority
+  level deadline-bearing requests pack earliest-deadline first (EDF) and
+  deadline-free requests keep pure FCFS order behind them, so
   latency-sensitive traffic jumps the line without touching the aging
   guard's starvation bound.
+
+The same priorities drive **preemption** under lazy page reservation:
+:func:`victim_key` is a strict total order (lowest priority, latest
+deadline, youngest admission evicts first) and :func:`provision_growth`
+evicts along it when the page pool runs dry, checkpointing nothing here —
+the engine owns the RUNNING -> PREEMPTED -> QUEUED -> RUNNING state
+machine (DESIGN.md §10); this module only decides *who*.
 * ``"static"`` — the seed engine's behavior as a policy: the resident
   batch steps in lockstep and admission opens only when the batch has
   fully drained. Used as the baseline in ``sim`` and benchmarks.
@@ -48,6 +56,8 @@ class ActiveRequest:
     seq: int = 0                  # admission order, the FCFS key
     skipped_ticks: int = 0        # consecutive ticks passed over
     deadline: float | None = None # EDF key within a class (None = last)
+    priority: int = 0             # larger = more important (packs first,
+                                  # preempted last)
 
     @property
     def edf_key(self) -> tuple:
@@ -56,6 +66,27 @@ class ActiveRequest:
         return (self.deadline is None,
                 self.deadline if self.deadline is not None else 0.0,
                 self.seq)
+
+    @property
+    def pack_key(self) -> tuple:
+        """Packing order inside a starved/fresh class: priority classes
+        first, EDF/FCFS within a class — priorities layer *under* the
+        aging guard, so the starvation bound is untouched."""
+        return (-self.priority,) + self.edf_key
+
+
+_LATEST = float("inf")
+
+
+def victim_key(e: ActiveRequest) -> tuple:
+    """Total preemption order, ascending = evict first: lowest priority,
+    then latest deadline (deadline-free = latest of all), then youngest
+    admission (least progress lost; ``seq`` makes the order strict, so
+    preemption can never cycle — the globally strongest request always
+    runs to completion and frees its pages)."""
+    return (e.priority,
+            -(e.deadline if e.deadline is not None else _LATEST),
+            -e.seq)
 
 
 @dataclass(frozen=True)
@@ -126,19 +157,26 @@ class Scheduler:
         return sorted(self._active.values(), key=lambda e: e.seq)
 
     def admit(self, uid: str, slot: int, cursor: PlanCursor, *,
-              arrival: float = 0.0,
-              deadline: float | None = None) -> ActiveRequest:
+              arrival: float = 0.0, deadline: float | None = None,
+              priority: int = 0) -> ActiveRequest:
         if uid in self._active:
             raise ValueError(f"uid {uid!r} already active")
         cursor.plan.validate_for_ar()
         entry = ActiveRequest(uid, slot, cursor, arrival, self._seq,
-                              deadline=deadline)
+                              deadline=deadline, priority=priority)
         self._seq += 1
         self._active[uid] = entry
         return entry
 
     def release(self, uid: str) -> None:
         del self._active[uid]
+
+    def victim(self, exclude: str) -> ActiveRequest | None:
+        """The in-flight request the preemption order evicts first
+        (lowest priority, latest deadline, youngest), never ``exclude``;
+        None when nothing else is active."""
+        cands = [e for e in self._active.values() if e.uid != exclude]
+        return min(cands, key=victim_key) if cands else None
 
     def reslot(self, uid: str, slot: int) -> None:
         """Point an active request at a new arena slot (defragmentation)."""
@@ -176,10 +214,10 @@ class Scheduler:
         # first; deadline-free requests keep pure FCFS behind them.
         starved = sorted((e for e in self.active()
                           if e.skipped_ticks >= self.starvation_limit),
-                         key=lambda e: e.edf_key)
+                         key=lambda e: e.pack_key)
         fresh = sorted((e for e in self.active()
                         if e.skipped_ticks < self.starvation_limit),
-                       key=lambda e: e.edf_key)
+                       key=lambda e: e.pack_key)
         remaining = self.pass_budget
         full: list[ActiveRequest] = []
         cond: list[ActiveRequest] = []
@@ -215,3 +253,80 @@ class Scheduler:
             if entry.uid not in scheduled:
                 entry.skipped_ticks += 1
         return events
+
+
+def provision_growth(plan: TickPlan, sched: Scheduler, pages, *,
+                     page_size: int, pos_of, metrics, preempt,
+                     copy_page=None, reclaim_cache=None) -> TickPlan:
+    """Grant the pages this tick's writes need — growing, copy-on-write
+    detaching, or preempting — and return the (possibly filtered) plan.
+
+    The lazy-reservation core, shared verbatim by the engine and the
+    offline simulator so their ``pages_grown``/``preemptions``/
+    ``cow_copies`` counts agree tick for tick. For each scheduled entry,
+    strongest first (descending :func:`victim_key`), every stream the
+    step writes ("c", plus "u" for FULL steps) must have a *private* page
+    covering the write position:
+
+    * position beyond the block table -> :meth:`PageAllocator.grow`;
+    * position lands in a shared page (uncond prompt prefix) ->
+      :meth:`PageAllocator.cow` + ``copy_page(src, dst)`` device copy;
+    * pool dry -> first evict prefix-registry cache entries
+      (``reclaim_cache()``: frees stranded canonical pages and un-shares
+      pages whose CoW was the whole problem — cache eviction is free,
+      preemption loses work), then evict the weakest *strictly weaker*
+      in-flight request via ``preempt(uid)`` (which must free its pages)
+      and retry; no such victim -> defer this entry (dropped from the
+      plan, keeps its pages, ages toward the starvation guard).
+
+    Because the victim order is strict and total, the strongest entry can
+    always either grow or evict, so the engine never livelocks: at least
+    one request makes progress every tick the pool is contended.
+    """
+    entries = sorted(plan.full + plan.cond, key=victim_key, reverse=True)
+    dropped: set[str] = set()
+    kept: set[str] = set()
+    deferred: list[str] = []
+    for entry in entries:
+        if entry.uid in dropped:
+            continue
+        idx = pos_of(entry.uid) // page_size
+        streams = ("c", "u") if entry.cursor.mode is Mode.FULL else ("c",)
+        ok = True
+        for stream in streams:
+            while ok:
+                owned = pages.owned(entry.uid, stream)
+                if idx < len(owned):
+                    if pages.refcount(owned[idx]) == 1:
+                        break                        # private: writable
+                    got = pages.cow(entry.uid, stream, idx)
+                    if got is not None:
+                        if copy_page is not None:
+                            copy_page(*got)
+                        metrics.on_cow()
+                        break
+                else:
+                    grown = pages.grow(entry.uid, stream, 1)
+                    if grown is not None:
+                        metrics.on_grow(len(grown))
+                        break
+                if reclaim_cache is not None and reclaim_cache():
+                    continue                         # retry: cache evicted
+                victim = sched.victim(exclude=entry.uid)
+                if victim is None or \
+                        not victim_key(victim) < victim_key(entry):
+                    ok = False                       # defer: no weaker victim
+                    break
+                preempt(victim.uid)
+                dropped.add(victim.uid)
+            if not ok:
+                break
+        if ok:
+            kept.add(entry.uid)
+        else:
+            deferred.append(entry.uid)
+    if not dropped and not deferred:
+        return plan
+    return TickPlan(tuple(e for e in plan.full if e.uid in kept),
+                    tuple(e for e in plan.cond if e.uid in kept),
+                    plan.budget, plan.skipped + tuple(deferred))

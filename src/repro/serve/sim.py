@@ -21,8 +21,9 @@ import numpy as np
 from repro.core.selective import GuidancePlan, Mode, PlanCursor
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import ArrivalQueue, ServeRequest
-from repro.serve.scheduler import Scheduler
-from repro.serve.state import (PageAllocator, StatePool, pages_for,
+from repro.serve.scheduler import Scheduler, provision_growth
+from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
+                               fresh_lazy_needs, pages_for, resume_lazy_needs,
                                stream_page_needs)
 
 
@@ -34,6 +35,7 @@ class SimRequest:
     ttl: float | None = None
     prompt_len: int = 8                # paged arena: mixed lengths share
                                        # one pool (slot sim ignores this)
+    priority: int = 0                  # packs first, preempted last
 
     @property
     def full_steps(self) -> int:
@@ -75,20 +77,36 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
              policy: str = "phase", starvation_limit: int = 4,
              prefills_per_tick: int | None = None, queue_depth: int = 4096,
              max_ticks: int = 100_000, kv: str = "slot",
-             page_size: int = 4, num_pages: int | None = None) -> SimReport:
+             page_size: int = 4, num_pages: int | None = None,
+             reservation: str = "eager", on_tick=None) -> SimReport:
     """Replay ``trace`` against a scheduler policy; returns a
     :class:`SimReport` whose metrics mirror the real engine's.
 
     ``kv="paged"`` replays the same trace against the paged-arena
-    bookkeeping (the real :class:`PageAllocator`): admission additionally
-    reserves each request's worst-case pages (uncond = FULL prefix only),
-    unconditional pages are reclaimed at the FULL->COND transition, and
-    per-tick ``pages_in_use`` / ``pages_reclaimed`` land in the metrics.
+    bookkeeping (the real :class:`PageAllocator`): under
+    ``reservation="eager"`` admission reserves each request's worst-case
+    pages (uncond = FULL prefix only); under ``"lazy"`` admission grants
+    prompt pages only and the tick loop replays the engine's exact
+    on-demand growth / uncond prefix sharing / priority preemption
+    decision procedure (:func:`repro.serve.scheduler.provision_growth` —
+    literally the same function the engine calls), so ``pages_grown``,
+    ``shared_page_hits``, ``cow_copies`` and ``preemptions`` measured
+    offline equal the real engine's on the same trace. Unconditional
+    pages are reclaimed at the FULL->COND transition either way.
+
+    ``on_tick(tick, pages, sched, queue)``, when given, runs at the end
+    of every simulated tick — the serve-invariant harness hooks
+    :meth:`PageAllocator.check` here.
     """
+    if reservation not in ("eager", "lazy"):
+        raise ValueError(reservation)
+    if reservation == "lazy" and kv != "paged":
+        raise ValueError('reservation="lazy" requires kv="paged"')
     trace = sorted(trace, key=lambda r: (r.arrival, r.uid))
     queue = ArrivalQueue(max_depth=queue_depth)
     pool = StatePool(num_slots)
     pages: PageAllocator | None = None
+    prefix: PrefixShareRegistry | None = None
     need_of: dict[str, tuple[int, int]] = {}
     if kv == "paged":
         cap = max((r.prompt_len + r.plan.total_steps for r in trace),
@@ -96,6 +114,8 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
         if num_pages is None:
             num_pages = 2 * num_slots * pages_for(cap, page_size)
         pages = PageAllocator(num_pages, page_size)
+        if reservation == "lazy":
+            prefix = PrefixShareRegistry(pages)
         for r in trace:
             need_of[r.uid] = stream_page_needs(r.plan, r.prompt_len,
                                                page_size)
@@ -104,9 +124,29 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
     metrics = ServeMetrics()
     report = SimReport(metrics)
     cursors: dict[str, PlanCursor] = {}
+    sim_req: dict[str, SimRequest] = {r.uid: r for r in trace}
+    req_of: dict[str, ServeRequest] = {}
+    resume: dict[str, tuple[int, int]] = {}       # uid -> (step, passes)
     last_scheduled: dict[str, int] = {}
     next_arrival = 0
     tick = 0
+
+    def release_uncond(uid: str) -> int:
+        # canonical pages freed with the last user count as reclaimed too
+        freed = pages.free(uid, "u")
+        if prefix is not None:
+            freed += prefix.release(uid)
+        return freed
+
+    def preempt(uid: str) -> None:
+        entry = sched._active[uid]
+        resume[uid] = (cursors[uid].step, cursors[uid].passes_executed)
+        pool.free(entry.slot)
+        pages.free_all(uid)
+        prefix.release(uid)
+        sched.release(uid)
+        queue.requeue(req_of[uid])
+        metrics.on_preempt(uid, tick)
 
     def drained() -> bool:
         return (next_arrival >= len(trace) and len(queue) == 0
@@ -120,14 +160,17 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             sr = trace[next_arrival]
             next_arrival += 1
             req = ServeRequest(sr.uid, prompt=[], ttl=sr.ttl, plan=sr.plan,
-                               prompt_len=sr.prompt_len)
+                               prompt_len=sr.prompt_len, priority=sr.priority)
+            req_of[sr.uid] = req
             metrics.on_arrival(sr.uid, tick)
             if pages is not None and sum(need_of[sr.uid]) > pages.num_pages:
                 metrics.rejected += 1       # can never fit: don't wedge FCFS
             elif not queue.push(req, tick):
                 metrics.rejected += 1
         # deadline expiry
-        metrics.expired += len(queue.expire(tick))
+        for dead in queue.expire(tick):
+            resume.pop(dead.uid, None)
+            metrics.expired += 1
         # admission
         quota = sched.admission_quota(pool.n_free)
         if prefills_per_tick is not None:
@@ -136,29 +179,79 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             req = queue.peek()
             if req is None:
                 break
-            if pages is not None:
-                need_c, need_u = need_of[req.uid]
+            uid = req.uid
+            S = sim_req[uid].prompt_len
+            resumed = False
+            if pages is None:
+                queue.pop()
+            elif reservation == "lazy" and uid in resume:
+                step, passes = resume[uid]
+                shared = prefix.lookup(S) is not None
+                need_c, need_u, wants_u, n_share = resume_lazy_needs(
+                    req.plan, step, S, page_size, shared=shared)
                 if pages.n_free < need_c + need_u:
                     break              # head-of-line waits for pages
                 queue.pop()
-                pages.alloc(req.uid, "c", need_c)
-                if need_u:
-                    pages.alloc(req.uid, "u", need_u)
-            else:
+                del resume[uid]
+                pages.alloc(uid, "c", need_c)
+                if wants_u:
+                    if n_share:
+                        prefix.acquire(S, uid, count=n_share)
+                        metrics.on_share(n_share)
+                        if need_u:
+                            pages.grow(uid, "u", need_u)
+                    else:
+                        pages.alloc(uid, "u", need_u)
+                resumed = True
+                cursor = PlanCursor(req.plan, step=step,
+                                    passes_executed=passes)
+            elif reservation == "lazy":
+                shared = prefix.lookup(S) is not None
+                need_c, need_u, wants_u = fresh_lazy_needs(
+                    req.plan, S, page_size, shared=shared)
+                if pages.n_free < need_c + need_u:
+                    break              # head-of-line waits for pages
                 queue.pop()
-            slot = pool.alloc(req.uid)
+                pages.alloc(uid, "c", need_c)
+                if wants_u and shared:
+                    got = prefix.acquire(S, uid)
+                    metrics.on_share(len(got))
+                elif wants_u:
+                    pages.alloc(uid, "u", need_u)
+                    prefix.publish(S, uid)
+            else:
+                need_c, need_u = need_of[uid]
+                if pages.n_free < need_c + need_u:
+                    break              # head-of-line waits for pages
+                queue.pop()
+                pages.alloc(uid, "c", need_c)
+                if need_u:
+                    pages.alloc(uid, "u", need_u)
+            slot = pool.alloc(uid)
             assert slot is not None
-            cursor = PlanCursor(req.plan)
-            cursors[req.uid] = cursor
-            sched.admit(req.uid, slot, cursor, arrival=req.arrival,
-                        deadline=req.deadline)
-            last_scheduled[req.uid] = tick
-            metrics.on_admit(req.uid, tick)
-            metrics.on_token(req.uid, tick)        # prefill emits token 0
+            if not resumed:
+                cursor = PlanCursor(req.plan)
+            cursors[uid] = cursor
+            sched.admit(uid, slot, cursor, arrival=req.arrival,
+                        deadline=req.deadline, priority=req.priority)
+            last_scheduled[uid] = tick
+            if resumed:
+                metrics.on_resume(uid, tick)       # KV rebuilt, no emit
+            else:
+                metrics.on_admit(uid, tick)
+                metrics.on_token(uid, tick)        # prefill emits token 0
         if pages is not None:
             metrics.note_pages(pages.n_in_use)
-        # pack + execute (bookkeeping only)
+        # pack + provision (lazy growth / CoW / preemption) + execute
         plan = sched.plan_tick()
+        if reservation == "lazy" and plan.in_flight:
+            plan = provision_growth(
+                plan, sched, pages, page_size=page_size,
+                pos_of=lambda uid: sim_req[uid].prompt_len
+                + cursors[uid].step,
+                metrics=metrics, preempt=preempt,
+                reclaim_cache=prefix.evict_under_pressure)
+            metrics.note_pages(pages.n_in_use)
         events = sched.commit(plan)
         for ev in events:
             report.max_wait = max(report.max_wait,
@@ -169,11 +262,13 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                 metrics.on_token(ev.uid, tick)     # step i emits token i+1
                 if pages is not None and ev.mode is Mode.FULL \
                         and cursor.mode is Mode.COND:
-                    metrics.on_reclaim(pages.free(ev.uid, "u"))
+                    metrics.on_reclaim(release_uncond(ev.uid))
             else:
                 pool.free(ev.slot)
                 if pages is not None:
                     pages.free_all(ev.uid)
+                    if prefix is not None:
+                        prefix.release(ev.uid)
                 sched.release(ev.uid)
                 metrics.on_complete(ev.uid, tick, cursor.passes_executed)
                 report.completions[ev.uid] = tick
@@ -181,6 +276,8 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                             budget=plan.budget, active=sched.n_active,
                             queue_depth=len(queue),
                             pages_in_use=pages.n_in_use if pages else 0)
+        if on_tick is not None:
+            on_tick(tick, pages, sched, queue)
         tick += 1
     return report
 

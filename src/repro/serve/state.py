@@ -134,7 +134,7 @@ def stream_page_needs(plan, prompt_len: int,
     its FULL prefix — and none at all under an all-COND plan, so
     selective guidance halves a late-phase request's HBM from admission.
     The single definition shared by engine admission, submit-time
-    validation and the simulator (reservation policy: all pages are
+    validation and the simulator (``reservation="eager"``: all pages are
     granted up front, so a request can never wedge mid-decode).
     """
     from repro.core.selective import Mode
@@ -142,6 +142,49 @@ def stream_page_needs(plan, prompt_len: int,
     need_c = pages_for(prompt_len + plan.total_steps, page_size)
     need_u = pages_for(prompt_len + n_full, page_size) if n_full else 0
     return need_c, need_u
+
+
+def fresh_lazy_needs(plan, prompt_len: int, page_size: int, *,
+                     shared: bool) -> tuple[int, int, bool]:
+    """Pages a *fresh* lazy admission grants up front.
+
+    Returns ``(need_c, need_u_fresh, wants_u)``: prompt pages only — the
+    decode span is grown on demand at tick boundaries. ``wants_u`` is
+    whether the plan has a FULL prefix at all; when ``shared`` a canonical
+    uncond prefix of this length exists and the request shares *all* its
+    uncond prompt pages instead of allocating them (``need_u_fresh = 0``).
+    The single definition shared by the engine and the simulator so their
+    admission decisions (and therefore ``pages_grown``/``preemptions``
+    counts) agree tick for tick.
+    """
+    from repro.core.selective import Mode
+    wants_u = any(s.mode is Mode.FULL for s in plan.segments)
+    need_c = pages_for(prompt_len, page_size)
+    need_u = 0 if (not wants_u or shared) else pages_for(prompt_len, page_size)
+    return need_c, need_u, wants_u
+
+
+def resume_lazy_needs(plan, step: int, prompt_len: int, page_size: int, *,
+                      shared: bool) -> tuple[int, int, bool, int]:
+    """Pages a preempted request needs to re-admit at plan ``step``.
+
+    The cond KV must cover every position already generated
+    (``L = prompt_len + step``); the uncond stream is rebuilt only when
+    the cursor still sits in the FULL prefix. A resumed request shares
+    only the *fully prompt-covered* prefix pages (``prompt_len //
+    page_size``): its partial prompt page must be private because the
+    resume forward re-scatters generated positions into it. Returns
+    ``(need_c, need_u_fresh, wants_u, n_share)``.
+    """
+    from repro.core.selective import Mode, PlanCursor
+    cursor = PlanCursor(plan, step=step)
+    wants_u = (not cursor.done) and cursor.mode is Mode.FULL
+    L = prompt_len + step
+    need_c = pages_for(L, page_size)
+    if not wants_u:
+        return need_c, 0, False, 0
+    n_share = (prompt_len // page_size) if shared else 0
+    return need_c, pages_for(L, page_size) - n_share, True, n_share
 
 
 class PageAllocator:
@@ -209,6 +252,27 @@ class PageAllocator:
         self._owned[key] = pages
         return list(pages)
 
+    def grow(self, uid: str, stream: str, n: int = 1) -> list[int] | None:
+        """Append ``n`` fresh pages to an *existing* owner's block table —
+        the on-demand growth path (``reservation="lazy"``): admission
+        grants only prompt pages and the engine grows the decode span one
+        page at a time at tick boundaries. All-or-nothing like
+        :meth:`alloc`; None when the pool is dry (the caller preempts or
+        defers)."""
+        key = (uid, stream)
+        if key not in self._owned:
+            raise ValueError(f"{key} owns no pages (use alloc)")
+        if n < 1:
+            raise ValueError(n)
+        if len(self._free) < n:
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self._ref[p] == 0
+            self._ref[p] = 1
+        self._owned[key].extend(pages)
+        return list(pages)
+
     def share(self, uid: str, stream: str, pages: list[int]) -> list[int]:
         """Register ``(uid, stream)`` as an additional owner of already-
         granted pages (refcount++). Used for read-only prefix sharing."""
@@ -222,6 +286,37 @@ class PageAllocator:
             self._ref[p] += 1
         self._owned[key] = list(pages)
         return list(pages)
+
+    def cow(self, uid: str, stream: str, idx: int) -> tuple[int, int] | None:
+        """Copy-on-write: detach the *shared* page at block-table index
+        ``idx`` from ``(uid, stream)``, granting a fresh private page in
+        its place. Returns ``(src, dst)`` so the caller can issue the
+        device copy, or None when the pool is dry. Refuses (raises) when
+        the page is not actually shared — unsharing an exclusively-owned
+        page to refcount zero would orphan it."""
+        key = (uid, stream)
+        if key not in self._owned:
+            raise ValueError(f"{key} owns no pages")
+        pages = self._owned[key]
+        if not 0 <= idx < len(pages):
+            raise ValueError(f"table index {idx} outside {key}'s "
+                             f"{len(pages)} pages")
+        src = pages[idx]
+        if self._ref[src] < 2:
+            raise ValueError(f"page {src} is not shared (refcount "
+                             f"{int(self._ref[src])}): cow would unshare "
+                             "to zero")
+        if not self._free:
+            return None
+        dst = self._free.pop()
+        assert self._ref[dst] == 0
+        self._ref[dst] = 1
+        self._ref[src] -= 1
+        pages[idx] = dst
+        return src, dst
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
 
     def free(self, uid: str, stream: str) -> int:
         """Release ``(uid, stream)``'s pages; returns how many physical
@@ -252,6 +347,130 @@ class PageAllocator:
         n = min(len(pages), width)
         out[:n] = pages[:n]
         return out
+
+    # -- audit -------------------------------------------------------------
+
+    def check(self) -> None:
+        """Assert the allocator's conservation invariants (the serve
+        harness calls this every simulated tick): refcounts balance
+        ownership exactly, the free list and granted pages partition the
+        pool, no page is freed twice (free-list duplicates), and no owner
+        holds the same page twice."""
+        owned = [p for pages in self._owned.values() for p in pages]
+        assert sum(len(v) for v in self._owned.values()) == int(self._ref.sum())
+        assert len(self._free) == len(set(self._free)), "double-freed page"
+        assert sorted(self._free) == sorted(
+            p for p in range(self.num_pages) if self._ref[p] == 0)
+        assert self.n_free + len(set(owned)) == self.num_pages
+        for key, pages in self._owned.items():
+            assert len(pages) == len(set(pages)), key
+
+
+class PrefixShareRegistry:
+    """Canonical uncond prompt-prefix pages, keyed by prompt length.
+
+    The CFG null stream is the *same* null conditioning for every request
+    (``null_prompt`` zeroes the tokens), so two requests with equal prompt
+    length have bit-identical unconditional prompt KV — the prefix pages
+    the founder's prefill wrote can back every later request's uncond
+    block table via :meth:`PageAllocator.share`.
+
+    The registry itself holds a share on the canonical pages (owner uid
+    ``~prefix``) so their content survives the founder completing; the
+    entry is dropped — and the registry's refs released — when the last
+    *user* (founder or sharer) stops referencing it, which is what keeps
+    the no-leak-at-drain invariant intact.
+    """
+
+    OWNER = "~prefix"
+
+    def __init__(self, alloc: PageAllocator):
+        self.alloc = alloc
+        self._users: dict[int, set[str]] = {}       # prompt_len -> uids
+        self._of_uid: dict[str, int] = {}
+
+    def lookup(self, prompt_len: int) -> list[int] | None:
+        """Canonical uncond prompt pages for this length, or None."""
+        if prompt_len not in self._users:
+            return None
+        return self.alloc.owned(self.OWNER, f"u{prompt_len}")
+
+    def publish(self, prompt_len: int, uid: str) -> None:
+        """Make ``uid``'s freshly-prefilled uncond prompt pages the
+        canonical prefix for ``prompt_len`` (founder path)."""
+        if prompt_len in self._users:
+            raise ValueError(f"prefix for length {prompt_len} already "
+                             "published")
+        pages = self.alloc.owned(uid, "u")
+        self.alloc.share(self.OWNER, f"u{prompt_len}", pages)
+        self._users[prompt_len] = {uid}
+        self._of_uid[uid] = prompt_len
+
+    def acquire(self, prompt_len: int, uid: str, *,
+                count: int | None = None) -> list[int] | None:
+        """Share the first ``count`` canonical pages (default: all) into
+        ``(uid, "u")`` and register ``uid`` as a user; None on miss."""
+        pages = self.lookup(prompt_len)
+        if pages is None:
+            return None
+        take = pages if count is None else pages[:count]
+        self.alloc.share(uid, "u", take)
+        self._users[prompt_len].add(uid)
+        self._of_uid[uid] = prompt_len
+        return list(take)
+
+    def release(self, uid: str) -> int:
+        """Drop ``uid``'s registry membership (idempotent); frees the
+        canonical pages once the last user leaves. Returns the physical
+        pages that freeing the canonical entry returned to the pool (0
+        while other users remain), so the COND-transition reclaim can
+        count them."""
+        prompt_len = self._of_uid.pop(uid, None)
+        if prompt_len is None:
+            return 0
+        users = self._users[prompt_len]
+        users.discard(uid)
+        if users:
+            return 0
+        del self._users[prompt_len]
+        return self.alloc.free(self.OWNER, f"u{prompt_len}")
+
+    def reclaimable(self, prompt_len: int) -> int:
+        """Canonical pages held *only* by the registry (refcount 1) —
+        physical pages an eviction would actually return. Nonzero once
+        every user has CoW-detached or released a page the registry still
+        pins (e.g. the partial prompt page after the founder diverges)."""
+        pages = self.lookup(prompt_len)
+        if pages is None:
+            return 0
+        return sum(1 for p in pages if self.alloc.refcount(p) == 1)
+
+    def evict(self, prompt_len: int) -> int:
+        """Drop a canonical entry under pool pressure (the registry is a
+        cache: losing it costs future sharing, never correctness — users
+        keep their own shares). Returns physical pages freed."""
+        users = self._users.pop(prompt_len)
+        for uid in users:
+            del self._of_uid[uid]
+        return self.alloc.free(self.OWNER, f"u{prompt_len}")
+
+    def evict_under_pressure(self) -> bool:
+        """Evict one entry because the pool ran dry; False when the
+        registry is already empty. Entries that pin registry-only pages
+        go first (eviction returns physical pages), then any entry in
+        deterministic length order (eviction un-shares its pages, which
+        can dissolve the very CoW that needed the free page — a request
+        whose worst-case span equals the whole pool must not wedge on its
+        own published prefix). ``provision_growth`` exhausts this before
+        resorting to preemption: dropping cache beats killing work."""
+        for prompt_len in sorted(self._users):
+            if self.reclaimable(prompt_len):
+                self.evict(prompt_len)
+                return True
+        for prompt_len in sorted(self._users):
+            self.evict(prompt_len)
+            return True
+        return False
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,112 @@
+"""Golden serve trace: deterministic fixture + regeneration entry point.
+
+``results/golden_serve_trace.json`` pins the tick-by-tick behavior of the
+scheduler/arena stack on one small poisson-ish trace so refactors cannot
+silently change packing, paging or preemption decisions: the growth suite
+(``tests/test_serve_growth.py``) replays the trace through
+``repro.serve.sim`` for every config below (slot arena, paged eager,
+paged lazy) and compares per-tick records and summary counters exactly.
+
+Regenerate — only after an *intentional* policy change, with the diff
+reviewed tick by tick:
+
+    PYTHONPATH=src python tests/golden_serve.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "golden_serve_trace.json")
+
+# Trace spec: arrivals from poisson_arrivals(seed=23, rate=1.1), prompt
+# lengths and priorities cycling so the paged pool sees mixed lengths,
+# partial pages (5 % 4 != 0 -> CoW under lazy) and priority preemption.
+SPEC = {
+    "seed": 23,
+    "n": 10,
+    "rate": 1.1,
+    "total_steps": 8,
+    "fraction": 0.5,
+    "guidance_scale": 4.0,
+    "prompt_lens": [3, 5, 8],
+    "priorities": [0, 2, 1],
+}
+
+PARAMS = {
+    "num_slots": 4,
+    "pass_budget": 6,
+    "starvation_limit": 4,
+    "prefills_per_tick": 2,
+    "queue_depth": 4096,
+    "page_size": 4,
+}
+
+CONFIGS = {
+    "slot": {"kv": "slot", "reservation": "eager", "num_pages": None},
+    "paged_eager": {"kv": "paged", "reservation": "eager", "num_pages": 14},
+    "paged_lazy": {"kv": "paged", "reservation": "lazy", "num_pages": 14},
+}
+
+SUMMARY_KEYS = (
+    "ticks", "completed", "tokens", "denoiser_passes", "prefill_passes",
+    "pages_reclaimed", "peak_pages_in_use", "pages_grown",
+    "shared_page_hits", "cow_copies", "preemptions", "resumes",
+)
+
+
+def build_trace(spec=None):
+    from repro.core.selective import GuidancePlan
+    from repro.serve import SimRequest, poisson_arrivals
+
+    spec = spec or SPEC
+    arrivals = poisson_arrivals(spec["seed"], n=spec["n"], rate=spec["rate"])
+    plan = GuidancePlan.suffix(spec["total_steps"], spec["fraction"],
+                               spec["guidance_scale"])
+    lens, prios = spec["prompt_lens"], spec["priorities"]
+    return [SimRequest(f"g{i:02d}", int(t), plan,
+                       prompt_len=lens[i % len(lens)],
+                       priority=prios[i % len(prios)])
+            for i, t in enumerate(arrivals)]
+
+
+def run_config(trace, name, params=None):
+    from repro.serve import simulate
+
+    cfg = CONFIGS[name]
+    p = dict(params or PARAMS)
+    page_size = p.pop("page_size")
+    kw = dict(p, kv=cfg["kv"], reservation=cfg["reservation"])
+    if cfg["kv"] == "paged":
+        kw.update(page_size=page_size, num_pages=cfg["num_pages"])
+    rep = simulate(trace, **kw)
+    records = [[r.tick, r.n_full, r.n_cond, r.active, r.queue_depth,
+                r.pages_in_use] for r in rep.metrics.records]
+    summary = {k: rep.metrics.summary()[k] for k in SUMMARY_KEYS}
+    return {"records": records, "summary": summary}
+
+
+def regenerate(path=GOLDEN_PATH):
+    trace = build_trace()
+    out = {
+        "spec": SPEC,
+        "params": PARAMS,
+        "configs": CONFIGS,
+        "expected": {name: run_config(trace, name) for name in CONFIGS},
+    }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = regenerate()
+    for name, exp in res["expected"].items():
+        print(name, exp["summary"])
+    print(f"wrote {os.path.normpath(GOLDEN_PATH)}")

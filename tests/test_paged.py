@@ -104,6 +104,81 @@ def test_pages_for():
     assert pages_for(5, 4) == 2
 
 
+def test_page_allocator_double_free_is_refused():
+    """Freeing an owner twice must be a deterministic no-op (0 pages,
+    refcounts/free-list untouched) — never a second decrement that would
+    corrupt a surviving sharer's pages."""
+    alloc = PageAllocator(4, page_size=2)
+    alloc.alloc("a", "c", 2)
+    shared = alloc.share("b", "c", alloc.owned("a", "c"))
+    assert alloc.free("a", "c") == 0                 # b still references
+    assert alloc.free("a", "c") == 0                 # double free: no-op
+    assert [alloc.refcount(p) for p in shared] == [1, 1]
+    alloc.check()
+    assert alloc.free("b", "c") == 2
+    assert alloc.free("b", "c") == 0                 # double free after zero
+    alloc.check()
+    assert alloc.n_free == 4
+
+
+def test_page_allocator_share_after_free_raises():
+    """Sharing pages whose refcount already hit zero must raise: the
+    pages may have been re-granted with different content."""
+    alloc = PageAllocator(4, page_size=2)
+    pages = alloc.alloc("a", "c", 2)
+    alloc.free("a", "c")
+    with pytest.raises(ValueError):
+        alloc.share("b", "c", pages)
+    with pytest.raises(ValueError):
+        alloc.share("b", "c", [alloc.num_pages])     # out of range
+    alloc.check()
+    assert alloc.n_free == 4
+
+
+def test_page_allocator_cow_refuses_unshare_to_zero():
+    """cow() on an exclusively-owned page would drop its refcount to zero
+    while the owner still points at it — must raise, not orphan."""
+    alloc = PageAllocator(6, page_size=2)
+    alloc.alloc("a", "u", 2)
+    with pytest.raises(ValueError):
+        alloc.cow("a", "u", 0)                       # refcount 1: refused
+    with pytest.raises(ValueError):
+        alloc.cow("a", "u", 5)                       # index out of table
+    with pytest.raises(ValueError):
+        alloc.cow("ghost", "u", 0)                   # unknown owner
+    alloc.check()
+
+
+def test_page_allocator_cow_detaches_shared_page():
+    alloc = PageAllocator(4, page_size=2)
+    pages = alloc.alloc("a", "u", 2)
+    alloc.share("b", "u", pages)
+    src, dst = alloc.cow("b", "u", 1)
+    assert src == pages[1] and dst not in pages
+    assert alloc.owned("b", "u") == [pages[0], dst]
+    assert alloc.owned("a", "u") == pages            # founder untouched
+    assert alloc.refcount(src) == 1 and alloc.refcount(dst) == 1
+    alloc.check()
+    # pool dry -> None, state unchanged
+    alloc.alloc("c", "c", alloc.n_free)
+    alloc.share("d", "u", alloc.owned("a", "u"))
+    assert alloc.cow("d", "u", 0) is None
+    alloc.check()
+
+
+def test_page_allocator_grow_appends_and_refuses_unknown():
+    alloc = PageAllocator(4, page_size=2)
+    with pytest.raises(ValueError):
+        alloc.grow("a", "c", 1)                      # no pages yet: alloc
+    alloc.alloc("a", "c", 1)
+    first = alloc.owned("a", "c")
+    grown = alloc.grow("a", "c", 2)
+    assert alloc.owned("a", "c") == first + grown
+    assert alloc.grow("a", "c", 2) is None           # only 1 free: no partial
+    assert alloc.n_free == 1
+    alloc.check()
+
+
 # ---------------------------------------------------------------------------
 # Kernel: paged vs contiguous decode attention
 # ---------------------------------------------------------------------------

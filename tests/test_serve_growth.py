@@ -1,0 +1,369 @@
+"""Serve-invariant harness for on-demand page growth, uncond prefix
+sharing and priority preemption (DESIGN.md §10).
+
+Three layers, all under the ``growth`` marker (CI runs ``-m growth`` as
+its own job):
+
+* **allocator/scheduler invariants** — hypothesis-driven random traces
+  through the offline simulator with :meth:`PageAllocator.check` asserted
+  every tick: refcount conservation (every page freed exactly once,
+  shared pages freed only at refcount zero), no leak at drain, token and
+  pass conservation across preemptions.
+* **exactness pins** against the real (smoke) model — lazy-reservation
+  greedy decode is token-identical to eager on the same trace; a
+  preempted-then-resumed request is token-identical to an unpreempted
+  solo run; shared-prefix requests match unshared solo runs bit-for-bit;
+  and the simulator reproduces the engine's ``pages_grown`` /
+  ``preemptions`` / ``shared_page_hits`` counts offline.
+* **golden trace** — ``results/golden_serve_trace.json`` replayed through
+  the simulator for ``kv="slot"`` and ``kv="paged"`` (eager and lazy), so
+  scheduler refactors cannot silently change packing behavior.
+
+Plus the ``serve/autotune.py`` property pin: ``pass_budget="auto"`` is
+monotone in roofline step latency and never drops below one FULL slot.
+"""
+
+import json
+
+import jax
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import golden_serve
+from repro.configs import get_smoke_config
+from repro.core.selective import GuidancePlan
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serve import (BudgetAutotuner, ContinuousEngine, ServeRequest,
+                         SimRequest, simulate)
+
+pytestmark = pytest.mark.growth
+
+
+# ---------------------------------------------------------------------------
+# Random-trace invariants (simulator, no model)
+# ---------------------------------------------------------------------------
+
+
+def _trace_from(items):
+    return [SimRequest(f"r{i:03d}", arrival,
+                       GuidancePlan.suffix(total, frac, 4.0),
+                       prompt_len=plen, priority=prio)
+            for i, (arrival, total, frac, plen, prio) in enumerate(items)]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=12),
+                          st.integers(min_value=1, max_value=10),
+                          st.floats(min_value=0.0, max_value=1.0),
+                          st.integers(min_value=1, max_value=9),
+                          st.integers(min_value=0, max_value=3)),
+                min_size=1, max_size=18),
+       st.integers(min_value=10, max_value=28))
+def test_lazy_refcount_conservation_and_no_leak(items, num_pages):
+    """Every tick of every random lazy trace: refcounts balance ownership
+    exactly, the free list and granted pages partition the pool, no page
+    is double-freed; at drain every page is back on the free list."""
+    trace = _trace_from(items)
+    worst = max(p + t for _, t, _, p, _ in items)
+    num_pages = max(num_pages, 2 * -(-worst // 4))    # admissible solo
+    seen = {}
+
+    def audit(tick, pages, sched, queue):
+        pages.check()
+        seen["pages"] = pages
+
+    rep = simulate(trace, num_slots=4, pass_budget=5, kv="paged",
+                   page_size=4, num_pages=num_pages, reservation="lazy",
+                   on_tick=audit)
+    m = rep.metrics
+    assert m.completed == len(trace)
+    assert m.records[-1].pages_in_use == 0            # no leak at drain
+    assert seen["pages"].n_free == num_pages
+    assert not seen["pages"].owners()
+    # conservation across preemptions: every plan's declared work ran
+    # exactly once, tokens emitted once per step
+    assert m.denoiser_passes == sum(r.plan.denoiser_passes() for r in trace)
+    assert m.tokens_emitted == sum(r.plan.total_steps for r in trace)
+    assert m.resumes == m.preemptions                 # nothing stranded
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=10),
+                          st.integers(min_value=2, max_value=8),
+                          st.floats(min_value=0.0, max_value=1.0),
+                          st.integers(min_value=1, max_value=8),
+                          st.integers(min_value=0, max_value=2)),
+                min_size=1, max_size=12))
+def test_lazy_completes_same_work_as_eager(items):
+    """Reservation policy is a memory policy, not a work policy: lazy and
+    eager complete the same requests with identical total passes/tokens
+    on any trace (ordering may differ; conservation may not)."""
+    trace = _trace_from(items)
+    reps = {res: simulate(trace, num_slots=4, pass_budget=5, kv="paged",
+                          page_size=4, num_pages=64, reservation=res)
+            for res in ("eager", "lazy")}
+    e, l = reps["eager"].metrics, reps["lazy"].metrics
+    assert set(reps["eager"].completions) == set(reps["lazy"].completions)
+    assert e.denoiser_passes == l.denoiser_passes
+    assert e.tokens_emitted == l.tokens_emitted
+
+
+def test_preempted_request_expires_cleanly():
+    """PREEMPTED -> (deadline passes while QUEUED) -> dropped: the resume
+    checkpoint must not leak and the pool must still drain clean."""
+    plan = GuidancePlan.suffix(8, 0.5, 4.0)
+    trace = [SimRequest("victim", 0, plan, ttl=3.0, prompt_len=4),
+             SimRequest("strong", 2, plan, prompt_len=4, priority=5)]
+    rep = simulate(trace, num_slots=2, pass_budget=4, kv="paged",
+                   page_size=4, num_pages=6, reservation="lazy",
+                   on_tick=lambda t, p, s, q: p.check())
+    m = rep.metrics
+    assert m.preemptions >= 1
+    assert m.expired == 1 and m.completed == 1
+    assert "strong" in rep.completions and "victim" not in rep.completions
+    assert m.records[-1].pages_in_use == 0
+
+
+def test_registry_eviction_unsticks_pool_sized_request():
+    """Livelock regression (found by fuzzing): a sole in-flight request
+    whose worst-case span equals the whole pool must not wedge on its own
+    published prefix — the canonical pages the registry pins (including
+    the partial page it keeps after the founder CoW-detaches) are *cache*
+    and must be evicted under pool pressure before deferring."""
+    # prompt 9 @ page_size 2 -> 5 prompt pages/stream; worst case
+    # c=pages_for(10)+... exactly fills num_pages=10 with zero headroom
+    plan = GuidancePlan.suffix(1, 0.0, 4.0)
+    trace = [SimRequest("solo", 0, plan, prompt_len=9)]
+    rep = simulate(trace, num_slots=2, pass_budget=4, kv="paged",
+                   page_size=2, num_pages=10, reservation="lazy",
+                   max_ticks=50, on_tick=lambda t, p, s, q: p.check())
+    assert rep.metrics.completed == 1
+    assert rep.metrics.records[-1].pages_in_use == 0
+
+    # the stranded-partial variant: founder CoWs away from its canonical
+    # partial page mid-flight, leaving a registry-only page the sole
+    # request must be able to reclaim to keep growing
+    plan2 = GuidancePlan.suffix(10, 0.1, 4.0)        # 9 FULL steps
+    trace2 = [SimRequest("solo", 0, plan2, prompt_len=9)]
+    rep2 = simulate(trace2, num_slots=2, pass_budget=4, kv="paged",
+                    page_size=4, num_pages=10, reservation="lazy",
+                    max_ticks=200, on_tick=lambda t, p, s, q: p.check())
+    assert rep2.metrics.completed == 1
+    assert rep2.metrics.cow_copies >= 1
+    assert rep2.metrics.records[-1].pages_in_use == 0
+
+
+def test_lazy_admits_more_concurrent_than_eager_cond_heavy():
+    """Acceptance shape, offline: on a COND-heavy burst at equal pool
+    size, worst-case reservation caps concurrency below what lazy
+    admission sustains."""
+    plan = GuidancePlan.suffix(8, 1.0, 4.0)           # all-COND: no uncond
+    trace = [SimRequest(f"b{i}", 0, plan, prompt_len=4) for i in range(6)]
+    peaks = {}
+    for res in ("eager", "lazy"):
+        rep = simulate(trace, num_slots=6, pass_budget=6, kv="paged",
+                       page_size=4, num_pages=6, reservation=res)
+        peaks[res] = max(r.active for r in rep.metrics.records)
+        assert rep.metrics.completed == len(trace)
+    assert peaks["lazy"] > peaks["eager"]
+
+
+# ---------------------------------------------------------------------------
+# Autotune property (satellite: serve/autotune.py coverage)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=1e-6, max_value=1.0),
+       st.floats(min_value=1e-7, max_value=1e-2),
+       st.floats(min_value=1.0, max_value=16.0))
+def test_autotune_budget_monotone_and_floored(target_s, per_pass_s, factor):
+    """``pass_budget="auto"`` is antitone in roofline step latency (a
+    slower step never buys a *larger* budget) and never returns a budget
+    below one FULL slot (2 passes), whatever the target."""
+    def tuner(pp):
+        t = BudgetAutotuner(target_tick_s=target_s)
+        t.per_pass_s[(1, 0)] = pp
+        return t
+
+    fast, slow = tuner(per_pass_s), tuner(per_pass_s * factor)
+    assert fast.budget() >= slow.budget()             # monotone in latency
+    assert slow.budget() >= 2                         # >= one FULL slot
+    assert tuner(1e9).budget() == 2                   # floor binds
+    capped = BudgetAutotuner(target_tick_s=target_s, max_budget=8)
+    capped.per_pass_s[(1, 0)] = per_pass_s
+    assert 2 <= capped.budget() <= 8
+
+
+def test_autotune_budget_uses_worst_signature():
+    t = BudgetAutotuner(target_tick_s=1.0)
+    t.per_pass_s[(1, 0)] = 0.1
+    t.per_pass_s[(0, 1)] = 0.5                        # worst: 2 passes fit
+    assert t.worst_per_pass_s == 0.5
+    assert t.budget() == 2
+
+
+# ---------------------------------------------------------------------------
+# Golden trace regression (satellite: results/golden_serve_trace.json)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(golden_serve.GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("config", ["slot", "paged_eager", "paged_lazy"])
+def test_golden_trace_replay(golden, config):
+    """The checked-in per-tick metrics replay exactly: any packing,
+    paging, sharing or preemption policy drift fails here first.
+    Regenerate (intentionally) with: PYTHONPATH=src python
+    tests/golden_serve.py"""
+    trace = golden_serve.build_trace(golden["spec"])
+    got = golden_serve.run_config(trace, config, golden["params"])
+    exp = golden["expected"][config]
+    assert got["summary"] == exp["summary"]
+    assert got["records"] == exp["records"]
+
+
+# ---------------------------------------------------------------------------
+# Exactness pins against the real (smoke) model
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke_config("llama3.2-1b")
+    params = T.init_model(cfg, L.ArrayMaker(jax.random.PRNGKey(0)))
+    return cfg, params
+
+
+def _engine(params, cfg, reservation, *, num_pages=None, num_slots=4,
+            budget=6, prefills=2):
+    return ContinuousEngine(params, cfg, num_slots=num_slots,
+                            pass_budget=budget, prompt_len=8, max_new=6,
+                            selective_fraction=0.5, stop_on_eos=False,
+                            kv="paged", page_size=4, num_pages=num_pages,
+                            prefills_per_tick=prefills,
+                            reservation=reservation)
+
+
+def test_lazy_token_identical_to_eager(small_model):
+    """Acceptance: lazy-reservation greedy decode is token-identical to
+    eager on the same mixed-length trace (partial pages included, so the
+    CoW path runs), and the pool balances at drain."""
+    cfg, params = small_model
+    lens = [5, 8, 6, 5]
+    reqs = lambda: [ServeRequest(uid=f"r{i}", prompt=f"trace request {i}",
+                                 max_new_tokens=6, prompt_len=lens[i])
+                    for i in range(4)]
+    arrivals = [0, 0, 1, 2]       # r3 joins while r0's S=5 prefix is live
+    out_eager = _engine(params, cfg, "eager").serve_trace(reqs(), arrivals)
+    lazy = _engine(params, cfg, "lazy")
+    out_lazy = lazy.serve_trace(reqs(), arrivals)
+    assert out_lazy == out_eager
+    assert lazy.metrics.pages_grown > 0               # decode pages on demand
+    assert lazy.metrics.shared_page_hits > 0          # r0/r3 share S=5 prefix
+    assert lazy.metrics.cow_copies > 0                # partial page diverged
+    lazy.pages.check()
+    assert lazy.pages.n_free == lazy.pages.num_pages
+
+
+def test_preempt_resume_token_identical_to_solo(small_model):
+    """Acceptance: a tight pool forces the high-priority late arrival to
+    evict the in-flight request; the victim's resumed generation is
+    token-identical to an unpreempted solo run, and the simulator
+    reproduces the engine's preemption/growth counts offline."""
+    cfg, params = small_model
+    plan = GuidancePlan.suffix(6, 0.5, 4.0)
+    mk = lambda: [ServeRequest(uid="weak", prompt="weak request",
+                               max_new_tokens=6, plan=plan, priority=0),
+                  ServeRequest(uid="strong", prompt="strong request",
+                               max_new_tokens=6, plan=plan, priority=5)]
+    arrivals = [0, 2]
+    eng = _engine(params, cfg, "lazy", num_pages=7)
+    out = eng.serve_trace(mk(), arrivals)
+    assert eng.metrics.preemptions >= 1
+    assert eng.metrics.resumes == eng.metrics.preemptions
+    for uid, prompt in [("weak", "weak request"), ("strong", "strong request")]:
+        solo = _engine(params, cfg, "lazy")
+        ref = solo.serve([ServeRequest(uid=uid, prompt=prompt,
+                                       max_new_tokens=6, plan=plan)])
+        assert out[uid] == ref[uid], uid
+    eng.pages.check()
+    assert eng.pages.n_free == eng.pages.num_pages
+
+    sim_trace = [SimRequest("weak", arrivals[0], plan, prompt_len=8),
+                 SimRequest("strong", arrivals[1], plan, prompt_len=8,
+                            priority=5)]
+    rep = simulate(sim_trace, num_slots=4, pass_budget=6, kv="paged",
+                   page_size=4, num_pages=7, reservation="lazy",
+                   prefills_per_tick=2)
+    for key in ("pages_grown", "preemptions", "shared_page_hits",
+                "cow_copies", "resumes", "pages_reclaimed"):
+        assert getattr(rep.metrics, key) == getattr(eng.metrics, key), key
+
+
+def test_shared_prefix_matches_unshared_bitwise(small_model):
+    """Acceptance: requests whose uncond prompt prefix is served from the
+    canonical shared pages generate exactly what they generate with
+    private pages (solo lazy run = founder, nothing to share)."""
+    cfg, params = small_model
+    reqs = [ServeRequest(uid=f"s{i}", prompt=f"prefix sharer {i}",
+                         max_new_tokens=6, prompt_len=6) for i in range(3)]
+    eng = _engine(params, cfg, "lazy", prefills=1)
+    out = eng.serve_trace(reqs, [0, 1, 2])            # staggered: kb=1 rows
+    assert eng.metrics.shared_page_hits > 0
+    for i in range(3):
+        solo = _engine(params, cfg, "lazy", prefills=1)
+        ref = solo.serve([ServeRequest(uid="x", prompt=f"prefix sharer {i}",
+                                       max_new_tokens=6, prompt_len=6)])
+        assert out[f"s{i}"] == ref["x"], f"s{i}"
+    eng.pages.check()
+    assert eng.pages.n_free == eng.pages.num_pages
+
+
+def test_engine_and_sim_counts_match_on_contended_trace(small_model):
+    """Acceptance: the offline simulator reproduces the real engine's
+    lazy-reservation counters exactly on a contended mixed-priority,
+    mixed-length trace (preemptions, growth, sharing, CoW, reclaim)."""
+    cfg, params = small_model
+    plan = GuidancePlan.suffix(6, 0.5, 4.0)
+    lens = [5, 6, 8, 5, 6, 8]
+    prios = [0, 1, 0, 2, 1, 0]
+    arrivals = [0, 0, 1, 2, 2, 3]
+    eng = ContinuousEngine(params, cfg, num_slots=6, pass_budget=6,
+                           prompt_len=8, max_new=6, stop_on_eos=False,
+                           kv="paged", page_size=4, prefills_per_tick=2,
+                           num_pages=10, reservation="lazy")
+    reqs = [ServeRequest(uid=f"r{i}", prompt=f"req {i}", max_new_tokens=6,
+                         plan=plan, prompt_len=lens[i], priority=prios[i])
+            for i in range(6)]
+    eng.serve_trace(reqs, arrivals)
+    trace = [SimRequest(f"r{i}", arrivals[i], plan, prompt_len=lens[i],
+                        priority=prios[i]) for i in range(6)]
+    rep = simulate(trace, num_slots=6, pass_budget=6, kv="paged",
+                   page_size=4, num_pages=10, reservation="lazy",
+                   prefills_per_tick=2,
+                   on_tick=lambda t, p, s, q: p.check())
+    em, sm = eng.metrics, rep.metrics
+    assert em.preemptions > 0                         # trace is contended
+    for key in ("pages_grown", "preemptions", "shared_page_hits",
+                "cow_copies", "resumes", "pages_reclaimed",
+                "peak_pages_in_use", "completed", "denoiser_passes",
+                "tokens_emitted"):
+        assert getattr(em, key) == getattr(sm, key), key
+    assert em.ticks == sm.ticks
+
+
+def test_lazy_requires_paged_arena(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError):
+        ContinuousEngine(params, cfg, num_slots=2, pass_budget=2,
+                         kv="slot", reservation="lazy")
+    with pytest.raises(ValueError):
+        ContinuousEngine(params, cfg, num_slots=2, pass_budget=2,
+                         kv="paged", reservation="bogus")
