@@ -23,8 +23,15 @@ eager reservation (the ISSUE-4 acceptance number: admitted requests per
 GB), and the offline simulator reproduces the engine's ``pages_grown`` /
 ``preemptions`` counts exactly.
 
+Part 5 (``--kv-dtype int8``, implies ``--kv paged``): int8 KV pages vs
+bf16 at **equal pool bytes** on the lazy burst trace (DESIGN.md §11).
+Int8 pages pin ~half the HBM per page, so the same byte budget holds
+~2x the pages and the engine admits strictly more concurrent requests;
+reported as reserved-vs-peak HBM in *bytes* (page counts are not
+comparable across dtypes) plus peak concurrent admits.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput [--tiny] \
-        [--kv paged] [--reservation lazy]
+        [--kv paged] [--reservation lazy] [--kv-dtype int8]
 """
 
 from __future__ import annotations
@@ -40,7 +47,8 @@ from repro.data.prompts import PAPER_PROMPTS
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.serve import (ContinuousEngine, ServeMetrics, ServeRequest,
-                         SimRequest, pages_for, poisson_arrivals, simulate)
+                         SimRequest, kv_page_bytes, pages_for,
+                         pages_for_pool_bytes, poisson_arrivals, simulate)
 from repro.serving import Request, ServingEngine
 
 FRACTIONS = [0.0, 0.2, 0.5]
@@ -75,7 +83,8 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
                           max_new: int, fraction: float, batch: int,
                           rate: float, seed: int = 0,
                           kv: str = "slot", page_size: int = 4,
-                          reservation: str = "eager") -> dict:
+                          reservation: str = "eager",
+                          kv_dtype: str = "bf16") -> dict:
     arrivals = poisson_arrivals(seed, n=n_req, rate=rate)
     budget = 2 * batch
 
@@ -89,7 +98,7 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
                            prompt_len=prompt_len, max_new=max_new,
                            selective_fraction=fraction, stop_on_eos=False,
                            kv=kv, page_size=page_size,
-                           reservation=reservation)
+                           reservation=reservation, kv_dtype=kv_dtype)
     # arrivals are relative to the current tick, so the measured run
     # replays the same trace shape the warmup compiled for
     eng.serve_trace(make_reqs("w"), arrivals)     # warmup/compile
@@ -114,7 +123,8 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
              f"in_flight={m.mean_in_flight():.2f};util={m.utilization():.3f};"
              f"ticks={m.ticks};passes={m.denoiser_passes};"
              f"budget={budget}")
-    emit(f"serve/kv_{kv}", hbm["peak_in_use_bytes"],
+    emit(f"serve/kv_{kv}_{kv_dtype}" if kv == "paged" else f"serve/kv_{kv}",
+         hbm["peak_in_use_bytes"],
          f"reserved={hbm['reserved_bytes']};"
          f"reclaimed={cont.pages_reclaimed};"
          f"peak_pages={cont.peak_pages_in_use}")
@@ -206,8 +216,67 @@ def _lazy_vs_eager(params, cfg, *, prompt_len: int, max_new: int,
             "lazy": lazy_m.summary(), "sim_matches": True}
 
 
+def _int8_vs_bf16(params, cfg, *, prompt_len: int, max_new: int,
+                  batch: int, page_size: int = 4) -> dict:
+    """ISSUE-5 acceptance: int8 KV pages vs bf16 at **equal pool bytes**
+    on the lazy COND-heavy burst. One HBM budget, two pools: bf16 holds
+    ``N`` pages, int8 holds ``~1.9N`` (per-page bytes drop from
+    ``2*hd`` to ``hd + 4`` per position-head, k+v), so the int8 engine
+    sustains strictly more concurrent requests per byte — the paper's
+    guidance-side reduction compounding with quantization."""
+    n_req = 2 * batch
+    plan = GuidancePlan.suffix(max_new, 1.0, 4.0)   # COND-heavy: late phase
+    pages_bf16 = n_req * pages_for(prompt_len, page_size) + 2
+    pool_bytes = pages_bf16 * kv_page_bytes(cfg, page_size, "bf16")
+    arrivals = [0] * n_req                          # burst: pool contended
+
+    def engine(kv_dtype):
+        num_pages = pages_for_pool_bytes(cfg, pool_bytes, page_size, kv_dtype)
+        eng = ContinuousEngine(params, cfg, num_slots=n_req,
+                               pass_budget=n_req, prompt_len=prompt_len,
+                               max_new=max_new, stop_on_eos=False,
+                               kv="paged", page_size=page_size,
+                               num_pages=num_pages, reservation="lazy",
+                               kv_dtype=kv_dtype, prefills_per_tick=n_req)
+        reqs = [ServeRequest(uid=f"q{i}",
+                             prompt=PAPER_PROMPTS[i % len(PAPER_PROMPTS)],
+                             max_new_tokens=max_new, plan=plan,
+                             priority=i % 2)
+                for i in range(n_req)]
+        out = eng.serve_trace(reqs, arrivals)
+        assert len(out) == n_req
+        return eng
+
+    stats = {}
+    for kv_dtype in ("bf16", "int8"):
+        eng = engine(kv_dtype)
+        m = eng.metrics
+        hbm = eng.kv_hbm_bytes()
+        stats[kv_dtype] = {
+            "num_pages": eng.num_pages,
+            "reserved_bytes": hbm["reserved_bytes"],
+            "peak_in_use_bytes": hbm["peak_in_use_bytes"],
+            "peak_concurrent": max(r.active for r in m.records),
+            "grown": m.pages_grown, "preemptions": m.preemptions,
+            "ticks": m.ticks,
+        }
+        emit(f"serve/kvdtype_{kv_dtype}", stats[kv_dtype]["peak_concurrent"],
+             f"pool_bytes={hbm['reserved_bytes']};"
+             f"pages={eng.num_pages};"
+             f"peak_bytes={hbm['peak_in_use_bytes']};"
+             f"preempt={m.preemptions}")
+    assert stats["int8"]["reserved_bytes"] <= pool_bytes, stats
+    assert stats["int8"]["num_pages"] > stats["bf16"]["num_pages"], stats
+    assert stats["int8"]["peak_concurrent"] > stats["bf16"]["peak_concurrent"], \
+        f"int8 must admit strictly more at equal pool bytes: {stats}"
+    return {"pool_bytes": pool_bytes, **stats}
+
+
 def run(tiny: bool = False, kv: str = "slot",
-        reservation: str = "eager") -> dict:
+        reservation: str = "eager", kv_dtype: str = "bf16") -> dict:
+    if kv_dtype == "int8":
+        kv = "paged"                                # int8 implies paged
+        reservation = "lazy"                        # the burst acceptance
     if reservation == "lazy":
         kv = "paged"                                # lazy implies paged
     cfg = get_smoke_config("llama3.2-1b")
@@ -226,14 +295,19 @@ def run(tiny: bool = False, kv: str = "slot",
                                     prompt_len=prompt_len, max_new=max_new,
                                     fraction=fractions[-1], batch=batch,
                                     rate=4.0 if tiny else 1.5, kv=kv,
-                                    reservation=reservation)
+                                    reservation=reservation,
+                                    kv_dtype=kv_dtype)
     out = {"rows": rows, "compare": compare}
     if kv == "paged":
         out["paged_mixed"] = _paged_mixed_lengths(
             params, cfg, prompt_len=prompt_len, max_new=max_new,
             fraction=fractions[-1], batch=batch)
-    if reservation == "lazy":
+    if reservation == "lazy" and kv_dtype == "bf16":
         out["lazy_vs_eager"] = _lazy_vs_eager(
+            params, cfg, prompt_len=prompt_len, max_new=max_new,
+            batch=batch)
+    if kv_dtype == "int8":
+        out["int8_vs_bf16"] = _int8_vs_bf16(
             params, cfg, prompt_len=prompt_len, max_new=max_new,
             batch=batch)
     return out
@@ -250,8 +324,14 @@ if __name__ == "__main__":
                     help="paged arena page policy (lazy = on-demand growth "
                          "+ uncond prefix sharing + priority preemption; "
                          "implies --kv paged)")
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8"], default="bf16",
+                    help="paged pool dtype (int8 = quantized pages with "
+                         "fp32 per-row scales; implies --kv paged "
+                         "--reservation lazy and runs the equal-pool-bytes "
+                         "admission comparison)")
     args = ap.parse_args()
-    out = run(tiny=args.tiny, kv=args.kv, reservation=args.reservation)
+    out = run(tiny=args.tiny, kv=args.kv, reservation=args.reservation,
+              kv_dtype=args.kv_dtype)
     print("continuous-vs-static:", out["compare"]["continuous"])
     print("                     ", out["compare"]["static"])
     print(f"in-flight gain at equal pass budget: "
@@ -273,3 +353,12 @@ if __name__ == "__main__":
               f"lazy grown={lv['lazy']['pages_grown']} "
               f"preemptions={lv['lazy']['preemptions']} "
               f"(sim reproduces: {lv['sim_matches']})")
+    if "int8_vs_bf16" in out:
+        q = out["int8_vs_bf16"]
+        print(f"kv-dtype @ {q['pool_bytes']/2**20:.2f}MiB pool: "
+              f"int8 {q['int8']['num_pages']} pages / peak concurrent "
+              f"{q['int8']['peak_concurrent']} vs bf16 "
+              f"{q['bf16']['num_pages']} pages / "
+              f"{q['bf16']['peak_concurrent']} "
+              f"(peak bytes int8={q['int8']['peak_in_use_bytes']} "
+              f"bf16={q['bf16']['peak_in_use_bytes']})")

@@ -10,6 +10,12 @@ BlockSpec index map — KV is DMA'd page-by-page straight out of the pool,
 never gathered into a contiguous per-request buffer. Online-softmax
 state (m, l, acc) lives in VMEM scratch exactly as in the dense kernel.
 
+``paged_decode_attention_int8_pallas`` is the quantized form
+(DESIGN.md §11): pages hold int8 KV plus per-(position, kv-head) fp32
+scales (``kernels.quant``) and the dequant multiply fuses into the same
+online-softmax loop, so the per-page HBM stream drops from ``2*hd`` bf16
+bytes to ``hd + 4``.
+
 Positions are per-row (mixed-length serving): ``pos[b]`` masks validity
 (``kpos <= pos[b]``, plus an optional sliding window). Block-table
 entries past a request's allocated pages hold an out-of-range physical
@@ -30,10 +36,11 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc_ref, *, scale: float, window, page_size: int, nb: int):
-    b = pl.program_id(0)
-    j = pl.program_id(2)
+def _attend_page(j, pos, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, window, page_size: int, nb: int):
+    """One grid step of the online-softmax state machine, shared by the
+    bf16 and int8 kernels (which differ only in how they load q/k/v):
+    q (rep, hd), k/v (page_size, hd) — already dequantized."""
 
     @pl.when(j == 0)
     def _init():
@@ -41,10 +48,6 @@ def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[b]
-    q = q_ref[...]                                   # (rep, hd)
-    k = k_ref[...]                                   # (page_size, hd)
-    v = v_ref[...]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     kpos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
@@ -68,6 +71,25 @@ def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     def _finish():
         l = jnp.maximum(l_ref[...], 1e-20)
         o_ref[...] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, **kw):
+    _attend_page(pl.program_id(2), pos_ref[pl.program_id(0)],
+                 q_ref[...], k_ref[...], v_ref[...],
+                 o_ref, m_ref, l_ref, acc_ref, **kw)
+
+
+def _kernel_int8(bt_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                 o_ref, m_ref, l_ref, acc_ref, **kw):
+    """Int8 variant: pages hold int8 KV plus per-(position, kv-head) fp32
+    scales; dequantization fuses into the online-softmax loop, so HBM only
+    ever streams the int8 payload (the dominant roofline term at decode)."""
+    k = k_ref[...].astype(jnp.float32) * ks_ref[...]
+    v = v_ref[...].astype(jnp.float32) * vs_ref[...]
+    _attend_page(pl.program_id(2), pos_ref[pl.program_id(0)],
+                 q_ref[...].astype(jnp.float32), k, v,
+                 o_ref, m_ref, l_ref, acc_ref, **kw)
 
 
 def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, pos, *,
@@ -115,4 +137,62 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, pos, *,
         out_shape=jax.ShapeDtypeStruct((B, K, rep, hd), q.dtype),
         interpret=interpret,
     )(bt, pos_arr, qr, kr, vr)
+    return out.reshape(B, H, hd)
+
+
+def paged_decode_attention_int8_pallas(q, k_pages, k_scales, v_pages,
+                                       v_scales, block_table, pos, *,
+                                       window: int | None = None,
+                                       interpret: bool = True):
+    """Fused dequantizing form: q (B,H,hd); k_pages/v_pages
+    (P, page_size, K, hd) **int8**; k_scales/v_scales (P, page_size, K, 1)
+    fp32 (per-position-per-kv-head, ``kernels.quant``); block_table
+    (B, nb) int32 (out-of-range entries = padding); pos (B,) int32.
+    Returns (B,H,hd) in q's dtype. The scalar-prefetched block table and
+    the online-softmax VMEM state are identical to the bf16 kernel; the
+    only new work is the in-loop ``int8 * scale`` dequant, so the HBM
+    stream per page drops from ``2*hd`` bf16 bytes to ``hd + 4``."""
+    B, H, hd = q.shape
+    P, page_size, K = k_pages.shape[:3]
+    nb = block_table.shape[1]
+    rep = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B, K, rep, hd)
+    kr = k_pages.transpose(0, 2, 1, 3)               # (P, K, page_size, hd)
+    vr = v_pages.transpose(0, 2, 1, 3)
+    ksr = k_scales.astype(jnp.float32).transpose(0, 2, 1, 3)  # (P,K,ps,1)
+    vsr = v_scales.astype(jnp.float32).transpose(0, 2, 1, 3)
+    bt = jnp.asarray(block_table, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
+
+    def kv_index(b, g, j, bt, pos):
+        return (jnp.minimum(bt[b, j], P - 1), g, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, nb),
+        in_specs=[
+            pl.BlockSpec((None, None, rep, hd),
+                         lambda b, g, j, bt, pos: (b, g, 0, 0)),
+            pl.BlockSpec((None, None, page_size, hd), kv_index),
+            pl.BlockSpec((None, None, page_size, 1), kv_index),
+            pl.BlockSpec((None, None, page_size, hd), kv_index),
+            pl.BlockSpec((None, None, page_size, 1), kv_index),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, hd),
+                               lambda b, g, j, bt, pos: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel_int8, scale=scale, window=window,
+                          page_size=page_size, nb=nb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, rep, hd), q.dtype),
+        interpret=interpret,
+    )(bt, pos_arr, qr, kr, ksr, vr, vsr)
     return out.reshape(B, H, hd)

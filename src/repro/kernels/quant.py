@@ -1,0 +1,90 @@
+"""Symmetric int8 KV quantization for the paged arena (DESIGN.md §11).
+
+The decode roofline is memory-bound: every tick streams the resident KV
+pool through HBM, so halving the pool's bytes halves the dominant
+``memory_s`` term the pass-budget autotuner packs against — and doubles
+how many pages fit a fixed HBM reservation. This module is the single
+definition of the quantization math used by
+
+* the paged pool's quantize-on-write paths (prefill scatter and the
+  per-step append in ``models/attention.attn_decode_paged``),
+* the fused dequantizing Pallas kernel
+  (``kernels/paged_decode_attention.paged_decode_attention_int8_pallas``)
+  and its jnp oracles, and
+* the slot-arena ``REPRO_KV_QUANT=int8`` cache (bf16 scales for
+  backward compatibility with its pinned layout).
+
+Granularity: one scale per **(position, kv-head)** row — the last
+(``head_dim``) axis shares a scale. Coarser (per-page) scales would force
+a whole-page requantize on every decode append (and drift already-written
+values); finer (per-element) scales would store as many bytes as they
+save. Per-row scales keep appends one-row writes and cost
+``4 / head_dim`` extra bytes per element (fp32 scales — the scale is the
+error bound's anchor, so it is not itself rounded).
+
+Exactness contract (property-tested in ``tests/test_quant.py``): for any
+row ``x`` with ``amax = max|x|``,
+
+    |x - dequantize(quantize(x))| <= max(amax, EPS) / 254   elementwise
+
+i.e. half a quantization step. Zeros round-trip exactly; rows whose amax
+underflows ``EPS`` (denormals) quantize to zero, and their absolute error
+``|x| < EPS`` is still below the bound.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# amax floor: keeps the scale finite on all-zero / denormal rows. Any row
+# whose true amax is below this quantizes to exact zeros (error < EPS).
+EPS = 1e-20
+QMAX = 127.0
+
+
+def quantize_kv(x, *, scale_dtype=jnp.float32, eps: float = EPS):
+    """Symmetric per-row int8 quantization over the trailing axis.
+
+    x (..., hd) -> (values int8 (..., hd), scales ``scale_dtype`` (..., 1)).
+    ``scale = max(amax, eps) / 127`` so the representable range covers the
+    row exactly (no saturation); round-to-nearest keeps the elementwise
+    error within ``scale / 2``. ``eps`` floors the amax (the slot arena's
+    legacy ``REPRO_KV_QUANT`` path pins its historical 1e-6 here; the
+    paged §11 path uses :data:`EPS` so even denormal rows stay bounded).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, eps) / QMAX
+    q = jnp.clip(jnp.round(xf / scale), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale.astype(scale_dtype)
+
+
+def dequantize_kv(values, scales, dtype=jnp.float32):
+    """values int8 (..., hd) x scales (..., 1) -> (..., hd) ``dtype``."""
+    return (values.astype(jnp.float32)
+            * scales.astype(jnp.float32)).astype(dtype)
+
+
+def roundtrip_bound(x):
+    """Per-element abs-error bound for ``dequantize(quantize(x))`` (the
+    §11 contract): half a quantization step, anchored at the row amax."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return jnp.broadcast_to(jnp.maximum(amax, EPS) / (2.0 * QMAX), x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("scale_dtype",))
+def quantize_page(page, scale_dtype=jnp.float32):
+    """Jitted page-granular entry point: quantize one page's KV rows
+    (``(page_size, kv_heads, head_dim)`` or any batch thereof) in one
+    fused kernel — per-(position, kv-head) scales, one XLA compile per
+    shape."""
+    return quantize_kv(page, scale_dtype=scale_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def dequantize_page(values, scales, dtype=jnp.bfloat16):
+    """Jitted inverse of :func:`quantize_page`."""
+    return dequantize_kv(values, scales, dtype)

@@ -71,6 +71,37 @@ def ref_paged_decode_attention(q, k_pages, v_pages, block_table, pos, *,
     return o.reshape(B, H, hd)
 
 
+def ref_paged_decode_attention_int8(q, k_pages, k_scales, v_pages, v_scales,
+                                    block_table, pos, *,
+                                    window: int | None = None):
+    """Dequantizing paged oracle: gather int8 pages + per-(position,
+    kv-head) scales through the block table, dequantize to fp32
+    (``values * scales`` — exactly the kernel's in-loop multiply), then
+    the masked-softmax decode step. Shapes as
+    ``ref_paged_decode_attention`` with k/v split into int8 values
+    (P,ps,K,hd) and fp32 scales (P,ps,K,1)."""
+    B, H, hd = q.shape
+    P, ps, K = k_pages.shape[:3]
+    nb = block_table.shape[1]
+    rep = H // K
+    bt = jnp.clip(block_table, 0, P - 1)
+    deq = lambda vals, scl: (vals[bt].astype(jnp.float32)
+                             * scl[bt].astype(jnp.float32)
+                             ).reshape(B, nb * ps, K, hd)
+    k = deq(k_pages, k_scales)
+    v = deq(v_pages, v_scales)
+    qg = q.reshape(B, K, rep, hd).astype(jnp.float32)
+    s = jnp.einsum("bkrh,bskh->bkrs", qg, k) / math.sqrt(hd)
+    kpos = jnp.arange(nb * ps)
+    valid = kpos[None, :] <= pos[:, None]
+    if window is not None:
+        valid = valid & (kpos[None, :] > pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrs,bskh->bkrh", w, v).astype(q.dtype)
+    return o.reshape(B, H, hd)
+
+
 def ref_decode_attention(q, k, v, pos, *, window: int | None = None):
     """q (B,H,hd) one token; k,v (B,S,K,hd); pos scalar int (the query's
     position; cache entries [0, pos] are valid)."""

@@ -59,11 +59,13 @@ def run_continuous(params, cfg, args) -> None:
                            selective_fraction=args.fraction, seed=args.seed,
                            stop_on_eos=False, kv=args.kv,
                            page_size=args.page_size,
-                           reservation=args.reservation)
+                           reservation=args.reservation,
+                           kv_dtype=args.kv_dtype)
     eng.serve_trace(reqs, arrivals)
     print(f"[continuous] {eng.metrics.summary()}")
     hbm = eng.kv_hbm_bytes()
-    print(f"[kv={args.kv:5s}] reserved={hbm['reserved_bytes']/2**20:.2f}MiB "
+    print(f"[kv={args.kv:5s}] dtype={hbm.get('kv_dtype', 'bf16')} "
+          f"reserved={hbm['reserved_bytes']/2**20:.2f}MiB "
           f"peak_in_use={hbm['peak_in_use_bytes']/2**20:.2f}MiB")
     if args.reservation == "lazy":
         m = eng.metrics
@@ -108,6 +110,10 @@ def main() -> None:
                          "reservation at admission; lazy = prompt pages "
                          "only, on-demand growth, uncond prefix sharing "
                          "and priority preemption (DESIGN.md §10)")
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8"], default="bf16",
+                    help="continuous --kv paged: page pool dtype (int8 = "
+                         "quantized pages + fp32 per-row scales, ~2x pages "
+                         "per byte, DESIGN.md \u00a711)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--fraction", type=float, default=0.2,
@@ -119,6 +125,8 @@ def main() -> None:
     if args.reservation == "lazy" and args.kv != "paged":
         ap.error("--reservation lazy requires --kv paged "
                  "(the slot arena reserves whole rows)")
+    if args.kv_dtype == "int8" and args.kv != "paged":
+        ap.error("--kv-dtype int8 requires --kv paged")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

@@ -199,15 +199,17 @@ def _kv_quant() -> bool:
 
 
 def _quantize_kv(x):
-    """x (B,S,K,hd) -> (int8 values, bf16 scales (B,S,K,1))."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-6) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.bfloat16)
+    """Slot-arena env-var path: bf16 scales and the historical 1e-6 amax
+    floor (the pinned REPRO_KV_QUANT cache behavior). The paged
+    ``kv_dtype="int8"`` arena uses the fp32-scale forms in
+    ``repro.kernels.quant`` directly."""
+    from repro.kernels.quant import quantize_kv
+    return quantize_kv(x, scale_dtype=jnp.bfloat16, eps=1e-6)
 
 
 def _dequantize_kv(q, scale, dtype):
-    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+    from repro.kernels.quant import dequantize_kv
+    return dequantize_kv(q, scale, dtype)
 
 
 def attn_forward_auto(params, cfg, x, positions, *, causal=True, window=None,
@@ -304,22 +306,39 @@ def _paged_kernel() -> bool:
 
 
 def paged_cache_spec(cfg, mk, num_pages: int, page_size: int,
-                     dtype=jnp.bfloat16):
+                     dtype=jnp.bfloat16, *, kv_dtype: str = "bf16"):
     """One layer's share of the paged KV pool.
 
     Pages are whole-pool resources (``pages`` leading axis), not
     per-request rows; the ``pages``/``page`` logical names are wired into
     the §3 rule tables so ``dist`` shards the pool like any other cache.
+
+    ``kv_dtype="int8"`` (DESIGN.md §11) stores int8 values plus paired
+    per-(position, kv-head) fp32 scale leaves (``k_scale``/``v_scale``,
+    shape ``(pages, page, kv_heads, 1)``). The scale leaves reuse the
+    same ``pages``/``page`` logical names, so the §3 rule tables shard
+    them alongside the values with no extra rules, and every pool-wide
+    op (CoW ``copy_page``, defrag-free page moves, partition specs)
+    treats the pair as one physical page.
     """
+    if kv_dtype not in ("bf16", "int8"):
+        raise ValueError(f"kv_dtype {kv_dtype!r} not in ('bf16', 'int8')")
     K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
-    return {
+    val_dtype = jnp.int8 if kv_dtype == "int8" else dtype
+    p = {
         "k": mk((num_pages, page_size, K, hd),
                 ("pages", "page", "kv_heads", "head_dim"), init="zeros",
-                dtype=dtype),
+                dtype=val_dtype),
         "v": mk((num_pages, page_size, K, hd),
                 ("pages", "page", "kv_heads", "head_dim"), init="zeros",
-                dtype=dtype),
+                dtype=val_dtype),
     }
+    if kv_dtype == "int8":
+        for name in ("k_scale", "v_scale"):
+            p[name] = mk((num_pages, page_size, K, 1),
+                         ("pages", "page", "kv_heads", None), init="zeros",
+                         dtype=jnp.float32)
+    return p
 
 
 def attn_decode_paged(params, cfg, x, pool, block_table, pos, *,
@@ -335,7 +354,11 @@ def attn_decode_paged(params, cfg, x, pool, block_table, pos, *,
 
     Returns (out (B,1,D), updated pool). The new K/V is scattered into
     the row's current page before attention, so the semantics match
-    ``attn_decode`` exactly on the covered positions.
+    ``attn_decode`` exactly on the covered positions. An int8 pool
+    (``k_scale`` leaves present, DESIGN.md §11) quantizes on write —
+    the one-row append quantizes just the new position, never touching
+    already-written rows — and dequantizes on read, fused in-kernel
+    under ``REPRO_PAGED_ATTN=pallas``.
     """
     B = x.shape[0]
     P, ps = pool["k"].shape[:2]
@@ -344,24 +367,48 @@ def attn_decode_paged(params, cfg, x, pool, block_table, pos, *,
     q, k_new, v_new = _qkv(params, cfg, x, pos[:, None])
     wpage = jnp.take_along_axis(block_table, (pos // ps)[:, None], axis=1)[:, 0]
     woff = pos % ps
-    k_pool = pool["k"].at[wpage, woff].set(
-        k_new[:, 0].astype(pool["k"].dtype), mode="drop")
-    v_pool = pool["v"].at[wpage, woff].set(
-        v_new[:, 0].astype(pool["v"].dtype), mode="drop")
-    new_pool = {"k": k_pool, "v": v_pool}
+    quant = "k_scale" in pool
+    put = lambda leaf, val: leaf.at[wpage, woff].set(
+        val.astype(leaf.dtype), mode="drop")
+    if quant:
+        from repro.kernels.quant import quantize_kv
+        kq, ks = quantize_kv(k_new[:, 0])            # (B,K,hd) -> + (B,K,1)
+        vq, vs = quantize_kv(v_new[:, 0])
+        new_pool = {"k": put(pool["k"], kq), "v": put(pool["v"], vq),
+                    "k_scale": put(pool["k_scale"], ks),
+                    "v_scale": put(pool["v_scale"], vs)}
+    else:
+        new_pool = {"k": put(pool["k"], k_new[:, 0]),
+                    "v": put(pool["v"], v_new[:, 0])}
     qg = _group(q, cfg.num_kv_heads)                 # (B,1,K,rep,hd)
     hd = q.shape[-1]
     if _paged_kernel():
-        from repro.kernels.paged_decode_attention import \
-            paged_decode_attention_pallas
-        ctx = paged_decode_attention_pallas(
-            q[:, 0], k_pool, v_pool, block_table, pos, window=window,
-            interpret=jax.default_backend() != "tpu")
+        interpret = jax.default_backend() != "tpu"
+        if quant:
+            from repro.kernels.paged_decode_attention import \
+                paged_decode_attention_int8_pallas
+            ctx = paged_decode_attention_int8_pallas(
+                q[:, 0], new_pool["k"], new_pool["k_scale"],
+                new_pool["v"], new_pool["v_scale"], block_table, pos,
+                window=window, interpret=interpret)
+        else:
+            from repro.kernels.paged_decode_attention import \
+                paged_decode_attention_pallas
+            ctx = paged_decode_attention_pallas(
+                q[:, 0], new_pool["k"], new_pool["v"], block_table, pos,
+                window=window, interpret=interpret)
         ctx = ctx.reshape(B, 1, cfg.num_kv_heads, qg.shape[3], hd)
         return _out_proj(params, ctx, x.dtype), new_pool
     bt = jnp.clip(block_table, 0, P - 1)
-    k = k_pool[bt].reshape(B, nb * ps, cfg.num_kv_heads, hd)
-    v = v_pool[bt].reshape(B, nb * ps, cfg.num_kv_heads, hd)
+    if quant:
+        from repro.kernels.quant import dequantize_kv
+        k = dequantize_kv(new_pool["k"][bt], new_pool["k_scale"][bt],
+                          x.dtype).reshape(B, nb * ps, cfg.num_kv_heads, hd)
+        v = dequantize_kv(new_pool["v"][bt], new_pool["v_scale"][bt],
+                          x.dtype).reshape(B, nb * ps, cfg.num_kv_heads, hd)
+    else:
+        k = new_pool["k"][bt].reshape(B, nb * ps, cfg.num_kv_heads, hd)
+        v = new_pool["v"][bt].reshape(B, nb * ps, cfg.num_kv_heads, hd)
     scores = jnp.einsum("bqkrh,bskh->bkrqs", qg, k).astype(jnp.float32) \
         / math.sqrt(hd)
     kpos = jnp.arange(nb * ps)
@@ -372,6 +419,46 @@ def attn_decode_paged(params, cfg, x, pool, block_table, pos, *,
     w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     ctx = jnp.einsum("bkrqs,bskh->bqkrh", w, v)
     return _out_proj(params, ctx, x.dtype), new_pool
+
+
+def paged_scatter_prefill(pool_layer, cache_layer, pages, offs):
+    """Scatter one layer's batched-prefill KV into its paged pool,
+    quantizing on write when the pool is int8.
+
+    ``cache_layer`` {k, v} with leaves (kb, Sb, K, hd) — or (n, kb, Sb,
+    K, hd) for stacked scan segments; ``pool_layer`` the matching paged
+    pool (values, plus scale leaves when quantized); ``pages``/``offs``
+    (kb*Sb,) flattened per-position destinations (out-of-range pages —
+    padding rows, masked uncond shares, positions past a short prompt —
+    drop). Quantize-on-write keeps prefill one-pass: the scatter is the
+    only traversal of the prefill KV, so the int8 conversion rides it for
+    free instead of re-reading the pool afterwards (DESIGN.md §11).
+    """
+    from repro.kernels.quant import quantize_kv
+
+    quant = "k_scale" in pool_layer
+
+    def put(pool_leaf, vals):
+        if pool_leaf.ndim == 5:                      # stacked scan segment
+            return pool_leaf.at[:, pages, offs].set(
+                vals.astype(pool_leaf.dtype), mode="drop")
+        return pool_leaf.at[pages, offs].set(
+            vals.astype(pool_leaf.dtype), mode="drop")
+
+    out = {}
+    for name in ("k", "v"):
+        c = cache_layer[name]
+        if c.ndim == 5:                              # (n, kb, Sb, K, hd)
+            flat = c.reshape(c.shape[0], -1, *c.shape[3:])
+        else:                                        # (kb, Sb, K, hd)
+            flat = c.reshape(-1, *c.shape[2:])
+        if quant:
+            vals, scales = quantize_kv(flat)
+            out[name] = put(pool_layer[name], vals)
+            out[name + "_scale"] = put(pool_layer[name + "_scale"], scales)
+        else:
+            out[name] = put(pool_layer[name], flat)
+    return out
 
 
 # ---------------------------------------------------------------------------

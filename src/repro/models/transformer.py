@@ -284,13 +284,15 @@ def cache_specs(cfg, mk, batch: int, capacity: int, *, long_ctx=False,
 
 
 def paged_cache_specs(cfg, mk, num_pages: int, page_size: int,
-                      dtype=jnp.bfloat16):
+                      dtype=jnp.bfloat16, *, kv_dtype: str = "bf16"):
     """Per-layer paged KV pools, same segment structure as ``cache_specs``.
 
     Every block must be a plain GQA attention block (``attn``/``swa``
     without MLA): pages hold KV rows, and non-KV state (recurrent, xLSTM,
     MLA latents) has no page structure to share. Raises ``ValueError``
     for unpageable stacks so the serving engine can fail admission early.
+    ``kv_dtype="int8"`` pools carry paired scale leaves per layer
+    (DESIGN.md §11).
     """
     if cfg.mla is not None:
         raise ValueError("paged KV arena requires plain GQA attention "
@@ -305,12 +307,13 @@ def paged_cache_specs(cfg, mk, num_pages: int, page_size: int,
                                  f"blocks, got {kind!r}")
         if seg[0] == "plain":
             out.append(A.paged_cache_spec(cfg, mk, num_pages, page_size,
-                                          dtype=dtype))
+                                          dtype=dtype, kv_dtype=kv_dtype))
         else:
             _, pattern, n = seg
             smk = L.StackedMaker(mk, n)
             out.append([A.paged_cache_spec(cfg, smk, num_pages, page_size,
-                                           dtype=dtype) for _ in pattern])
+                                           dtype=dtype, kv_dtype=kv_dtype)
+                        for _ in pattern])
     return out
 
 

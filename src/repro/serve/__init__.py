@@ -19,8 +19,9 @@ from repro.serve.scheduler import (Scheduler, TickPlan, provision_growth,
 from repro.serve.sim import (SimRequest, compare_policies, poisson_arrivals,
                              poisson_trace, simulate)
 from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
-                               fresh_lazy_needs, paged_partition_specs,
-                               pages_for, pool_partition_specs,
+                               fresh_lazy_needs, kv_page_bytes, page_nbytes,
+                               paged_partition_specs, pages_for,
+                               pages_for_pool_bytes, pool_partition_specs,
                                pooled_cache_axes, resume_lazy_needs,
                                stream_page_needs)
 
@@ -28,7 +29,8 @@ __all__ = [
     "ArrivalQueue", "BudgetAutotuner", "ContinuousEngine", "PageAllocator",
     "PrefixShareRegistry", "Scheduler", "ServeMetrics", "ServeRequest",
     "SimRequest", "StatePool", "TickPlan", "TickRecord", "compare_policies",
-    "fresh_lazy_needs", "paged_partition_specs", "pages_for",
+    "fresh_lazy_needs", "kv_page_bytes", "page_nbytes",
+    "paged_partition_specs", "pages_for", "pages_for_pool_bytes",
     "pool_partition_specs", "pooled_cache_axes", "poisson_arrivals",
     "poisson_trace", "provision_growth", "resume_lazy_needs", "simulate",
     "stream_page_needs", "victim_key",

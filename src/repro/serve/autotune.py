@@ -3,9 +3,12 @@
 The per-tick ``pass_budget`` was a constant; this module derives it from
 the same roofline terms ``repro.roofline`` extracts for the dry-run
 reports. The engine lowers + compiles one step per *occupancy signature*
-(``(n_full, n_cond)``), the autotuner turns each compiled executable into
-a predicted step latency ``max(compute_s, memory_s, collective_s)`` and a
-per-pass cost ``latency / (2*n_full + n_cond)``, and the budget is the
+(``(n_full, n_cond)``), the autotuner keys each observation by signature
+*and KV dtype* (an int8 pool step streams ~half the bytes of a bf16 one,
+so the same occupancy prices differently per dtype), turns the compiled
+executable into a predicted step latency ``max(compute_s, memory_s,
+collective_s)`` and a per-pass cost ``latency / (2*n_full + n_cond)``,
+and the budget is the
 largest pass count whose predicted tick latency fits the operator's
 ``target_tick_s``. The engine observes the two pure signatures ((1,0) and
 (0,1)) once, on its first tick; the budget uses the *worst* observed
@@ -40,17 +43,27 @@ class BudgetAutotuner:
     min_budget: int = 2
     max_budget: int | None = None
     chips: int = 1
-    per_pass_s: dict[tuple[int, int], float] = field(default_factory=dict)
+    per_pass_s: dict[tuple, float] = field(default_factory=dict)
 
-    def observe(self, signature: tuple[int, int], compiled) -> float:
+    def observe(self, signature: tuple[int, int], compiled, *,
+                kv_dtype: str = "bf16") -> float:
         """Record one compiled step's roofline latency; returns the
-        signature's per-pass seconds."""
+        signature's per-pass seconds.
+
+        Entries are keyed ``(n_full, n_cond, kv_dtype)``: an int8 and a
+        bf16 compile of the same occupancy are *different* executables
+        (the int8 step streams ~half the KV bytes, so its memory_s — the
+        decode roofline's dominant term — is much lower). Keying on
+        occupancy alone would let whichever dtype compiled last overwrite
+        the other and the worst-per-pass budget would be priced off a
+        stale dtype.
+        """
         n_full, n_cond = signature
         passes = 2 * n_full + n_cond
         if passes <= 0:
             raise ValueError(signature)
         per_pass = signature_latency(compiled, chips=self.chips) / passes
-        self.per_pass_s[signature] = per_pass
+        self.per_pass_s[(n_full, n_cond, kv_dtype)] = per_pass
         return per_pass
 
     @property
@@ -74,8 +87,8 @@ class BudgetAutotuner:
     def report(self) -> dict:
         return {
             "target_tick_s": self.target_tick_s,
-            "per_pass_s": {f"{nf},{nc}": v
-                           for (nf, nc), v in sorted(self.per_pass_s.items())},
+            "per_pass_s": {",".join(map(str, k)): v
+                           for k, v in sorted(self.per_pass_s.items())},
             "worst_per_pass_s": self.worst_per_pass_s,
             "budget": self.budget(),
         }

@@ -36,6 +36,17 @@ cursor + generated tokens + RNG key checkpointed, re-admitted through
 the front of the queue with its KV rebuilt by one batched forward, token
 stream bit-identical to an uninterrupted run.
 
+``kv_dtype="int8"`` (paged only, DESIGN.md §11) stores the page pool as
+int8 values paired with per-(position, kv-head) fp32 scales: prefill
+scatter and decode append quantize on write, the block-table kernel
+dequantizes in-loop, and admission/occupancy metrics price pages in
+HBM bytes at the pool dtype — an int8 page pins ~half the bytes of a
+bf16 page, which is exactly the admission headroom the equal-bytes
+benchmark measures. The bf16 default path is bit-identical to the
+unquantized engine; int8 is lossy under the §11 bounded-exactness
+contract (pinned roundtrip bound, kernel-vs-oracle parity, greedy
+token identity on short golden traces).
+
 Compile caches: step functions are keyed on the tick's **occupancy
 signature** ``(n_full, n_cond)``, rounded up to power-of-two buckets so a
 B-slot engine compiles O(log²B) variants, not O(B²); prefills are keyed
@@ -68,10 +79,11 @@ from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import ArrivalQueue, ServeRequest
 from repro.serve.scheduler import (Scheduler, TickPlan, provision_growth)
 from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
-                               fresh_lazy_needs, pages_for, resume_lazy_needs,
-                               stream_page_needs)
+                               fresh_lazy_needs, kv_page_bytes, pages_for,
+                               resume_lazy_needs, stream_page_needs)
 
 KV_MODES = ("slot", "paged")
+KV_DTYPES = ("bf16", "int8")
 RESERVATION_MODES = ("eager", "lazy")
 
 
@@ -175,9 +187,15 @@ class ContinuousEngine:
                  kv: str = "slot", page_size: int = 8,
                  num_pages: int | None = None,
                  reservation: str = "eager",
+                 kv_dtype: str = "bf16",
                  target_tick_s: float = 50e-3):
         if kv not in KV_MODES:
             raise ValueError(f"kv {kv!r} not in {KV_MODES}")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype {kv_dtype!r} not in {KV_DTYPES}")
+        if kv_dtype == "int8" and kv != "paged":
+            raise ValueError('kv_dtype="int8" requires kv="paged" (the '
+                             "slot arena quantizes via REPRO_KV_QUANT)")
         if reservation not in RESERVATION_MODES:
             raise ValueError(f"reservation {reservation!r} not in "
                              f"{RESERVATION_MODES}")
@@ -197,6 +215,7 @@ class ContinuousEngine:
         self.prefills_per_tick = prefills_per_tick
         self.bucket = bucket
         self.kv = kv
+        self.kv_dtype = kv_dtype
         self.page_size = page_size
         self.nb_max = pages_for(self.capacity, page_size)
 
@@ -219,15 +238,22 @@ class ContinuousEngine:
         if kv == "paged":
             # fail fast on unpageable stacks (recurrent state, MLA latents)
             from repro.models import layers as L
-            T.paged_cache_specs(cfg, L.AxesMaker(), 1, page_size)
+            T.paged_cache_specs(cfg, L.AxesMaker(), 1, page_size,
+                                kv_dtype=kv_dtype)
             self.num_pages = num_pages if num_pages is not None \
                 else 2 * num_slots * self.nb_max
-            self.pages = PageAllocator(self.num_pages, page_size)
+            self.pages = PageAllocator(self.num_pages, page_size,
+                                       kv_dtype=kv_dtype)
             if reservation == "lazy":
                 self._prefix = PrefixShareRegistry(self.pages)
         self.scheduler = Scheduler(self.pass_budget, policy=policy,
                                    starvation_limit=starvation_limit)
         self.metrics = ServeMetrics()
+        self.page_bytes = kv_page_bytes(cfg, page_size, kv_dtype) \
+            if kv == "paged" else 0
+        # price pages in HBM bytes at the pool's dtype so occupancy
+        # metrics compare across bf16/int8 (abstract specs only)
+        self.metrics.page_bytes = self.page_bytes
         self.results: dict[str, list[int]] = {}
         self.tick_count = 0
 
@@ -297,6 +323,9 @@ class ContinuousEngine:
     def tick(self) -> TickPlan:
         t0 = time.perf_counter()
         now = self.tick_count
+        # metrics objects are replaceable (benchmarks reset them between
+        # warmup and measurement): keep the byte pricing installed
+        self.metrics.page_bytes = self.page_bytes
         for dead in self.queue.expire(now):
             self._resume.pop(dead.uid, None)   # a preempted request's ttl
             self.metrics.expired += 1          # keeps running while queued
@@ -697,7 +726,8 @@ class ContinuousEngine:
     def _init_paged_pool(self) -> None:
         from repro.models import layers as L
         specs = T.paged_cache_specs(self.cfg, L.SpecMaker(jnp.bfloat16),
-                                    self.num_pages, self.page_size)
+                                    self.num_pages, self.page_size,
+                                    kv_dtype=self.kv_dtype)
         self._pool_p = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), specs)
 
@@ -732,21 +762,23 @@ class ContinuousEngine:
         key = ("prefill", Sb, kb)
         if key in self._jit:
             return self._jit[key]
-        cfg, rules, ps = self.cfg, self.rules, self.page_size
+        cfg, rules = self.cfg, self.rules
+        ps = self.page_size
 
-        def scatter(pool_leaf, cache_leaf, pages, offs):
-            # cache (kb, Sb, K, hd), pool (P, ps, K, hd) — or with a
-            # leading layers axis on both for scan segments; pages / offs
-            # (kb*Sb,). Out-of-range pages (padding, or positions a short
-            # prompt never covers) drop.
-            if pool_leaf.ndim == 5:                         # stacked
-                n = cache_leaf.shape[0]
-                vals = cache_leaf.reshape(n, kb * Sb, *cache_leaf.shape[3:])
-                return pool_leaf.at[:, pages, offs].set(
-                    vals.astype(pool_leaf.dtype), mode="drop")
-            vals = cache_leaf.reshape(kb * Sb, *cache_leaf.shape[2:])
-            return pool_leaf.at[pages, offs].set(
-                vals.astype(pool_leaf.dtype), mode="drop")
+        # per-layer scatter (models/attention.paged_scatter_prefill):
+        # cache {k,v} (kb, Sb, K, hd) — or with a leading layers axis for
+        # scan segments — lands in the matching pool layer through the
+        # flattened (kb*Sb,) pages/offs; out-of-range pages (padding, or
+        # positions a short prompt never covers) drop. An int8 pool
+        # quantizes on write inside the same traversal, so prefill stays
+        # one-pass (DESIGN.md §11).
+        is_layer = lambda x: isinstance(x, dict)
+
+        def scatter_all(pool, caches, pages, offs):
+            from repro.models import attention as A
+            return jax.tree.map(
+                lambda p, c: A.paged_scatter_prefill(p, c, pages, offs),
+                pool, caches, is_leaf=is_layer)
 
         def fn(params, pool, tokens, tokens_u, true_len, btc, btu, keys,
                scales, temps):
@@ -774,10 +806,8 @@ class ContinuousEngine:
             slot_of = posidx // ps                          # (Sb,) table col
             pages_c = btc[:, slot_of].reshape(kb * Sb)
             pages_u = btu[:, slot_of].reshape(kb * Sb)
-            pool = jax.tree.map(
-                lambda p, c: scatter(p, c, pages_c, offs), pool, caches_c)
-            pool = jax.tree.map(
-                lambda p, c: scatter(p, c, pages_u, offs), pool, caches_u)
+            pool = scatter_all(pool, caches_c, pages_c, offs)
+            pool = scatter_all(pool, caches_u, pages_u, offs)
             return pool, tok0
 
         self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1))
@@ -937,7 +967,8 @@ class ContinuousEngine:
                         oob_slot(nf), i32(nf), i32(nf), f32(nf), f32(nf),
                         u32(nf, 2), i32(nf), oob_slot(nc), i32(nc), i32(nc),
                         f32(nc), u32(nc, 2), i32(nc))
-            self._autotuner.observe(sig, fn.lower(*args).compile())
+            self._autotuner.observe(sig, fn.lower(*args).compile(),
+                                    kv_dtype=self.kv_dtype)
             # warm the jit dispatch cache too: the AOT compile above does
             # not populate it, and (1,0)/(0,1) are the most common real
             # signatures — pay both compiles here, not on live traffic
@@ -962,14 +993,13 @@ class ContinuousEngine:
         from repro.models import layers as L
         leaf_bytes = lambda s: _math.prod(s.shape) * np.dtype(s.dtype).itemsize
         if self.kv == "paged":
-            specs = T.paged_cache_specs(self.cfg, L.SpecMaker(jnp.bfloat16),
-                                        self.num_pages, self.page_size)
-            reserved = sum(leaf_bytes(l) for l in jax.tree.leaves(specs))
-            per_page = reserved / self.num_pages
-            return {"kv": "paged", "reserved_bytes": reserved,
-                    "page_bytes": per_page,
+            # every pool leaf scales linearly in num_pages, so the spec-
+            # derived per-page price from __init__ is the whole accounting
+            return {"kv": "paged", "kv_dtype": self.kv_dtype,
+                    "reserved_bytes": self.num_pages * self.page_bytes,
+                    "page_bytes": self.page_bytes,
                     "peak_in_use_bytes":
-                        int(self.metrics.peak_pages_in_use * per_page),
+                        self.metrics.peak_pages_in_use * self.page_bytes,
                     "num_pages": self.num_pages,
                     "page_size": self.page_size}
         S, cap, cfg = self.prompt_len, self.capacity, self.cfg

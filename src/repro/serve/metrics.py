@@ -28,6 +28,9 @@ class TickRecord:
     active: int            # requests resident in slots
     queue_depth: int
     pages_in_use: int = 0  # paged arena only: granted pages this tick
+    bytes_in_use: int = 0  # pages_in_use priced in HBM bytes at the pool's
+                           # kv_dtype (page counts are not comparable across
+                           # dtypes; bytes are — DESIGN.md §11)
 
 
 @dataclass
@@ -64,6 +67,9 @@ class ServeMetrics:
     pages_reclaimed: int = 0     # paged arena: pages returned before
                                  # completion (COND-transition reclaim)
     peak_pages_in_use: int = 0   # paged arena: high-water page occupancy
+    page_bytes: int = 0          # HBM bytes one page pins (dtype-aware:
+                                 # int8 pages are ~2x denser than bf16);
+                                 # 0 until the engine/sim installs it
     pages_grown: int = 0         # lazy reservation: pages granted on demand
                                  # at tick boundaries (vs reserved up front)
     shared_page_hits: int = 0    # uncond prompt-prefix pages served by the
@@ -87,7 +93,8 @@ class ServeMetrics:
                     pages_in_use: int = 0) -> None:
         self.records.append(TickRecord(tick, n_full, n_cond,
                                        2 * n_full + n_cond, budget, active,
-                                       queue_depth, pages_in_use))
+                                       queue_depth, pages_in_use,
+                                       pages_in_use * self.page_bytes))
         if len(self.records) > self.max_records:
             del self.records[: -self.max_records]
         self.denoiser_passes += 2 * n_full + n_cond
@@ -157,6 +164,13 @@ class ServeMetrics:
     def ticks(self) -> int:
         return self._ticks
 
+    @property
+    def peak_bytes_in_use(self) -> int:
+        """High-water KV-pool occupancy in HBM bytes — the cross-dtype
+        comparable form of ``peak_pages_in_use`` (an int8 page pins ~half
+        the bytes of a bf16 page, so page counts alone overstate it)."""
+        return self.peak_pages_in_use * self.page_bytes
+
     def mean_in_flight(self) -> float:
         """Mean requests *scheduled* per tick — the acceptance metric: the
         phase-aware packer must beat the static engine on this at equal
@@ -190,6 +204,8 @@ class ServeMetrics:
             "utilization": round(self.utilization(), 3),
             "pages_reclaimed": self.pages_reclaimed,
             "peak_pages_in_use": self.peak_pages_in_use,
+            "page_bytes": self.page_bytes,
+            "peak_bytes_in_use": self.peak_bytes_in_use,
             "pages_grown": self.pages_grown,
             "shared_page_hits": self.shared_page_hits,
             "cow_copies": self.cow_copies,

@@ -78,7 +78,8 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
              prefills_per_tick: int | None = None, queue_depth: int = 4096,
              max_ticks: int = 100_000, kv: str = "slot",
              page_size: int = 4, num_pages: int | None = None,
-             reservation: str = "eager", on_tick=None) -> SimReport:
+             reservation: str = "eager", kv_dtype: str = "bf16",
+             page_bytes: int | None = None, on_tick=None) -> SimReport:
     """Replay ``trace`` against a scheduler policy; returns a
     :class:`SimReport` whose metrics mirror the real engine's.
 
@@ -93,6 +94,14 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
     ``shared_page_hits``, ``cow_copies`` and ``preemptions`` measured
     offline equal the real engine's on the same trace. Unconditional
     pages are reclaimed at the FULL->COND transition either way.
+
+    ``kv_dtype`` labels the page pool the bookkeeping fronts ("bf16" or
+    "int8"); page *counts* and every scheduling decision are identical
+    across dtypes (quantization changes bytes per page, never pages per
+    request), but ``page_bytes`` — HBM bytes one page pins, e.g. from
+    :func:`repro.serve.state.page_nbytes` — prices the per-tick
+    ``bytes_in_use`` / ``peak_bytes_in_use`` counters so occupancy is
+    comparable across dtypes, mirroring the engine's accounting.
 
     ``on_tick(tick, pages, sched, queue)``, when given, runs at the end
     of every simulated tick — the serve-invariant harness hooks
@@ -113,7 +122,7 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                   default=page_size)
         if num_pages is None:
             num_pages = 2 * num_slots * pages_for(cap, page_size)
-        pages = PageAllocator(num_pages, page_size)
+        pages = PageAllocator(num_pages, page_size, kv_dtype=kv_dtype)
         if reservation == "lazy":
             prefix = PrefixShareRegistry(pages)
         for r in trace:
@@ -122,6 +131,8 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
     sched = Scheduler(pass_budget, policy=policy,
                       starvation_limit=starvation_limit)
     metrics = ServeMetrics()
+    if page_bytes is not None:
+        metrics.page_bytes = page_bytes
     report = SimReport(metrics)
     cursors: dict[str, PlanCursor] = {}
     sim_req: dict[str, SimRequest] = {r.uid: r for r in trace}

@@ -126,6 +126,50 @@ def pages_for(span: int, page_size: int) -> int:
     return -(-span // page_size)
 
 
+def page_nbytes(page_size: int, kv_heads: int, head_dim: int,
+                n_layers: int, kv_dtype: str = "bf16") -> int:
+    """Physical HBM bytes one page pins across the whole stack — the
+    model-free form shared by the simulator and the golden-trace harness
+    (the engine derives the same number from its abstract specs;
+    ``tests/test_quant.py`` pins that they agree).
+
+    Per (position, kv-head): K+V values at 2 bytes (bf16) or 1 byte
+    (int8), plus two fp32 scales when int8 (DESIGN.md §11). The pool is
+    per-layer, so the page spans ``n_layers`` copies.
+    """
+    if kv_dtype == "bf16":
+        per_poshead = 2 * head_dim * 2
+    elif kv_dtype == "int8":
+        per_poshead = 2 * head_dim * 1 + 2 * 4
+    else:
+        raise ValueError(kv_dtype)
+    return n_layers * page_size * kv_heads * per_poshead
+
+
+def kv_page_bytes(cfg, page_size: int, kv_dtype: str = "bf16") -> int:
+    """Per-page HBM bytes for ``cfg``'s paged pool, derived from the
+    abstract cache specs (never allocates). This is the dtype-aware unit
+    the engine's admission/HBM accounting and the equal-bytes benchmark
+    sizing multiply page counts by."""
+    import math as _math
+
+    import jax
+    import jax.numpy as jnp
+
+    specs = T.paged_cache_specs(cfg, L.SpecMaker(jnp.bfloat16), 1, page_size,
+                                kv_dtype=kv_dtype)
+    return sum(_math.prod(l.shape) * np.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(specs))
+
+
+def pages_for_pool_bytes(cfg, pool_bytes: int, page_size: int,
+                         kv_dtype: str = "bf16") -> int:
+    """How many pages of ``kv_dtype`` fit a fixed HBM budget — int8 pages
+    are ~2x denser, which is exactly the admission headroom the
+    ``--kv-dtype`` benchmark measures."""
+    return max(1, int(pool_bytes // kv_page_bytes(cfg, page_size, kv_dtype)))
+
+
 def stream_page_needs(plan, prompt_len: int,
                       page_size: int) -> tuple[int, int]:
     """Worst-case ``(cond, uncond)`` pages one request can ever touch.
@@ -204,13 +248,28 @@ class PageAllocator:
       never handed out again by :meth:`alloc` (no double-grant);
     * ``sum(refcounts) == sum(len(owned pages) over owners)``;
     * ``n_free + len({pages with ref > 0}) == num_pages``.
+
+    ``kv_dtype`` records what the device pool this allocator fronts
+    stores per page: ``"bf16"`` (values only) or ``"int8"`` (int8 values
+    **paired** with per-(position, kv-head) fp32 scale arrays, DESIGN.md
+    §11). A physical page index addresses the values and the scales
+    together — one refcount governs the pair — so every grant / grow /
+    share / cow / free above is dtype-agnostic and the paired arrays can
+    never diverge: a CoW detach copies both payloads through the same
+    ``(src, dst)``, and a page returning to the free list frees both.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    KV_DTYPES = ("bf16", "int8")
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 kv_dtype: str = "bf16"):
         if num_pages < 1 or page_size < 1:
             raise ValueError((num_pages, page_size))
+        if kv_dtype not in self.KV_DTYPES:
+            raise ValueError(f"kv_dtype {kv_dtype!r} not in {self.KV_DTYPES}")
         self.num_pages = num_pages
         self.page_size = page_size
+        self.kv_dtype = kv_dtype
         # LIFO free list, initialized so alloc hands out low indices first
         self._free = list(range(num_pages - 1, -1, -1))
         self._ref = np.zeros(num_pages, np.int32)
@@ -518,20 +577,25 @@ def pool_partition_specs(cfg, num_slots: int, capacity: int, *,
 
 
 def paged_partition_specs(cfg, num_pages: int, page_size: int, *,
-                          rules: AxisRules, mesh, dtype=None):
+                          rules: AxisRules, mesh, dtype=None,
+                          kv_dtype: str = "bf16"):
     """PartitionSpec tree for the paged KV pool under ``rules``.
 
     Unlike the slot arena there is no relabelling step: the pool's own
     logical names (``pages``/``page``, §3) are first-class rule-table
     entries, so the same allocator (divisibility fallbacks and all)
-    shards the page pool directly.
+    shards the page pool directly. ``kv_dtype="int8"`` scale leaves carry
+    the same ``pages``/``page`` names, so they shard alongside the values
+    with no extra rules — a physical page's values and scales always land
+    on the same device.
     """
     import jax
     import jax.numpy as jnp
 
-    axes = T.paged_cache_specs(cfg, L.AxesMaker(), num_pages, page_size)
+    axes = T.paged_cache_specs(cfg, L.AxesMaker(), num_pages, page_size,
+                               kv_dtype=kv_dtype)
     specs = T.paged_cache_specs(cfg, L.SpecMaker(dtype or jnp.bfloat16),
-                                num_pages, page_size)
+                                num_pages, page_size, kv_dtype=kv_dtype)
 
     def one(names, spec):
         return logical_to_spec(names, rules, shape=spec.shape, mesh=mesh)

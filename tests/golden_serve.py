@@ -24,6 +24,10 @@ GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
 # Trace spec: arrivals from poisson_arrivals(seed=23, rate=1.1), prompt
 # lengths and priorities cycling so the paged pool sees mixed lengths,
 # partial pages (5 % 4 != 0 -> CoW under lazy) and priority preemption.
+# kv_heads/head_dim/n_layers are the *nominal* pool dims the byte pricing
+# (repro.serve.state.page_nbytes) multiplies page counts by — the
+# simulator is model-free, so per-tick bytes_in_use is pages times this
+# dtype-aware constant, exactly like the engine's accounting.
 SPEC = {
     "seed": 23,
     "n": 10,
@@ -33,6 +37,9 @@ SPEC = {
     "guidance_scale": 4.0,
     "prompt_lens": [3, 5, 8],
     "priorities": [0, 2, 1],
+    "kv_heads": 2,
+    "head_dim": 16,
+    "n_layers": 2,
 }
 
 PARAMS = {
@@ -48,11 +55,19 @@ CONFIGS = {
     "slot": {"kv": "slot", "reservation": "eager", "num_pages": None},
     "paged_eager": {"kv": "paged", "reservation": "eager", "num_pages": 14},
     "paged_lazy": {"kv": "paged", "reservation": "lazy", "num_pages": 14},
+    # same trace, same pool *bytes* as paged_lazy's 14 bf16 pages (14 *
+    # 1024 B // 640 B = 22 int8 pages at the nominal dims): int8 pages
+    # are denser, so the pool holds more pages and the growth/preemption
+    # tick-by-tick decisions shift — pinned here so the byte accounting
+    # AND the extra-headroom schedule can't drift silently
+    "paged_int8": {"kv": "paged", "reservation": "lazy", "num_pages": 22,
+                   "kv_dtype": "int8"},
 }
 
 SUMMARY_KEYS = (
     "ticks", "completed", "tokens", "denoiser_passes", "prefill_passes",
-    "pages_reclaimed", "peak_pages_in_use", "pages_grown",
+    "pages_reclaimed", "peak_pages_in_use", "page_bytes",
+    "peak_bytes_in_use", "pages_grown",
     "shared_page_hits", "cow_copies", "preemptions", "resumes",
 )
 
@@ -72,18 +87,24 @@ def build_trace(spec=None):
             for i, t in enumerate(arrivals)]
 
 
-def run_config(trace, name, params=None):
-    from repro.serve import simulate
+def run_config(trace, name, params=None, spec=None):
+    from repro.serve import page_nbytes, simulate
 
     cfg = CONFIGS[name]
+    spec = spec or SPEC
     p = dict(params or PARAMS)
     page_size = p.pop("page_size")
     kw = dict(p, kv=cfg["kv"], reservation=cfg["reservation"])
     if cfg["kv"] == "paged":
-        kw.update(page_size=page_size, num_pages=cfg["num_pages"])
+        kv_dtype = cfg.get("kv_dtype", "bf16")
+        kw.update(page_size=page_size, num_pages=cfg["num_pages"],
+                  kv_dtype=kv_dtype,
+                  page_bytes=page_nbytes(page_size, spec["kv_heads"],
+                                         spec["head_dim"], spec["n_layers"],
+                                         kv_dtype))
     rep = simulate(trace, **kw)
     records = [[r.tick, r.n_full, r.n_cond, r.active, r.queue_depth,
-                r.pages_in_use] for r in rep.metrics.records]
+                r.pages_in_use, r.bytes_in_use] for r in rep.metrics.records]
     summary = {k: rep.metrics.summary()[k] for k in SUMMARY_KEYS}
     return {"records": records, "summary": summary}
 

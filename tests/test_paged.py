@@ -479,7 +479,7 @@ def test_pass_budget_autotune_from_roofline(small_model):
     report = eng._autotuner.report()
     assert eng.pass_budget == eng.scheduler.pass_budget == report["budget"]
     assert 2 <= eng.pass_budget <= 2 * eng.num_slots
-    assert set(report["per_pass_s"]) == {"0,1", "1,0"}
+    assert set(report["per_pass_s"]) == {"0,1,bf16", "1,0,bf16"}
     # monotonicity of the hook itself (no second engine compile needed)
     tuner = eng._autotuner
     small = type(tuner)(target_tick_s=1e-9, min_budget=2,

@@ -216,14 +216,18 @@ def golden():
         return json.load(f)
 
 
-@pytest.mark.parametrize("config", ["slot", "paged_eager", "paged_lazy"])
+@pytest.mark.parametrize("config",
+                         ["slot", "paged_eager", "paged_lazy", "paged_int8"])
 def test_golden_trace_replay(golden, config):
     """The checked-in per-tick metrics replay exactly: any packing,
-    paging, sharing or preemption policy drift fails here first.
+    paging, sharing or preemption policy drift fails here first — the
+    ``paged_int8`` config additionally pins the dtype-aware per-tick
+    page *and byte* counters at equal pool bytes to ``paged_lazy``.
     Regenerate (intentionally) with: PYTHONPATH=src python
     tests/golden_serve.py"""
     trace = golden_serve.build_trace(golden["spec"])
-    got = golden_serve.run_config(trace, config, golden["params"])
+    got = golden_serve.run_config(trace, config, golden["params"],
+                                  golden["spec"])
     exp = golden["expected"][config]
     assert got["summary"] == exp["summary"]
     assert got["records"] == exp["records"]
