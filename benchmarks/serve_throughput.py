@@ -30,8 +30,16 @@ Int8 pages pin ~half the HBM per page, so the same byte budget holds
 reported as reserved-vs-peak HBM in *bytes* (page counts are not
 comparable across dtypes) plus peak concurrent admits.
 
+Part 6 (``--kv paged``, any dtype): the ragged flat-pass-list step vs
+the per-signature compile cache on the same trace — token-identical
+outputs, exactly one warm-up compile for the ragged step with **zero**
+recompiles after warm-up (the per-signature cache pays one compile per
+phase-mix bucket traffic discovers), and per-tick wall time reported
+side by side. ``--step`` picks the mode the other parts run under.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput [--tiny] \
-        [--kv paged] [--reservation lazy] [--kv-dtype int8]
+        [--kv paged] [--reservation lazy] [--kv-dtype int8] \
+        [--step auto|ragged|signature]
 """
 
 from __future__ import annotations
@@ -84,7 +92,8 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
                           rate: float, seed: int = 0,
                           kv: str = "slot", page_size: int = 4,
                           reservation: str = "eager",
-                          kv_dtype: str = "bf16") -> dict:
+                          kv_dtype: str = "bf16",
+                          step: str = "auto") -> dict:
     arrivals = poisson_arrivals(seed, n=n_req, rate=rate)
     budget = 2 * batch
 
@@ -98,7 +107,8 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
                            prompt_len=prompt_len, max_new=max_new,
                            selective_fraction=fraction, stop_on_eos=False,
                            kv=kv, page_size=page_size,
-                           reservation=reservation, kv_dtype=kv_dtype)
+                           reservation=reservation, kv_dtype=kv_dtype,
+                           step_mode=None if step == "auto" else step)
     # arrivals are relative to the current tick, so the measured run
     # replays the same trace shape the warmup compiled for
     eng.serve_trace(make_reqs("w"), arrivals)     # warmup/compile
@@ -272,8 +282,57 @@ def _int8_vs_bf16(params, cfg, *, prompt_len: int, max_new: int,
     return {"pool_bytes": pool_bytes, **stats}
 
 
+def _ragged_vs_signature(params, cfg, *, n_req: int, prompt_len: int,
+                         max_new: int, fraction: float, batch: int,
+                         rate: float, seed: int = 0,
+                         page_size: int = 4) -> dict:
+    """Tentpole acceptance: the fixed-shape ragged pass-list step vs the
+    per-signature compile cache on the same paged trace. Outputs must be
+    token-identical; the ragged step must compile exactly once at warm-up
+    and never again (``step_compiles == 0`` on the measured run); per-tick
+    wall time is reported side by side (the measured signature run replays
+    the warm trace, so its cache is as favourable as it can be)."""
+    arrivals = poisson_arrivals(seed, n=n_req, rate=rate)
+
+    def make_reqs(tag):
+        return [ServeRequest(uid=f"{tag}{i}",
+                             prompt=PAPER_PROMPTS[i % len(PAPER_PROMPTS)],
+                             max_new_tokens=max_new)
+                for i in range(n_req)]
+
+    tokens, stats = {}, {}
+    for mode in ("signature", "ragged"):
+        eng = ContinuousEngine(params, cfg, num_slots=2 * batch,
+                               pass_budget=2 * batch, prompt_len=prompt_len,
+                               max_new=max_new, selective_fraction=fraction,
+                               stop_on_eos=False, kv="paged",
+                               page_size=page_size, step_mode=mode)
+        eng.serve_trace(make_reqs("w"), arrivals)     # warmup/compile
+        warm_compiles = eng.metrics.step_compiles
+        eng.metrics = ServeMetrics()
+        tokens[mode] = eng.serve_trace(make_reqs("c"), arrivals)
+        m = eng.metrics
+        stats[mode] = {"warm_compiles": warm_compiles,
+                       "recompiles": m.step_compiles,
+                       "launches": m.step_launches, "ticks": m.ticks,
+                       "tick_us": 1e6 * m.wall_s / max(m.ticks, 1)}
+        emit(f"serve/step_{mode}", stats[mode]["tick_us"],
+             f"warm_compiles={warm_compiles};recompiles={m.step_compiles};"
+             f"launches={m.step_launches};ticks={m.ticks}")
+    assert {u: t for u, t in tokens["ragged"].items()} == \
+        {u: t for u, t in tokens["signature"].items()}, \
+        "ragged step must be token-identical to the per-signature path"
+    assert stats["ragged"]["warm_compiles"] == 1, stats
+    assert stats["ragged"]["recompiles"] == 0, \
+        f"ragged step recompiled after warm-up: {stats['ragged']}"
+    return stats
+
+
 def run(tiny: bool = False, kv: str = "slot",
-        reservation: str = "eager", kv_dtype: str = "bf16") -> dict:
+        reservation: str = "eager", kv_dtype: str = "bf16",
+        step: str = "auto") -> dict:
+    if step == "ragged":
+        kv = "paged"                                # ragged implies paged
     if kv_dtype == "int8":
         kv = "paged"                                # int8 implies paged
         reservation = "lazy"                        # the burst acceptance
@@ -296,12 +355,16 @@ def run(tiny: bool = False, kv: str = "slot",
                                     fraction=fractions[-1], batch=batch,
                                     rate=4.0 if tiny else 1.5, kv=kv,
                                     reservation=reservation,
-                                    kv_dtype=kv_dtype)
+                                    kv_dtype=kv_dtype, step=step)
     out = {"rows": rows, "compare": compare}
     if kv == "paged":
         out["paged_mixed"] = _paged_mixed_lengths(
             params, cfg, prompt_len=prompt_len, max_new=max_new,
             fraction=fractions[-1], batch=batch)
+        out["ragged_vs_signature"] = _ragged_vs_signature(
+            params, cfg, n_req=n_req, prompt_len=prompt_len,
+            max_new=max_new, fraction=fractions[-1], batch=batch,
+            rate=4.0 if tiny else 1.5)
     if reservation == "lazy" and kv_dtype == "bf16":
         out["lazy_vs_eager"] = _lazy_vs_eager(
             params, cfg, prompt_len=prompt_len, max_new=max_new,
@@ -329,9 +392,15 @@ if __name__ == "__main__":
                          "fp32 per-row scales; implies --kv paged "
                          "--reservation lazy and runs the equal-pool-bytes "
                          "admission comparison)")
+    ap.add_argument("--step", choices=["auto", "ragged", "signature"],
+                    default="auto",
+                    help="decode step mode for the continuous engine "
+                         "(ragged = one fixed-shape flat-pass-list step, "
+                         "one compile per model; implies --kv paged; auto "
+                         "= engine default: ragged when paged)")
     args = ap.parse_args()
     out = run(tiny=args.tiny, kv=args.kv, reservation=args.reservation,
-              kv_dtype=args.kv_dtype)
+              kv_dtype=args.kv_dtype, step=args.step)
     print("continuous-vs-static:", out["compare"]["continuous"])
     print("                     ", out["compare"]["static"])
     print(f"in-flight gain at equal pass budget: "
@@ -345,6 +414,14 @@ if __name__ == "__main__":
         print(f"paged mixed lens={pm['lens']}: "
               f"reclaimed={pm['summary']['pages_reclaimed']} pages, "
               f"peak={pm['summary']['peak_pages_in_use']}")
+    if "ragged_vs_signature" in out:
+        rs = out["ragged_vs_signature"]
+        print(f"step modes: ragged {rs['ragged']['tick_us']:.0f}us/tick "
+              f"({rs['ragged']['warm_compiles']} compile, "
+              f"{rs['ragged']['recompiles']} recompiles) vs signature "
+              f"{rs['signature']['tick_us']:.0f}us/tick "
+              f"({rs['signature']['warm_compiles']} compiles, "
+              f"{rs['signature']['recompiles']} recompiles)")
     if "lazy_vs_eager" in out:
         lv = out["lazy_vs_eager"]
         print(f"reservation @ {lv['num_pages']} pages: "

@@ -16,6 +16,24 @@ scales (``kernels.quant``) and the dequant multiply fuses into the same
 online-softmax loop, so the per-page HBM stream drops from ``2*hd`` bf16
 bytes to ``hd + 4``.
 
+``ragged_paged_decode_attention_pallas`` (and its int8 twin) is the
+fixed-shape **ragged** form (DESIGN.md §12): one launch processes a whole
+tick's flat pass list — every row is one denoiser pass (a FULL request
+contributes a cond and an uncond row, a COND request one row, the rest
+padding) with a per-row ``phase`` scalar prefetched next to the block
+table and positions. ``phase == 0`` rows are inert: the index map clamps
+their page sweep to a single block (consecutive identical blocks elide
+the DMA) and the online-softmax update is skipped under ``pl.when``, so
+dead rows cost neither bandwidth nor FLOPs and their output is exactly
+zero. Live rows skip trailing blocks past ``pos`` the same way, so a
+short row in a long-capacity launch only streams the pages it owns.
+
+All kernels take a ``block_k`` sub-page tile (a divisor of ``page_size``;
+default = whole pages): the grid's page sweep subdivides into
+``page_size // block_k`` steps per page, trading grid overhead against
+VMEM residency. :func:`autotune_block_k` times the candidates once per
+shape and caches the winner.
+
 Positions are per-row (mixed-length serving): ``pos[b]`` masks validity
 (``kpos <= pos[b]``, plus an optional sliding window). Block-table
 entries past a request's allocated pages hold an out-of-range physical
@@ -27,6 +45,7 @@ from __future__ import annotations
 
 import functools
 import math
+import time
 
 import jax
 import jax.numpy as jnp
@@ -36,11 +55,14 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _attend_page(j, pos, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
-                 scale: float, window, page_size: int, nb: int):
-    """One grid step of the online-softmax state machine, shared by the
-    bf16 and int8 kernels (which differ only in how they load q/k/v):
-    q (rep, hd), k/v (page_size, hd) — already dequantized."""
+def _attend_block(j, pos, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, window, block_k: int, nb: int, active=None):
+    """One grid step of the online-softmax state machine, shared by all
+    four kernels (which differ only in how they load q/k/v and whether a
+    step may be skipped): q (rep, hd), k/v (block_k, hd) — already
+    dequantized. ``active`` (ragged kernels) gates the update: init and
+    the final write-out always run, so a row whose every step is skipped
+    still writes a well-defined zero output."""
 
     @pl.when(j == 0)
     def _init():
@@ -48,24 +70,31 @@ def _attend_page(j, pos, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    kpos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
-    valid = kpos <= pos
-    if window is not None:
-        valid = valid & (kpos > pos - window)
-    s = jnp.where(valid, s, NEG_INF)                 # (rep, page_size)
+    def _update():
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (1, block_k), 1)
+        valid = kpos <= pos
+        if window is not None:
+            valid = valid & (kpos > pos - window)
+        s = jnp.where(valid, s, NEG_INF)             # (rep, block_k)
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1))
-    p = jnp.exp(s - m_new[..., None])
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
-    acc_ref[...] = (acc_ref[...] * corr[..., None]
-                    + jax.lax.dot_general(p.astype(v.dtype), v,
-                                          (((1,), (0,)), ((), ())),
-                                          preferred_element_type=jnp.float32))
-    m_ref[...] = m_new
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * corr[..., None]
+                        + jax.lax.dot_general(p.astype(v.dtype), v,
+                                              (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    if active is None:
+        _update()
+    else:
+        pl.when(active)(_update)
 
     @pl.when(j == nb - 1)
     def _finish():
@@ -75,9 +104,9 @@ def _attend_page(j, pos, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
 
 def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
             acc_ref, **kw):
-    _attend_page(pl.program_id(2), pos_ref[pl.program_id(0)],
-                 q_ref[...], k_ref[...], v_ref[...],
-                 o_ref, m_ref, l_ref, acc_ref, **kw)
+    _attend_block(pl.program_id(2), pos_ref[pl.program_id(0)],
+                  q_ref[...], k_ref[...], v_ref[...],
+                  o_ref, m_ref, l_ref, acc_ref, **kw)
 
 
 def _kernel_int8(bt_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
@@ -87,22 +116,64 @@ def _kernel_int8(bt_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
     ever streams the int8 payload (the dominant roofline term at decode)."""
     k = k_ref[...].astype(jnp.float32) * ks_ref[...]
     v = v_ref[...].astype(jnp.float32) * vs_ref[...]
-    _attend_page(pl.program_id(2), pos_ref[pl.program_id(0)],
-                 q_ref[...].astype(jnp.float32), k, v,
-                 o_ref, m_ref, l_ref, acc_ref, **kw)
+    _attend_block(pl.program_id(2), pos_ref[pl.program_id(0)],
+                  q_ref[...].astype(jnp.float32), k, v,
+                  o_ref, m_ref, l_ref, acc_ref, **kw)
+
+
+def _ragged_active(pos_ref, phase_ref, *, block_k: int):
+    """Per-step liveness for the ragged kernels: a row participates only
+    while it is a real pass (``phase > 0``) and the current block starts
+    at or before its position."""
+    r, j = pl.program_id(0), pl.program_id(2)
+    return (phase_ref[r] > 0) & (j * block_k <= pos_ref[r])
+
+
+def _kernel_ragged(bt_ref, pos_ref, phase_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, block_k, **kw):
+    _attend_block(pl.program_id(2), pos_ref[pl.program_id(0)],
+                  q_ref[...], k_ref[...], v_ref[...],
+                  o_ref, m_ref, l_ref, acc_ref, block_k=block_k,
+                  active=_ragged_active(pos_ref, phase_ref, block_k=block_k),
+                  **kw)
+
+
+def _kernel_ragged_int8(bt_ref, pos_ref, phase_ref, q_ref, k_ref, ks_ref,
+                        v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        block_k, **kw):
+    k = k_ref[...].astype(jnp.float32) * ks_ref[...]
+    v = v_ref[...].astype(jnp.float32) * vs_ref[...]
+    _attend_block(pl.program_id(2), pos_ref[pl.program_id(0)],
+                  q_ref[...].astype(jnp.float32), k, v,
+                  o_ref, m_ref, l_ref, acc_ref, block_k=block_k,
+                  active=_ragged_active(pos_ref, phase_ref, block_k=block_k),
+                  **kw)
+
+
+def _resolve_block_k(block_k, page_size: int) -> int:
+    bk = page_size if block_k is None else int(block_k)
+    if bk < 1 or page_size % bk:
+        raise ValueError(f"block_k {block_k!r} must divide "
+                         f"page_size={page_size}")
+    return bk
 
 
 def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, pos, *,
                                   window: int | None = None,
+                                  block_k: int | None = None,
                                   interpret: bool = True):
     """q (B,H,hd); k_pages/v_pages (P, page_size, K, hd); block_table
     (B, nb) int32 (out-of-range entries = padding); pos (B,) int32.
-    Returns (B,H,hd)."""
+    ``block_k`` (divisor of page_size, default whole pages) tiles the
+    per-page sweep. Returns (B,H,hd)."""
     B, H, hd = q.shape
     P, page_size, K = k_pages.shape[:3]
     nb = block_table.shape[1]
     rep = H // K
     scale = 1.0 / math.sqrt(hd)
+    bk = _resolve_block_k(block_k, page_size)
+    n_sub = page_size // bk
+    nb_tot = nb * n_sub
 
     qr = q.reshape(B, K, rep, hd)
     kr = k_pages.transpose(0, 2, 1, 3)               # (P, K, page_size, hd)
@@ -111,16 +182,16 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, pos, *,
     pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
 
     def kv_index(b, g, j, bt, pos):
-        return (jnp.minimum(bt[b, j], P - 1), g, 0, 0)
+        return (jnp.minimum(bt[b, j // n_sub], P - 1), g, j % n_sub, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, K, nb),
+        grid=(B, K, nb_tot),
         in_specs=[
             pl.BlockSpec((None, None, rep, hd),
                          lambda b, g, j, bt, pos: (b, g, 0, 0)),
-            pl.BlockSpec((None, None, page_size, hd), kv_index),
-            pl.BlockSpec((None, None, page_size, hd), kv_index),
+            pl.BlockSpec((None, None, bk, hd), kv_index),
+            pl.BlockSpec((None, None, bk, hd), kv_index),
         ],
         out_specs=pl.BlockSpec((None, None, rep, hd),
                                lambda b, g, j, bt, pos: (b, g, 0, 0)),
@@ -132,7 +203,7 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, pos, *,
     )
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, window=window,
-                          page_size=page_size, nb=nb),
+                          block_k=bk, nb=nb_tot),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, rep, hd), q.dtype),
         interpret=interpret,
@@ -143,6 +214,7 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, pos, *,
 def paged_decode_attention_int8_pallas(q, k_pages, k_scales, v_pages,
                                        v_scales, block_table, pos, *,
                                        window: int | None = None,
+                                       block_k: int | None = None,
                                        interpret: bool = True):
     """Fused dequantizing form: q (B,H,hd); k_pages/v_pages
     (P, page_size, K, hd) **int8**; k_scales/v_scales (P, page_size, K, 1)
@@ -157,6 +229,9 @@ def paged_decode_attention_int8_pallas(q, k_pages, k_scales, v_pages,
     nb = block_table.shape[1]
     rep = H // K
     scale = 1.0 / math.sqrt(hd)
+    bk = _resolve_block_k(block_k, page_size)
+    n_sub = page_size // bk
+    nb_tot = nb * n_sub
 
     qr = q.reshape(B, K, rep, hd)
     kr = k_pages.transpose(0, 2, 1, 3)               # (P, K, page_size, hd)
@@ -167,18 +242,18 @@ def paged_decode_attention_int8_pallas(q, k_pages, k_scales, v_pages,
     pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
 
     def kv_index(b, g, j, bt, pos):
-        return (jnp.minimum(bt[b, j], P - 1), g, 0, 0)
+        return (jnp.minimum(bt[b, j // n_sub], P - 1), g, j % n_sub, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, K, nb),
+        grid=(B, K, nb_tot),
         in_specs=[
             pl.BlockSpec((None, None, rep, hd),
                          lambda b, g, j, bt, pos: (b, g, 0, 0)),
-            pl.BlockSpec((None, None, page_size, hd), kv_index),
-            pl.BlockSpec((None, None, page_size, 1), kv_index),
-            pl.BlockSpec((None, None, page_size, hd), kv_index),
-            pl.BlockSpec((None, None, page_size, 1), kv_index),
+            pl.BlockSpec((None, None, bk, hd), kv_index),
+            pl.BlockSpec((None, None, bk, 1), kv_index),
+            pl.BlockSpec((None, None, bk, hd), kv_index),
+            pl.BlockSpec((None, None, bk, 1), kv_index),
         ],
         out_specs=pl.BlockSpec((None, None, rep, hd),
                                lambda b, g, j, bt, pos: (b, g, 0, 0)),
@@ -190,9 +265,184 @@ def paged_decode_attention_int8_pallas(q, k_pages, k_scales, v_pages,
     )
     out = pl.pallas_call(
         functools.partial(_kernel_int8, scale=scale, window=window,
-                          page_size=page_size, nb=nb),
+                          block_k=bk, nb=nb_tot),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, rep, hd), q.dtype),
         interpret=interpret,
     )(bt, pos_arr, qr, kr, ksr, vr, vsr)
     return out.reshape(B, H, hd)
+
+
+def ragged_paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
+                                         pos, phase, *,
+                                         window: int | None = None,
+                                         block_k: int | None = None,
+                                         interpret: bool = True):
+    """Fixed-shape ragged pass-list form (DESIGN.md §12).
+
+    q (R,H,hd) — one row per denoiser pass (mixed cond/uncond/padding);
+    k_pages/v_pages (P, page_size, K, hd); block_table (R, nb) int32
+    (out-of-range entries = padding); pos (R,) int32; phase (R,) int32 —
+    ``0`` marks a padding row (output exactly zero, no pages streamed,
+    no FLOPs), any positive value a live pass. Returns (R,H,hd).
+
+    The page sweep for row ``r`` is clamped to ``pos[r] // page_size``:
+    grid steps past a row's live span re-request the block they already
+    hold (consecutive identical index-map results elide the DMA) and the
+    online-softmax update is skipped under ``pl.when``, so a launch
+    padded to the tick's worst case costs only the live rows' pages."""
+    R, H, hd = q.shape
+    P, page_size, K = k_pages.shape[:3]
+    nb = block_table.shape[1]
+    rep = H // K
+    scale = 1.0 / math.sqrt(hd)
+    bk = _resolve_block_k(block_k, page_size)
+    n_sub = page_size // bk
+    nb_tot = nb * n_sub
+
+    qr = q.reshape(R, K, rep, hd)
+    kr = k_pages.transpose(0, 2, 1, 3)               # (P, K, page_size, hd)
+    vr = v_pages.transpose(0, 2, 1, 3)
+    bt = jnp.asarray(block_table, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(R)
+    phase_arr = jnp.asarray(phase, jnp.int32).reshape(R)
+
+    def kv_index(r, g, j, bt, pos, phase):
+        # clamp the sweep to the row's last live page: inert steps repeat
+        # the held block (DMA elided) instead of streaming dead pages
+        jp = jnp.minimum(jnp.minimum(j // n_sub, pos[r] // page_size),
+                         nb - 1)
+        return (jnp.minimum(bt[r, jp], P - 1), g, j % n_sub, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(R, K, nb_tot),
+        in_specs=[
+            pl.BlockSpec((None, None, rep, hd),
+                         lambda r, g, j, bt, pos, phase: (r, g, 0, 0)),
+            pl.BlockSpec((None, None, bk, hd), kv_index),
+            pl.BlockSpec((None, None, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, hd),
+                               lambda r, g, j, bt, pos, phase: (r, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel_ragged, scale=scale, window=window,
+                          block_k=bk, nb=nb_tot),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, K, rep, hd), q.dtype),
+        interpret=interpret,
+    )(bt, pos_arr, phase_arr, qr, kr, vr)
+    return out.reshape(R, H, hd)
+
+
+def ragged_paged_decode_attention_int8_pallas(q, k_pages, k_scales, v_pages,
+                                              v_scales, block_table, pos,
+                                              phase, *,
+                                              window: int | None = None,
+                                              block_k: int | None = None,
+                                              interpret: bool = True):
+    """Ragged + fused dequant: the int8 page layout of
+    ``paged_decode_attention_int8_pallas`` under the ragged pass-list
+    contract of ``ragged_paged_decode_attention_pallas``."""
+    R, H, hd = q.shape
+    P, page_size, K = k_pages.shape[:3]
+    nb = block_table.shape[1]
+    rep = H // K
+    scale = 1.0 / math.sqrt(hd)
+    bk = _resolve_block_k(block_k, page_size)
+    n_sub = page_size // bk
+    nb_tot = nb * n_sub
+
+    qr = q.reshape(R, K, rep, hd)
+    kr = k_pages.transpose(0, 2, 1, 3)               # (P, K, page_size, hd)
+    vr = v_pages.transpose(0, 2, 1, 3)
+    ksr = k_scales.astype(jnp.float32).transpose(0, 2, 1, 3)  # (P,K,ps,1)
+    vsr = v_scales.astype(jnp.float32).transpose(0, 2, 1, 3)
+    bt = jnp.asarray(block_table, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(R)
+    phase_arr = jnp.asarray(phase, jnp.int32).reshape(R)
+
+    def kv_index(r, g, j, bt, pos, phase):
+        jp = jnp.minimum(jnp.minimum(j // n_sub, pos[r] // page_size),
+                         nb - 1)
+        return (jnp.minimum(bt[r, jp], P - 1), g, j % n_sub, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(R, K, nb_tot),
+        in_specs=[
+            pl.BlockSpec((None, None, rep, hd),
+                         lambda r, g, j, bt, pos, phase: (r, g, 0, 0)),
+            pl.BlockSpec((None, None, bk, hd), kv_index),
+            pl.BlockSpec((None, None, bk, 1), kv_index),
+            pl.BlockSpec((None, None, bk, hd), kv_index),
+            pl.BlockSpec((None, None, bk, 1), kv_index),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, hd),
+                               lambda r, g, j, bt, pos, phase: (r, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel_ragged_int8, scale=scale, window=window,
+                          block_k=bk, nb=nb_tot),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, K, rep, hd), q.dtype),
+        interpret=interpret,
+    )(bt, pos_arr, phase_arr, qr, kr, ksr, vr, vsr)
+    return out.reshape(R, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Block-size autotuning (per-shape, cached)
+# ---------------------------------------------------------------------------
+
+_BLOCK_TUNE_CACHE: dict[tuple, int] = {}
+
+
+def block_k_candidates(page_size: int) -> list[int]:
+    """Power-of-two divisors of ``page_size``, largest (whole pages)
+    first — the sweep :func:`autotune_block_k` prices."""
+    return [bk for bk in (page_size, page_size // 2, page_size // 4)
+            if bk >= 1 and page_size % bk == 0]
+
+
+def clear_block_tune_cache() -> None:
+    _BLOCK_TUNE_CACHE.clear()
+
+
+def autotune_block_k(run, key: tuple, candidates=None, *,
+                     iters: int = 2) -> int:
+    """Pick the fastest ``block_k`` for one kernel shape and cache it.
+
+    ``run(block_k)`` must execute the kernel at that tile (the caller
+    closes over its real arguments); ``key`` identifies the shape class
+    (pool dims, batch, dtype, ...) — the sweep runs once per distinct
+    key, every later call is a dict hit. One warm-up call per candidate
+    keeps compile time out of the measurement."""
+    if not candidates:
+        raise ValueError("no block_k candidates")
+    if key in _BLOCK_TUNE_CACHE:
+        return _BLOCK_TUNE_CACHE[key]
+    best, best_t = None, None
+    for bk in candidates:
+        jax.block_until_ready(run(bk))               # warm-up / compile
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(iters):
+            out = run(bk)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        if best_t is None or dt < best_t:
+            best, best_t = bk, dt
+    _BLOCK_TUNE_CACHE[key] = best
+    return best

@@ -102,6 +102,33 @@ def ref_paged_decode_attention_int8(q, k_pages, k_scales, v_pages, v_scales,
     return o.reshape(B, H, hd)
 
 
+def ref_ragged_paged_decode_attention(q, k_pages, v_pages, block_table, pos,
+                                      phase, *, window: int | None = None):
+    """Ragged pass-list oracle (DESIGN.md §12): rows with ``phase > 0``
+    behave exactly like :func:`ref_paged_decode_attention`; ``phase == 0``
+    rows are padding and produce an exactly-zero output (the kernel never
+    streams their pages, so zero is the only well-defined value). Shapes
+    as the paged oracle plus phase (R,) int32."""
+    out = ref_paged_decode_attention(q, k_pages, v_pages, block_table, pos,
+                                     window=window)
+    live = (jnp.asarray(phase, jnp.int32) > 0)[:, None, None]
+    return jnp.where(live, out, jnp.zeros_like(out))
+
+
+def ref_ragged_paged_decode_attention_int8(q, k_pages, k_scales, v_pages,
+                                           v_scales, block_table, pos,
+                                           phase, *,
+                                           window: int | None = None):
+    """Ragged + dequantizing oracle: ``phase``-gated form of
+    :func:`ref_paged_decode_attention_int8` (zero output on padding
+    rows, identical on live rows)."""
+    out = ref_paged_decode_attention_int8(q, k_pages, k_scales, v_pages,
+                                          v_scales, block_table, pos,
+                                          window=window)
+    live = (jnp.asarray(phase, jnp.int32) > 0)[:, None, None]
+    return jnp.where(live, out, jnp.zeros_like(out))
+
+
 def ref_decode_attention(q, k, v, pos, *, window: int | None = None):
     """q (B,H,hd) one token; k,v (B,S,K,hd); pos scalar int (the query's
     position; cache entries [0, pos] are valid)."""

@@ -60,9 +60,14 @@ def run_continuous(params, cfg, args) -> None:
                            stop_on_eos=False, kv=args.kv,
                            page_size=args.page_size,
                            reservation=args.reservation,
-                           kv_dtype=args.kv_dtype)
+                           kv_dtype=args.kv_dtype,
+                           step_mode=None if args.step == "auto"
+                           else args.step)
     eng.serve_trace(reqs, arrivals)
     print(f"[continuous] {eng.metrics.summary()}")
+    print(f"[step={eng.step_mode:9s}] "
+          f"compiles={eng.metrics.step_compiles} "
+          f"launches={eng.metrics.step_launches}")
     hbm = eng.kv_hbm_bytes()
     print(f"[kv={args.kv:5s}] dtype={hbm.get('kv_dtype', 'bf16')} "
           f"reserved={hbm['reserved_bytes']/2**20:.2f}MiB "
@@ -114,6 +119,12 @@ def main() -> None:
                     help="continuous --kv paged: page pool dtype (int8 = "
                          "quantized pages + fp32 per-row scales, ~2x pages "
                          "per byte, DESIGN.md \u00a711)")
+    ap.add_argument("--step", choices=["auto", "ragged", "signature"],
+                    default="auto",
+                    help="continuous: decode step mode (ragged = one "
+                         "fixed-shape flat-pass-list step, one compile per "
+                         "model, requires --kv paged; auto = engine "
+                         "default: ragged when paged, DESIGN.md §12)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--fraction", type=float, default=0.2,
@@ -127,6 +138,9 @@ def main() -> None:
                  "(the slot arena reserves whole rows)")
     if args.kv_dtype == "int8" and args.kv != "paged":
         ap.error("--kv-dtype int8 requires --kv paged")
+    if args.step == "ragged" and args.kv != "paged":
+        ap.error("--step ragged requires --kv paged (the flat pass list "
+                 "addresses KV through block tables)")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

@@ -342,7 +342,7 @@ def paged_cache_spec(cfg, mk, num_pages: int, page_size: int,
 
 
 def attn_decode_paged(params, cfg, x, pool, block_table, pos, *,
-                      window=None):
+                      window=None, phase=None):
     """One token per row vs the shared paged KV pool.
 
     x (B,1,D); pool {k,v: (P, page_size, K, hd)} — shared across every
@@ -351,6 +351,13 @@ def attn_decode_paged(params, cfg, x, pool, block_table, pos, *,
     reads clamp and are masked); pos (B,) int32 per-row positions — rows
     at *different* sequence positions step together, which is what lets
     mixed-length requests share one pool.
+
+    ``phase`` (B,) int32, when given, marks the batch as a **ragged pass
+    list** (DESIGN.md §12): rows with ``phase == 0`` are padding whose
+    attention output is exactly zero (their block tables are all
+    out-of-range, so their writes drop too), live rows are unchanged.
+    Under ``REPRO_PAGED_ATTN=pallas`` the ragged kernels additionally
+    skip the dead rows' page DMA and FLOPs inside the launch.
 
     Returns (out (B,1,D), updated pool). The new K/V is scattered into
     the row's current page before attention, so the semantics match
@@ -383,18 +390,24 @@ def attn_decode_paged(params, cfg, x, pool, block_table, pos, *,
     qg = _group(q, cfg.num_kv_heads)                 # (B,1,K,rep,hd)
     hd = q.shape[-1]
     if _paged_kernel():
+        from repro.kernels import paged_decode_attention as PDA
         interpret = jax.default_backend() != "tpu"
-        if quant:
-            from repro.kernels.paged_decode_attention import \
-                paged_decode_attention_int8_pallas
-            ctx = paged_decode_attention_int8_pallas(
+        if phase is not None and quant:
+            ctx = PDA.ragged_paged_decode_attention_int8_pallas(
+                q[:, 0], new_pool["k"], new_pool["k_scale"],
+                new_pool["v"], new_pool["v_scale"], block_table, pos,
+                phase, window=window, interpret=interpret)
+        elif phase is not None:
+            ctx = PDA.ragged_paged_decode_attention_pallas(
+                q[:, 0], new_pool["k"], new_pool["v"], block_table, pos,
+                phase, window=window, interpret=interpret)
+        elif quant:
+            ctx = PDA.paged_decode_attention_int8_pallas(
                 q[:, 0], new_pool["k"], new_pool["k_scale"],
                 new_pool["v"], new_pool["v_scale"], block_table, pos,
                 window=window, interpret=interpret)
         else:
-            from repro.kernels.paged_decode_attention import \
-                paged_decode_attention_pallas
-            ctx = paged_decode_attention_pallas(
+            ctx = PDA.paged_decode_attention_pallas(
                 q[:, 0], new_pool["k"], new_pool["v"], block_table, pos,
                 window=window, interpret=interpret)
         ctx = ctx.reshape(B, 1, cfg.num_kv_heads, qg.shape[3], hd)
@@ -418,6 +431,11 @@ def attn_decode_paged(params, cfg, x, pool, block_table, pos, *,
     scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     ctx = jnp.einsum("bkrqs,bskh->bqkrh", w, v)
+    if phase is not None:
+        # ragged padding rows attend over clamped garbage pages; pin their
+        # context to the kernels' exact-zero contract so both paths agree
+        live = (jnp.asarray(phase, jnp.int32) > 0)[:, None, None, None, None]
+        ctx = jnp.where(live, ctx, jnp.zeros_like(ctx))
     return _out_proj(params, ctx, x.dtype), new_pool
 
 

@@ -186,18 +186,21 @@ def block_decode(params, cfg, kind, x, cache, pos, *, moe_layer: bool,
 
 
 def block_decode_paged(params, cfg, kind, x, pool, block_table, pos, *,
-                       moe_layer: bool, long_ctx: bool = False):
+                       moe_layer: bool, long_ctx: bool = False, phase=None):
     """One-token step per row against the shared paged KV pool.
 
     Only attention caches page (KV grows with the sequence); recurrent /
     xLSTM state is O(1) per request and MLA latents keep their own layout,
     so paged serving is restricted to plain GQA attention stacks —
     enforced structurally by :func:`paged_cache_specs`.
+    ``phase`` marks a ragged pass list (DESIGN.md §12; see
+    :func:`repro.models.attention.attn_decode_paged`).
     """
     h = _norm(cfg, params["norm1"], x)
     window = _window(cfg, kind, long_ctx)
     mix, pool = A.attn_decode_paged(params["attn"], cfg, h, pool,
-                                    block_table, pos, window=window)
+                                    block_table, pos, window=window,
+                                    phase=phase)
     x = x + mix
     if "mlp" in params:
         h2 = _norm(cfg, params["norm2"], x)
@@ -318,12 +321,16 @@ def paged_cache_specs(cfg, mk, num_pages: int, page_size: int,
 
 
 def decode_step_paged(params, cfg, token_embeds, pools, block_table, pos, *,
-                      rules=None, long_ctx=False):
+                      rules=None, long_ctx=False, phase=None):
     """One-token step for the whole stack against paged KV pools.
 
     token_embeds (B,1,D); ``pools`` from :func:`paged_cache_specs`;
     block_table (B, nb) int32 shared by every layer (one table per
     request-stream, the pool is per-layer); pos (B,) int32 per-row.
+    ``phase`` (B,) int32, when given, marks the batch as a ragged pass
+    list: rows with ``phase == 0`` are padding (zero attention output,
+    dropped writes) — the fixed-shape contract the serving engine's
+    single-compile step relies on (DESIGN.md §12).
     Returns (hidden (B,1,D), new pools).
     """
     x = token_embeds
@@ -337,7 +344,7 @@ def decode_step_paged(params, cfg, token_embeds, pools, block_table, pos, *,
             moe_layer = _is_moe_layer(cfg, seen < leading_dense)
             x, p = block_decode_paged(seg_params, cfg, seg[1], x, seg_pool,
                                       block_table, pos, moe_layer=moe_layer,
-                                      long_ctx=long_ctx)
+                                      long_ctx=long_ctx, phase=phase)
             new_pools.append(p)
             seen += 1
         else:
@@ -351,7 +358,8 @@ def decode_step_paged(params, cfg, token_embeds, pools, block_table, pos, *,
                     x, p2 = block_decode_paged(bp, cfg, kind, x, p,
                                                block_table, pos,
                                                moe_layer=moe_layer,
-                                               long_ctx=long_ctx)
+                                               long_ctx=long_ctx,
+                                               phase=phase)
                     new_ps.append(p2)
                 return x, new_ps
 

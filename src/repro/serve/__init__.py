@@ -14,8 +14,8 @@ from repro.serve.autotune import BudgetAutotuner
 from repro.serve.engine import ContinuousEngine
 from repro.serve.metrics import ServeMetrics, TickRecord
 from repro.serve.queue import ArrivalQueue, ServeRequest
-from repro.serve.scheduler import (Scheduler, TickPlan, provision_growth,
-                                   victim_key)
+from repro.serve.scheduler import (PassRow, Scheduler, TickPlan, bucket_pow2,
+                                   provision_growth, victim_key)
 from repro.serve.sim import (SimRequest, compare_policies, poisson_arrivals,
                              poisson_trace, simulate)
 from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
@@ -27,8 +27,9 @@ from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
 
 __all__ = [
     "ArrivalQueue", "BudgetAutotuner", "ContinuousEngine", "PageAllocator",
-    "PrefixShareRegistry", "Scheduler", "ServeMetrics", "ServeRequest",
-    "SimRequest", "StatePool", "TickPlan", "TickRecord", "compare_policies",
+    "PassRow", "PrefixShareRegistry", "Scheduler", "ServeMetrics",
+    "ServeRequest", "SimRequest", "StatePool", "TickPlan", "TickRecord",
+    "bucket_pow2", "compare_policies",
     "fresh_lazy_needs", "kv_page_bytes", "page_nbytes",
     "paged_partition_specs", "pages_for", "pages_for_pool_bytes",
     "pool_partition_specs", "pooled_cache_axes", "poisson_arrivals",

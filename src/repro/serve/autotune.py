@@ -2,19 +2,28 @@
 
 The per-tick ``pass_budget`` was a constant; this module derives it from
 the same roofline terms ``repro.roofline`` extracts for the dry-run
-reports. The engine lowers + compiles one step per *occupancy signature*
-(``(n_full, n_cond)``), the autotuner keys each observation by signature
-*and KV dtype* (an int8 pool step streams ~half the bytes of a bf16 one,
-so the same occupancy prices differently per dtype), turns the compiled
+reports. Observations are keyed by step shape *and KV dtype* (an int8
+pool step streams ~half the bytes of a bf16 one, so the same occupancy
+prices differently per dtype); each observation turns the compiled
 executable into a predicted step latency ``max(compute_s, memory_s,
-collective_s)`` and a per-pass cost ``latency / (2*n_full + n_cond)``,
-and the budget is the
-largest pass count whose predicted tick latency fits the operator's
-``target_tick_s``. The engine observes the two pure signatures ((1,0) and
-(0,1)) once, on its first tick; the budget uses the *worst* observed
-per-pass cost so it never overpacks on the strength of a cheap signature.
-``observe`` accepts any signature, so a deployment that wants the model to
-sharpen as more shapes compile can feed it every step compile it performs.
+collective_s)`` and a per-pass cost ``latency / passes``. The budget is
+the largest pass count whose predicted tick latency fits the operator's
+``target_tick_s``, priced off the *worst* per-pass cost among the
+observations that apply to the pool's dtype — pricing off the global
+worst would let a stale observation from another dtype (a bf16 compile
+in an int8 run, say) shrink the budget for no physical reason.
+
+Two step shapes feed it:
+
+* signature mode observes the two pure occupancies ((1,0) and (0,1)),
+  keyed ``(n_full, n_cond, kv_dtype)``;
+* ragged mode observes its single fixed-width step, keyed
+  ``("ragged", rows, kv_dtype)``.
+
+When the budget the envelope allows falls below ``min_budget`` the
+clamp wins (a budget below 2 can't schedule one FULL step) — but then
+the engine is *knowingly* exceeding ``target_tick_s``.
+``envelope_violated`` surfaces that instead of clamping silently.
 """
 
 from __future__ import annotations
@@ -30,9 +39,21 @@ def signature_latency(compiled, *, chips: int = 1) -> float:
     return max(r.compute_s, r.memory_s, r.collective_s)
 
 
+def _key_dtype(key: tuple) -> str | None:
+    """The kv_dtype a per_pass_s key is scoped to, or None if unscoped.
+
+    Canonical keys end in the dtype string (``(1, 0, "bf16")``,
+    ``("ragged", 8, "int8")``). Bare occupancy tuples (``(1, 0)``) —
+    still accepted for direct injection in tests and external tools —
+    carry no dtype and apply to every pool.
+    """
+    tail = key[-1] if key else None
+    return tail if isinstance(tail, str) and tail != "ragged" else None
+
+
 @dataclass
 class BudgetAutotuner:
-    """Maps observed (signature -> compiled step) pairs to a pass budget.
+    """Maps observed (step shape -> compiled step) pairs to a pass budget.
 
     ``target_tick_s`` is the latency envelope one tick must fit;
     ``min_budget`` keeps the budget schedulable (one FULL step needs 2);
@@ -47,8 +68,8 @@ class BudgetAutotuner:
 
     def observe(self, signature: tuple[int, int], compiled, *,
                 kv_dtype: str = "bf16") -> float:
-        """Record one compiled step's roofline latency; returns the
-        signature's per-pass seconds.
+        """Record one compiled per-signature step's roofline latency;
+        returns the signature's per-pass seconds.
 
         Entries are keyed ``(n_full, n_cond, kv_dtype)``: an int8 and a
         bf16 compile of the same occupancy are *different* executables
@@ -66,16 +87,39 @@ class BudgetAutotuner:
         self.per_pass_s[(n_full, n_cond, kv_dtype)] = per_pass
         return per_pass
 
+    def observe_ragged(self, rows: int, compiled, *,
+                       kv_dtype: str = "bf16") -> float:
+        """Record the ragged step's roofline latency, keyed
+        ``("ragged", rows, kv_dtype)``. A fully packed ragged step runs
+        ``rows`` passes, so that is the per-pass divisor — padding rows
+        contribute (near-)zero streamed bytes and the roofline prices the
+        executable, not the occupancy, making this the honest fully-loaded
+        cost."""
+        if rows <= 0:
+            raise ValueError(rows)
+        per_pass = signature_latency(compiled, chips=self.chips) / rows
+        self.per_pass_s[("ragged", rows, kv_dtype)] = per_pass
+        return per_pass
+
+    def worst_for(self, kv_dtype: str | None = None) -> float | None:
+        """Worst observed per-pass seconds among entries that apply to
+        ``kv_dtype`` (dtype-unscoped legacy keys always apply); None
+        scopes to nothing, i.e. the global worst."""
+        vals = [v for k, v in self.per_pass_s.items()
+                if kv_dtype is None or _key_dtype(k) in (None, kv_dtype)]
+        return max(vals) if vals else None
+
     @property
     def worst_per_pass_s(self) -> float | None:
-        if not self.per_pass_s:
-            return None
-        return max(self.per_pass_s.values())
+        return self.worst_for(None)
 
-    def budget(self) -> int | None:
+    def budget(self, kv_dtype: str | None = None) -> int | None:
         """Largest pass count whose predicted tick time fits the target
-        (clamped to [min_budget, max_budget]); None before any observe."""
-        per_pass = self.worst_per_pass_s
+        (clamped to [min_budget, max_budget]); None before any applicable
+        observe. Pass the pool's ``kv_dtype`` to price off that dtype's
+        observations only (satellite fix: a stale other-dtype entry must
+        not set the budget)."""
+        per_pass = self.worst_for(kv_dtype)
         if per_pass is None:
             return None
         raw = int(self.target_tick_s / per_pass) if per_pass > 0 else \
@@ -84,11 +128,35 @@ class BudgetAutotuner:
             raw = min(raw, self.max_budget)
         return max(self.min_budget, raw)
 
-    def report(self) -> dict:
+    def predicted_tick_s(self, kv_dtype: str | None = None) -> float | None:
+        """Predicted latency of a fully packed tick at the chosen budget
+        — ``budget * worst_per_pass``. Exceeds ``target_tick_s`` exactly
+        when the ``min_budget`` clamp overrode the envelope."""
+        per_pass = self.worst_for(kv_dtype)
+        b = self.budget(kv_dtype)
+        if per_pass is None or b is None:
+            return None
+        return b * per_pass
+
+    def envelope_violated(self, kv_dtype: str | None = None) -> bool:
+        """True when the returned budget *knowingly* exceeds the operator's
+        ``target_tick_s`` — the ``min_budget`` clamp won, so a full tick is
+        predicted to run long. Callers that care about the envelope must
+        check this rather than trusting ``budget()`` silently."""
+        pred = self.predicted_tick_s(kv_dtype)
+        return pred is not None and pred > self.target_tick_s
+
+    def report(self, kv_dtype: str | None = None) -> dict:
+        """Full autotuner state. ``per_pass_s`` lists every observation;
+        worst/budget/predicted/violated scope to ``kv_dtype`` when given
+        (the pool's active dtype), else global."""
         return {
             "target_tick_s": self.target_tick_s,
             "per_pass_s": {",".join(map(str, k)): v
-                           for k, v in sorted(self.per_pass_s.items())},
-            "worst_per_pass_s": self.worst_per_pass_s,
-            "budget": self.budget(),
+                           for k, v in sorted(self.per_pass_s.items(),
+                                              key=lambda kv: str(kv[0]))},
+            "worst_per_pass_s": self.worst_for(kv_dtype),
+            "budget": self.budget(kv_dtype),
+            "predicted_tick_s": self.predicted_tick_s(kv_dtype),
+            "envelope_violated": self.envelope_violated(kv_dtype),
         }

@@ -47,18 +47,34 @@ unquantized engine; int8 is lossy under the §11 bounded-exactness
 contract (pinned roundtrip bound, kernel-vs-oracle parity, greedy
 token identity on short golden traces).
 
-Compile caches: step functions are keyed on the tick's **occupancy
-signature** ``(n_full, n_cond)``, rounded up to power-of-two buckets so a
-B-slot engine compiles O(log²B) variants, not O(B²); prefills are keyed
-on **pow2-padded length buckets** ``(S_bucket, k_bucket)`` so mixed-length
+Step modes (``step_mode=`` toggle, DESIGN.md §12):
+
+* ``"ragged"`` (paged default) — the whole tick runs as **one
+  fixed-shape step** over a flat pass list: each of ``ragged_rows``
+  rows is one denoiser pass with its own block table, position and
+  phase flag; FULL entries contribute a cond and an uncond row, COND
+  entries one, the rest is phase-0 padding the kernel skips. The step
+  compiles **exactly once per model** — there is no occupancy in the
+  jit key — which is the point: the per-signature cache below paid a
+  fresh XLA compile every time traffic found a new phase mix.
+* ``"signature"`` (slot arenas; opt-in for paged) — step functions are
+  keyed on the tick's **occupancy signature** ``(n_full, n_cond)``,
+  rounded up to power-of-two buckets so a B-slot engine compiles
+  O(log²B) variants, not O(B²).
+
+``metrics.step_compiles`` / ``metrics.step_launches`` count both modes
+(a compile is counted at jit-cache-miss time, so post-warm-up ragged
+traffic reads 0 recompiles). Prefills are keyed on **pow2-padded length
+buckets** ``(S_bucket, k_bucket)`` in either mode so mixed-length
 admission does not recompile per distinct prompt length. Padded rows use
 out-of-range indices — reads clamp (garbage compute on dead data), writes
 drop — so padding can never corrupt live state.
 
 ``pass_budget="auto"`` derives the budget from the roofline step-latency
-model per occupancy signature (``repro.serve.autotune``) instead of a
-constant: the engine lowers the two pure signatures, prices a denoiser
-pass, and packs as many passes as fit ``target_tick_s``.
+model (``repro.serve.autotune``) instead of a constant: the engine lowers
+its step shapes (the two pure signatures, or the single ragged step),
+prices a denoiser pass at the pool's KV dtype, and packs as many passes
+as fit ``target_tick_s``.
 """
 
 from __future__ import annotations
@@ -77,7 +93,8 @@ from repro.models import transformer as T
 from repro.serve.autotune import BudgetAutotuner
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import ArrivalQueue, ServeRequest
-from repro.serve.scheduler import (Scheduler, TickPlan, provision_growth)
+from repro.serve.scheduler import (Scheduler, TickPlan, bucket_pow2,
+                                   provision_growth)
 from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
                                fresh_lazy_needs, kv_page_bytes, pages_for,
                                resume_lazy_needs, stream_page_needs)
@@ -85,6 +102,7 @@ from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
 KV_MODES = ("slot", "paged")
 KV_DTYPES = ("bf16", "int8")
 RESERVATION_MODES = ("eager", "lazy")
+STEP_MODES = ("signature", "ragged")
 
 
 def _sample(logits, key, temperature):
@@ -96,11 +114,9 @@ def _sample(logits, key, temperature):
     return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
 
 
-def _bucket(n: int) -> int:
-    """Round a group size up to the next power of two (0 stays 0)."""
-    if n <= 1:
-        return n
-    return 1 << (n - 1).bit_length()
+# pow2 bucket padding for the per-signature compile cache — shared with
+# the scheduler/simulator so recompile accounting agrees across the stack
+_bucket = bucket_pow2
 
 
 class _SlotArrays:
@@ -188,9 +204,18 @@ class ContinuousEngine:
                  num_pages: int | None = None,
                  reservation: str = "eager",
                  kv_dtype: str = "bf16",
-                 target_tick_s: float = 50e-3):
+                 target_tick_s: float = 50e-3,
+                 step_mode: str | None = None):
         if kv not in KV_MODES:
             raise ValueError(f"kv {kv!r} not in {KV_MODES}")
+        if step_mode is None:
+            step_mode = "ragged" if kv == "paged" else "signature"
+        if step_mode not in STEP_MODES:
+            raise ValueError(f"step_mode {step_mode!r} not in {STEP_MODES}")
+        if step_mode == "ragged" and kv != "paged":
+            raise ValueError('step_mode="ragged" requires kv="paged" (the '
+                             "flat pass list addresses KV through block "
+                             "tables)")
         if kv_dtype not in KV_DTYPES:
             raise ValueError(f"kv_dtype {kv_dtype!r} not in {KV_DTYPES}")
         if kv_dtype == "int8" and kv != "paged":
@@ -228,6 +253,13 @@ class ContinuousEngine:
             self.pass_budget = pass_budget if pass_budget is not None \
                 else num_slots
             self._autotuner = None
+
+        self.step_mode = step_mode
+        # the ragged step's fixed row count: every tick fits (a plan packs
+        # at most min(budget, 2*num_slots) passes), so the step compiles
+        # exactly once per model — there is no other shape to miss on
+        self.ragged_rows = 2 * num_slots if self._budget_auto \
+            else min(self.pass_budget, 2 * num_slots)
 
         self.reservation = reservation
         self.queue = ArrivalQueue(max_depth=queue_depth)
@@ -818,6 +850,7 @@ class ContinuousEngine:
         key = ("step", n_full, n_cond)
         if key in self._jit:
             return self._jit[key]
+        self.metrics.on_step_compile()
         cfg, rules = self.cfg, self.rules
 
         def fn(params, pool_c, pool_u, f_idx, f_tok, f_pos, f_scale, f_temp,
@@ -871,6 +904,7 @@ class ContinuousEngine:
         key = ("pstep", n_full, n_cond)
         if key in self._jit:
             return self._jit[key]
+        self.metrics.on_step_compile()
         cfg, rules = self.cfg, self.rules
 
         def sample_rows(logits, keys, temps, lsteps):
@@ -899,6 +933,43 @@ class ContinuousEngine:
                 logits = T.unembed(params, cfg, h_c)[:, 0, :].astype(jnp.float32)
                 c_next = sample_rows(logits, c_key, c_temp, c_lstep)
             return pool, f_next, c_next
+
+        self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1))
+        return self._jit[key]
+
+    def _ragged_step_fn(self):
+        """One fixed-shape decode step for the whole tick's flat pass list
+        (DESIGN.md §12) — the step that kills the occupancy compile cache.
+
+        Every row is one denoiser pass addressed by its own block table,
+        position and phase flag; ``ragged_rows`` is fixed at construction,
+        so this compiles exactly once per model whatever phase mix the
+        scheduler packs. ``u_idx[r]`` names the row carrying row ``r``'s
+        unconditional logits for Eq. 1: the uncond pair row for FULL
+        output rows, ``r`` itself everywhere else — the self-pairing makes
+        ``cfg_combine`` the exact fp32 identity (``c - u == 0``) so COND,
+        uncond and padding rows need no masking.
+        """
+        R = self.ragged_rows
+        key = ("rstep", R)
+        if key in self._jit:
+            return self._jit[key]
+        self.metrics.on_step_compile()
+        cfg, rules = self.cfg, self.rules
+
+        def fn(params, pool, bt, tok, pos, scale, temp, rkey, lstep, u_idx,
+               phase):
+            emb = T.embed_tokens(params, cfg, tok[:, None])
+            h, pool = T.decode_step_paged(params, cfg, emb, pool, bt, pos,
+                                          rules=rules, phase=phase)
+            logits = T.unembed(params, cfg, h)[:, 0, :].astype(jnp.float32)
+            combined = cfg_combine(logits[u_idx], logits, scale[:, None])
+
+            def one(lg, k, t, ls):
+                return _sample(lg[None], jax.random.fold_in(k, 1 + ls), t)[0]
+
+            nxt = jax.vmap(one)(combined, rkey, temp, lstep)
+            return pool, nxt
 
         self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1))
         return self._jit[key]
@@ -932,11 +1003,14 @@ class ContinuousEngine:
     def autotune_budget(self) -> dict:
         """Derive ``pass_budget`` from the roofline step-latency model.
 
-        Lowers + compiles the two pure occupancy signatures ((1,0) and
-        (0,1)), prices a denoiser pass from each
-        (``repro.serve.autotune``), and installs the largest budget whose
-        predicted tick latency fits ``target_tick_s``. Idempotent; also
-        runs automatically on the first tick when ``pass_budget="auto"``.
+        Signature mode lowers + compiles the two pure occupancy signatures
+        ((1,0) and (0,1)) and prices a denoiser pass from each; ragged
+        mode lowers its single fixed-width step — the only executable it
+        will ever run — and prices a pass at full packing
+        (``repro.serve.autotune``). Either way the engine installs the
+        largest budget whose predicted tick latency fits ``target_tick_s``
+        priced at the pool's KV dtype. Idempotent; also runs automatically
+        on the first tick when ``pass_budget="auto"``.
         """
         if self._autotuner is None:
             raise ValueError('autotuning requires pass_budget="auto"')
@@ -952,35 +1026,50 @@ class ContinuousEngine:
         # drop), so the warm-up execution below cannot corrupt live state
         oob_slot = lambda n: np.full(n, self.num_slots, np.int32)
         oob_bt = lambda n: np.full((n, self.nb_max), self.num_pages, np.int32)
-        for sig in ((1, 0), (0, 1)):
-            nf, nc = sig
-            if self.kv == "paged":
-                fn = self._paged_step_fn(nf, nc)
-                args = (self.params, self._pool_p,
-                        oob_bt(nf), oob_bt(nf),
-                        i32(nf), i32(nf), f32(nf), f32(nf), u32(nf, 2),
-                        i32(nf), oob_bt(nc), i32(nc), i32(nc),
-                        f32(nc), u32(nc, 2), i32(nc))
-            else:
-                fn = self._step_fn(nf, nc)
-                args = (self.params, self._pool_c, self._pool_u,
-                        oob_slot(nf), i32(nf), i32(nf), f32(nf), f32(nf),
-                        u32(nf, 2), i32(nf), oob_slot(nc), i32(nc), i32(nc),
-                        f32(nc), u32(nc, 2), i32(nc))
-            self._autotuner.observe(sig, fn.lower(*args).compile(),
-                                    kv_dtype=self.kv_dtype)
+        if self.step_mode == "ragged":
+            R = self.ragged_rows
+            fn = self._ragged_step_fn()
+            args = (self.params, self._pool_p, oob_bt(R), i32(R), i32(R),
+                    f32(R), f32(R), u32(R, 2), i32(R),
+                    np.arange(R, dtype=np.int32), i32(R))
+            self._autotuner.observe_ragged(R, fn.lower(*args).compile(),
+                                           kv_dtype=self.kv_dtype)
             # warm the jit dispatch cache too: the AOT compile above does
-            # not populate it, and (1,0)/(0,1) are the most common real
-            # signatures — pay both compiles here, not on live traffic
-            out = fn(*args)
-            if self.kv == "paged":
-                self._pool_p = out[0]
-            else:
-                self._pool_c, self._pool_u = out[0], out[1]
-        budget = self._autotuner.budget()
+            # not populate it, and this is the only step shape the engine
+            # ever dispatches — pay the one compile here, not on traffic
+            self._pool_p = fn(*args)[0]
+        else:
+            for sig in ((1, 0), (0, 1)):
+                nf, nc = sig
+                if self.kv == "paged":
+                    fn = self._paged_step_fn(nf, nc)
+                    args = (self.params, self._pool_p,
+                            oob_bt(nf), oob_bt(nf),
+                            i32(nf), i32(nf), f32(nf), f32(nf), u32(nf, 2),
+                            i32(nf), oob_bt(nc), i32(nc), i32(nc),
+                            f32(nc), u32(nc, 2), i32(nc))
+                else:
+                    fn = self._step_fn(nf, nc)
+                    args = (self.params, self._pool_c, self._pool_u,
+                            oob_slot(nf), i32(nf), i32(nf), f32(nf), f32(nf),
+                            u32(nf, 2), i32(nf), oob_slot(nc), i32(nc),
+                            i32(nc), f32(nc), u32(nc, 2), i32(nc))
+                self._autotuner.observe(sig, fn.lower(*args).compile(),
+                                        kv_dtype=self.kv_dtype)
+                # warm the jit dispatch cache too: the AOT compile above
+                # does not populate it, and (1,0)/(0,1) are the most common
+                # real signatures — pay both compiles here, not on traffic
+                out = fn(*args)
+                if self.kv == "paged":
+                    self._pool_p = out[0]
+                else:
+                    self._pool_c, self._pool_u = out[0], out[1]
+        budget = self._autotuner.budget(self.kv_dtype)
+        if self.step_mode == "ragged":
+            budget = min(budget, self.ragged_rows)
         self.pass_budget = budget
         self.scheduler.pass_budget = budget
-        return self._autotuner.report()
+        return self._autotuner.report(self.kv_dtype)
 
     # -- HBM accounting ----------------------------------------------------
 
@@ -998,8 +1087,12 @@ class ContinuousEngine:
             return {"kv": "paged", "kv_dtype": self.kv_dtype,
                     "reserved_bytes": self.num_pages * self.page_bytes,
                     "page_bytes": self.page_bytes,
-                    "peak_in_use_bytes":
-                        self.metrics.peak_pages_in_use * self.page_bytes,
+                    # the byte-true counter, NOT peak_pages * page_bytes:
+                    # the page peak and the byte peak can come from
+                    # different instants once page_bytes varies, and an
+                    # int8 pool priced off the page count overstated its
+                    # high-water mark
+                    "peak_in_use_bytes": self.metrics.peak_bytes_in_use,
                     "num_pages": self.num_pages,
                     "page_size": self.page_size}
         S, cap, cfg = self.prompt_len, self.capacity, self.cfg
@@ -1048,6 +1141,9 @@ class ContinuousEngine:
     def _execute(self, plan: TickPlan) -> list[int]:
         """Run one mixed-phase step; returns sampled next-tokens aligned
         with ``plan.full + plan.cond``."""
+        self.metrics.on_step_launch()
+        if self.step_mode == "ragged":
+            return self._execute_ragged(plan)
         nf_b = _bucket(plan.n_full) if self.bucket else plan.n_full
         nc_b = _bucket(plan.n_cond) if self.bucket else plan.n_cond
         f_idx, f_tok, f_pos, f_scale, f_temp, f_key, f_lstep = \
@@ -1072,3 +1168,45 @@ class ContinuousEngine:
         f_next = np.asarray(f_next)[: plan.n_full]
         c_next = np.asarray(c_next)[: plan.n_cond]
         return [int(t) for t in f_next] + [int(t) for t in c_next]
+
+    def _execute_ragged(self, plan: TickPlan) -> list[int]:
+        """Run the whole tick as one fixed-shape ragged step. Row layout
+        (the DESIGN.md §12 contract, emitted by ``plan.pass_rows()``):
+        rows ``[0, in_flight)`` are the output rows — every entry's cond
+        pass in ``plan.full + plan.cond`` order — rows
+        ``[in_flight, in_flight + n_full)`` are the FULL entries' uncond
+        passes, and the rest is padding (phase 0, out-of-range tables:
+        reads clamp, writes drop, attention output is exactly zero).
+        Returns sampled next-tokens aligned with ``plan.full + plan.cond``.
+        """
+        R = self.ragged_rows
+        rows = plan.pass_rows()
+        assert len(rows) <= R, (len(rows), R)
+        n_out = plan.in_flight
+        bt = np.full((R, self.nb_max), self.num_pages, np.int32)
+        tok = np.zeros(R, np.int32)
+        pos = np.zeros(R, np.int32)
+        scale = np.zeros(R, np.float32)
+        temp = np.zeros(R, np.float32)
+        rkey = np.zeros((R, 2), np.uint32)
+        lstep = np.zeros(R, np.int32)
+        u_idx = np.arange(R, dtype=np.int32)      # self-pair: Eq.1 identity
+        phase = np.zeros(R, np.int32)
+        for r, pr in enumerate(rows):
+            slot = pr.entry.slot
+            bt[r] = self.pages.table(pr.entry.uid, pr.stream, self.nb_max)
+            tok[r] = self._slots.tok[slot]
+            pos[r] = self._slots.pos[slot]
+            scale[r] = self._slots.scale[slot]
+            temp[r] = self._slots.temp[slot]
+            rkey[r] = self._slots.key[slot]
+            lstep[r] = self._slots.lstep[slot]
+            phase[r] = 1
+        u_idx[: plan.n_full] = n_out + np.arange(plan.n_full)
+        fn = self._ragged_step_fn()
+        self._pool_p, nxt = fn(
+            self.params, self._pool_p, jnp.asarray(bt), jnp.asarray(tok),
+            jnp.asarray(pos), jnp.asarray(scale), jnp.asarray(temp),
+            jnp.asarray(rkey), jnp.asarray(lstep), jnp.asarray(u_idx),
+            jnp.asarray(phase))
+        return [int(t) for t in np.asarray(nxt)[:n_out]]

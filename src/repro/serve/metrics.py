@@ -67,6 +67,13 @@ class ServeMetrics:
     pages_reclaimed: int = 0     # paged arena: pages returned before
                                  # completion (COND-transition reclaim)
     peak_pages_in_use: int = 0   # paged arena: high-water page occupancy
+    peak_bytes_in_use: int = 0   # byte-true high-water mark: sampled as
+                                 # pages_in_use * page_bytes at the *current*
+                                 # page_bytes, so it stays honest even if the
+                                 # pool's dtype (and page size in bytes)
+                                 # changes mid-run — deriving it from
+                                 # peak_pages_in_use afterwards would price
+                                 # the whole peak at the last dtype
     page_bytes: int = 0          # HBM bytes one page pins (dtype-aware:
                                  # int8 pages are ~2x denser than bf16);
                                  # 0 until the engine/sim installs it
@@ -77,6 +84,13 @@ class ServeMetrics:
     cow_copies: int = 0          # shared pages detached copy-on-write
     preemptions: int = 0         # in-flight requests evicted back to queue
     resumes: int = 0             # preempted requests re-admitted
+    step_launches: int = 0       # decode step dispatches (one per non-empty
+                                 # tick in ragged mode; per phase-group in
+                                 # signature mode)
+    step_compiles: int = 0       # decode step lower+compile events — the
+                                 # number the ragged step exists to pin at
+                                 # one per model (signature mode pays one
+                                 # per padded occupancy bucket)
     tokens_emitted: int = 0
     completed: int = 0
     expired: int = 0
@@ -99,6 +113,8 @@ class ServeMetrics:
             del self.records[: -self.max_records]
         self.denoiser_passes += 2 * n_full + n_cond
         self.peak_pages_in_use = max(self.peak_pages_in_use, pages_in_use)
+        self.peak_bytes_in_use = max(self.peak_bytes_in_use,
+                                     pages_in_use * self.page_bytes)
         self._ticks += 1
         self._scheduled += n_full + n_cond
         self._budget_offered += budget
@@ -109,6 +125,8 @@ class ServeMetrics:
         ``record_tick`` sample alone would undercount the true device
         high-water mark (e.g. a prefill-EOS request's pages)."""
         self.peak_pages_in_use = max(self.peak_pages_in_use, pages_in_use)
+        self.peak_bytes_in_use = max(self.peak_bytes_in_use,
+                                     pages_in_use * self.page_bytes)
 
     def on_reclaim(self, pages: int) -> None:
         """Pages returned to the pool *before* request completion — the
@@ -126,6 +144,17 @@ class ServeMetrics:
     def on_cow(self) -> None:
         """A shared page detached copy-on-write ahead of a decode write."""
         self.cow_copies += 1
+
+    def on_step_launch(self) -> None:
+        """One decode-step dispatch hit the device."""
+        self.step_launches += 1
+
+    def on_step_compile(self) -> None:
+        """A decode step was lowered + compiled (jit-cache miss). The
+        engine counts this at miss time, so a metrics reset after warm-up
+        (the benchmark pattern) reads 0 recompiles as long as the cache
+        keeps hitting."""
+        self.step_compiles += 1
 
     def on_preempt(self, uid: str, tick: float) -> None:
         """An in-flight request evicted back to the queue (pages freed,
@@ -163,13 +192,6 @@ class ServeMetrics:
     @property
     def ticks(self) -> int:
         return self._ticks
-
-    @property
-    def peak_bytes_in_use(self) -> int:
-        """High-water KV-pool occupancy in HBM bytes — the cross-dtype
-        comparable form of ``peak_pages_in_use`` (an int8 page pins ~half
-        the bytes of a bf16 page, so page counts alone overstate it)."""
-        return self.peak_pages_in_use * self.page_bytes
 
     def mean_in_flight(self) -> float:
         """Mean requests *scheduled* per tick — the acceptance metric: the
@@ -211,6 +233,8 @@ class ServeMetrics:
             "cow_copies": self.cow_copies,
             "preemptions": self.preemptions,
             "resumes": self.resumes,
+            "step_launches": self.step_launches,
+            "step_compiles": self.step_compiles,
             "mean_ttft": self.mean_ttft(),
             "mean_tpot": self.mean_tpot(),
             "wall_s": round(self.wall_s, 4),

@@ -47,6 +47,15 @@ from repro.core.selective import Mode, PlanCursor
 POLICIES = ("phase", "static")
 
 
+def bucket_pow2(n: int) -> int:
+    """Round a group size up to the next power of two (0 stays 0) — the
+    padding the per-signature compile cache keys on. The engine and the
+    simulator share this so their recompile counts agree exactly."""
+    if n <= 1:
+        return n
+    return 1 << (n - 1).bit_length()
+
+
 @dataclass
 class ActiveRequest:
     uid: str
@@ -90,6 +99,16 @@ def victim_key(e: ActiveRequest) -> tuple:
 
 
 @dataclass(frozen=True)
+class PassRow:
+    """One denoiser pass of the tick's flat ragged pass list: which
+    request-stream this row runs. ``stream`` is "c" (conditional) or
+    "u" (unconditional — the second pass of a FULL step)."""
+
+    entry: ActiveRequest
+    stream: str
+
+
+@dataclass(frozen=True)
 class TickPlan:
     """One tick's packing: which slots step in which mode."""
 
@@ -116,9 +135,30 @@ class TickPlan:
 
     @property
     def signature(self) -> tuple[int, int]:
-        """(n_full, n_cond) — the occupancy signature the engine's compile
-        cache keys on (before bucket padding)."""
+        """(n_full, n_cond) — the occupancy signature the engine's
+        per-signature compile cache keys on (before bucket padding;
+        the ragged step has no use for it)."""
         return (self.n_full, self.n_cond)
+
+    @property
+    def n_rows(self) -> int:
+        """Rows of the flat ragged pass list — one per denoiser pass, so
+        ``n_rows == cost <= budget`` whatever the phase mix."""
+        return self.cost
+
+    def pass_rows(self) -> tuple[PassRow, ...]:
+        """The tick's work as a flat pass list (DESIGN.md §12 row-layout
+        contract): the first ``in_flight`` rows are the **output** rows —
+        every scheduled entry's conditional pass in ``full + cond`` order,
+        exactly the order :meth:`commit` emits events — and the next
+        ``n_full`` rows are the FULL entries' unconditional passes in the
+        same order, so output row ``i < n_full`` pairs with uncond row
+        ``in_flight + i``. Rows past ``n_rows`` (up to the step's fixed
+        capacity) are padding the engine fabricates (phase 0, out-of-range
+        block tables)."""
+        out = [PassRow(e, "c") for e in self.full + self.cond]
+        out += [PassRow(e, "u") for e in self.full]
+        return tuple(out)
 
 
 @dataclass

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core.selective import GuidancePlan, Mode, PlanCursor
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import ArrivalQueue, ServeRequest
-from repro.serve.scheduler import Scheduler, provision_growth
+from repro.serve.scheduler import Scheduler, bucket_pow2, provision_growth
 from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
                                fresh_lazy_needs, pages_for, resume_lazy_needs,
                                stream_page_needs)
@@ -79,7 +79,8 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
              max_ticks: int = 100_000, kv: str = "slot",
              page_size: int = 4, num_pages: int | None = None,
              reservation: str = "eager", kv_dtype: str = "bf16",
-             page_bytes: int | None = None, on_tick=None) -> SimReport:
+             page_bytes: int | None = None, step_mode: str | None = None,
+             bucket: bool = True, on_tick=None) -> SimReport:
     """Replay ``trace`` against a scheduler policy; returns a
     :class:`SimReport` whose metrics mirror the real engine's.
 
@@ -103,6 +104,14 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
     ``bytes_in_use`` / ``peak_bytes_in_use`` counters so occupancy is
     comparable across dtypes, mirroring the engine's accounting.
 
+    ``step_mode`` mirrors the engine's step dispatch for the
+    ``step_launches`` / ``step_compiles`` counters (None picks the
+    engine's default: "ragged" when ``kv="paged"``, else "signature"):
+    signature mode charges one compile per new pow2-bucketed occupancy
+    signature (``bucket=False`` disables the padding, as on the engine),
+    ragged mode charges exactly one compile ever — the simulated
+    counters equal the real engine's on the same trace.
+
     ``on_tick(tick, pages, sched, queue)``, when given, runs at the end
     of every simulated tick — the serve-invariant harness hooks
     :meth:`PageAllocator.check` here.
@@ -111,6 +120,12 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
         raise ValueError(reservation)
     if reservation == "lazy" and kv != "paged":
         raise ValueError('reservation="lazy" requires kv="paged"')
+    if step_mode is None:
+        step_mode = "ragged" if kv == "paged" else "signature"
+    if step_mode not in ("signature", "ragged"):
+        raise ValueError(step_mode)
+    if step_mode == "ragged" and kv != "paged":
+        raise ValueError('step_mode="ragged" requires kv="paged"')
     trace = sorted(trace, key=lambda r: (r.arrival, r.uid))
     queue = ArrivalQueue(max_depth=queue_depth)
     pool = StatePool(num_slots)
@@ -139,6 +154,7 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
     req_of: dict[str, ServeRequest] = {}
     resume: dict[str, tuple[int, int]] = {}       # uid -> (step, passes)
     last_scheduled: dict[str, int] = {}
+    compiled: set[tuple] = set()       # step shapes already "compiled"
     next_arrival = 0
     tick = 0
 
@@ -263,6 +279,17 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                 metrics=metrics, preempt=preempt,
                 reclaim_cache=prefix.evict_under_pressure)
             metrics.note_pages(pages.n_in_use)
+        if plan.in_flight:
+            # mirror the engine's step dispatch: one launch per non-empty
+            # tick, one compile per never-seen step shape
+            metrics.on_step_launch()
+            shape = ("rstep",) if step_mode == "ragged" else (
+                "step",
+                bucket_pow2(plan.n_full) if bucket else plan.n_full,
+                bucket_pow2(plan.n_cond) if bucket else plan.n_cond)
+            if shape not in compiled:
+                compiled.add(shape)
+                metrics.on_step_compile()
         events = sched.commit(plan)
         for ev in events:
             report.max_wait = max(report.max_wait,

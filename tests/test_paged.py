@@ -476,10 +476,19 @@ def test_pass_budget_autotune_from_roofline(small_model):
     out = eng.serve([ServeRequest(uid="a", prompt="tune me",
                                   max_new_tokens=4)])
     assert len(out["a"]) == 4
-    report = eng._autotuner.report()
+    report = eng._autotuner.report(eng.kv_dtype)
     assert eng.pass_budget == eng.scheduler.pass_budget == report["budget"]
     assert 2 <= eng.pass_budget <= 2 * eng.num_slots
-    assert set(report["per_pass_s"]) == {"0,1,bf16", "1,0,bf16"}
+    # the paged default is the ragged step: the only executable the
+    # engine ever runs is the one observation the budget is priced off
+    assert set(report["per_pass_s"]) == {"ragged,8,bf16"}
+    sig = ContinuousEngine(params, cfg, num_slots=4, pass_budget="auto",
+                           prompt_len=8, max_new=4, stop_on_eos=False,
+                           kv="paged", page_size=4, target_tick_s=50e-3,
+                           step_mode="signature")
+    sig.autotune_budget()
+    assert set(sig._autotuner.report()["per_pass_s"]) == \
+        {"0,1,bf16", "1,0,bf16"}
     # monotonicity of the hook itself (no second engine compile needed)
     tuner = eng._autotuner
     small = type(tuner)(target_tick_s=1e-9, min_budget=2,

@@ -1,0 +1,381 @@
+"""Ragged flat-pass-list decode step suite (DESIGN.md §12).
+
+Four layers, all under the ``ragged`` marker (CI runs ``-m ragged`` as
+its own job):
+
+* **kernel-vs-oracle properties** — hypothesis-driven random pass lists
+  (mixed phases, mixed lengths, out-of-range padded block tables, every
+  ``block_k`` tile) through the ragged Pallas kernels in interpret mode
+  against the pure-jnp oracles, bf16-shaped and int8-dequantizing, with
+  the exact-zero padding-row contract asserted separately;
+* **pass-list contract** — ``TickPlan.pass_rows()`` row layout (outputs
+  first in ``full + cond`` order, then the FULL uncond pairs) and the
+  shared ``bucket_pow2`` helper;
+* **engine exactness + one-compile invariant** — the ragged step is
+  token-identical to the per-signature vmapped path on mixed traces
+  (bf16 and int8), compiles exactly once per model, and never recompiles
+  after warm-up; the simulator's launch/compile counters mirror the
+  engine's;
+* **satellite bugfix regressions** — autotuner budget priced off the
+  pool's active KV dtype only, ``envelope_violated`` surfaced when the
+  ``min_budget`` clamp beats ``target_tick_s``, and byte-true
+  ``peak_bytes_in_use`` accounting behind ``kv_hbm_bytes()``.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke_config
+from repro.core.selective import GuidancePlan, PlanCursor
+from repro.kernels import paged_decode_attention as PDA
+from repro.kernels import ref
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serve import (BudgetAutotuner, ContinuousEngine, ServeMetrics,
+                         ServeRequest, SimRequest, TickPlan, bucket_pow2,
+                         simulate)
+from repro.serve.scheduler import ActiveRequest
+
+pytestmark = pytest.mark.ragged
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle over random pass lists (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def _ragged_case(seed: int, R: int, nb: int, page_size: int, K: int,
+                 rep: int, hd: int = 4, int8: bool = False):
+    """One random ragged launch: mixed phases/positions, block-table
+    entries drawn in [0, P+1] so padded rows and padded columns exercise
+    the out-of-range clamp (never negative — the allocator cannot
+    produce a negative page id, and the kernel/oracle OOB conventions
+    only agree for non-negative entries)."""
+    rng = np.random.default_rng(seed)
+    P = R * nb + 2
+    q = rng.standard_normal((R, K * rep, hd)).astype(np.float32)
+    bt = rng.integers(0, P + 2, size=(R, nb)).astype(np.int32)
+    pos = rng.integers(0, nb * page_size, size=R).astype(np.int32)
+    phase = (rng.random(R) < 0.7).astype(np.int32)
+    if int8:
+        kp = rng.integers(-127, 128, size=(P, page_size, K, hd),
+                          dtype=np.int64).astype(np.int8)
+        vp = rng.integers(-127, 128, size=(P, page_size, K, hd),
+                          dtype=np.int64).astype(np.int8)
+        ks = (rng.random((P, page_size, K, 1)) * 0.05 + 1e-3
+              ).astype(np.float32)
+        vs = (rng.random((P, page_size, K, 1)) * 0.05 + 1e-3
+              ).astype(np.float32)
+        return q, kp, ks, vp, vs, bt, pos, phase
+    kp = rng.standard_normal((P, page_size, K, hd)).astype(np.float32)
+    vp = rng.standard_normal((P, page_size, K, hd)).astype(np.float32)
+    return q, kp, vp, bt, pos, phase
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6), st.integers(1, 3),
+       st.sampled_from([2, 4]), st.integers(1, 2), st.integers(1, 2),
+       st.sampled_from([None, 1, 2]))
+def test_ragged_kernel_matches_oracle(seed, R, nb, page_size, K, rep,
+                                      block_k):
+    q, kp, vp, bt, pos, phase = _ragged_case(seed, R, nb, page_size, K, rep)
+    out = np.asarray(PDA.ragged_paged_decode_attention_pallas(
+        q, kp, vp, bt, pos, phase, block_k=block_k, interpret=True))
+    want = np.asarray(ref.ref_ragged_paged_decode_attention(
+        q, kp, vp, bt, pos, phase))
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+    # padding rows are *exactly* zero — no pages streamed, nothing summed
+    assert not np.any(out[phase == 0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 5), st.integers(1, 3),
+       st.sampled_from([2, 4]), st.integers(1, 2),
+       st.sampled_from([None, 2]))
+def test_ragged_int8_kernel_matches_oracle(seed, R, nb, page_size, K,
+                                           block_k):
+    q, kp, ks, vp, vs, bt, pos, phase = _ragged_case(
+        seed, R, nb, page_size, K, rep=2, int8=True)
+    out = np.asarray(PDA.ragged_paged_decode_attention_int8_pallas(
+        q, kp, ks, vp, vs, bt, pos, phase, block_k=block_k, interpret=True))
+    want = np.asarray(ref.ref_ragged_paged_decode_attention_int8(
+        q, kp, ks, vp, vs, bt, pos, phase))
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+    assert not np.any(out[phase == 0])
+
+
+def test_ragged_rows_independent():
+    """A live row's output equals its own solo launch — rows of the flat
+    pass list cannot leak into each other (the property that makes
+    scatter-then-attend in one batched call equal to the per-signature
+    engine's sequential group dispatches)."""
+    q, kp, vp, bt, pos, phase = _ragged_case(7, R=5, nb=2, page_size=4,
+                                             K=2, rep=2)
+    full = np.asarray(PDA.ragged_paged_decode_attention_pallas(
+        q, kp, vp, bt, pos, phase, interpret=True))
+    for r in range(5):
+        if not phase[r]:
+            continue
+        solo = np.asarray(PDA.ragged_paged_decode_attention_pallas(
+            q[r:r + 1], kp, vp, bt[r:r + 1], pos[r:r + 1], phase[r:r + 1],
+            interpret=True))
+        np.testing.assert_allclose(full[r], solo[0], atol=1e-6, rtol=1e-6)
+
+
+def test_windowed_ragged_matches_oracle():
+    q, kp, vp, bt, pos, phase = _ragged_case(11, R=4, nb=3, page_size=4,
+                                             K=2, rep=2)
+    for window in (3, 5):
+        out = np.asarray(PDA.ragged_paged_decode_attention_pallas(
+            q, kp, vp, bt, pos, phase, window=window, interpret=True))
+        want = np.asarray(ref.ref_ragged_paged_decode_attention(
+            q, kp, vp, bt, pos, phase, window=window))
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# block_k tiling + the per-shape autotune cache
+# ---------------------------------------------------------------------------
+
+
+def test_block_k_tiles_agree():
+    """Every sub-page tile computes the same attention (the online
+    softmax is associative over blocks) — on the ragged and the plain
+    paged kernels alike."""
+    q, kp, vp, bt, pos, phase = _ragged_case(3, R=4, nb=2, page_size=4,
+                                             K=2, rep=2)
+    base = np.asarray(PDA.ragged_paged_decode_attention_pallas(
+        q, kp, vp, bt, pos, phase, interpret=True))
+    for bk in PDA.block_k_candidates(4):
+        out = np.asarray(PDA.ragged_paged_decode_attention_pallas(
+            q, kp, vp, bt, pos, phase, block_k=bk, interpret=True))
+        np.testing.assert_allclose(out, base, atol=2e-5, rtol=2e-5)
+        plain = np.asarray(PDA.paged_decode_attention_pallas(
+            q, kp, vp, bt, pos, block_k=bk, interpret=True))
+        want = np.asarray(ref.ref_paged_decode_attention(q, kp, vp, bt, pos))
+        np.testing.assert_allclose(plain, want, atol=2e-5, rtol=2e-5)
+
+
+def test_block_k_autotune_sweeps_once_then_caches():
+    q, kp, vp, bt, pos, phase = _ragged_case(5, R=3, nb=2, page_size=4,
+                                             K=1, rep=2)
+    PDA.clear_block_tune_cache()
+    calls = []
+
+    def run(bk):
+        calls.append(bk)
+        return PDA.ragged_paged_decode_attention_pallas(
+            q, kp, vp, bt, pos, phase, block_k=bk, interpret=True)
+
+    cands = PDA.block_k_candidates(4)
+    key = ("test-shape", 4, "f32")
+    best = PDA.autotune_block_k(run, key, cands)
+    assert best in cands
+    assert set(calls) == set(cands)               # every candidate priced
+
+    def poisoned(bk):
+        raise AssertionError("cache hit must not re-sweep")
+
+    assert PDA.autotune_block_k(poisoned, key, cands) == best
+    with pytest.raises(ValueError):
+        PDA.autotune_block_k(run, ("other",), [])  # no candidates
+    PDA.clear_block_tune_cache()
+
+
+def test_block_k_must_divide_page_size():
+    q, kp, vp, bt, pos, phase = _ragged_case(5, R=2, nb=1, page_size=4,
+                                             K=1, rep=1)
+    with pytest.raises(ValueError):
+        PDA.ragged_paged_decode_attention_pallas(q, kp, vp, bt, pos, phase,
+                                                 block_k=3, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# The flat pass-list contract (scheduler side)
+# ---------------------------------------------------------------------------
+
+
+def _entry(uid: str, slot: int) -> ActiveRequest:
+    return ActiveRequest(uid=uid, slot=slot,
+                         cursor=PlanCursor(GuidancePlan.suffix(4, 0.5, 2.0)))
+
+
+def test_pass_rows_layout_contract():
+    """The DESIGN.md §12 row layout: output rows first, in exactly the
+    ``full + cond`` order ``commit()`` emits events, then the FULL
+    entries' uncond passes so output row i pairs with row in_flight+i."""
+    f = (_entry("a", 0), _entry("b", 1))
+    c = (_entry("c", 2),)
+    plan = TickPlan(full=f, cond=c, budget=8)
+    rows = plan.pass_rows()
+    assert plan.n_rows == plan.cost == len(rows) == 5
+    assert [(r.entry.uid, r.stream) for r in rows] == [
+        ("a", "c"), ("b", "c"), ("c", "c"), ("a", "u"), ("b", "u")]
+    for i, e in enumerate(f):                      # uncond pair row index
+        assert rows[plan.in_flight + i].entry is e
+    assert TickPlan(full=(), cond=(), budget=8).pass_rows() == ()
+
+
+def test_bucket_pow2_shared_helper():
+    assert [bucket_pow2(n) for n in (0, 1, 2, 3, 4, 5, 8, 9)] == \
+        [0, 1, 2, 4, 4, 8, 8, 16]
+
+
+# ---------------------------------------------------------------------------
+# Engine exactness + the one-compile invariant
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke_config("llama3.2-1b")
+    params = T.init_model(cfg, L.ArrayMaker(jax.random.PRNGKey(0)))
+    return cfg, params
+
+
+def _mixed_reqs(n: int = 5, max_new: int = 6):
+    """Mixed prompt lengths + default suffix plans: ticks sweep through
+    FULL-heavy to COND-heavy occupancy, so the per-signature baseline
+    visits several compile-cache buckets."""
+    return [ServeRequest(f"r{i}", prompt=[3 + i, 5, 7], max_new_tokens=max_new,
+                         guidance_scale=3.0, temperature=0.0,
+                         prompt_len=4 + (i % 2) * 2) for i in range(n)]
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_ragged_token_identical_to_signature(small_model, kv_dtype):
+    """Tentpole acceptance: greedy decode through the single ragged step
+    is token-identical to the per-signature vmapped path — mixed phases,
+    mixed prompt lengths, both pool dtypes."""
+    cfg, params = small_model
+    out = {}
+    for mode in ("signature", "ragged"):
+        eng = ContinuousEngine(params, cfg, num_slots=4, prompt_len=8,
+                               max_new=8, kv="paged", page_size=4,
+                               kv_dtype=kv_dtype, step_mode=mode, seed=0)
+        out[mode] = eng.serve(_mixed_reqs())
+    assert out["ragged"] == out["signature"]
+
+
+def test_one_compile_per_model_zero_recompiles(small_model):
+    """The compile-cache kill: the ragged engine compiles its step once,
+    then a fresh trace after a metrics reset recompiles nothing; the
+    signature engine pays one compile per pow2-bucketed phase mix (and
+    its count is exactly the distinct bucketed signatures it executed)."""
+    cfg, params = small_model
+    rag = ContinuousEngine(params, cfg, num_slots=4, prompt_len=8,
+                           max_new=8, kv="paged", page_size=4, seed=0)
+    assert rag.step_mode == "ragged"               # the paged default
+    rag.serve(_mixed_reqs())
+    assert rag.metrics.step_compiles == 1
+    assert [k for k in rag._jit if k[0] == "rstep"] == \
+        [("rstep", rag.ragged_rows)]
+    rag.metrics = ServeMetrics()                   # the benchmark pattern
+    rag.serve(_mixed_reqs())
+    assert rag.metrics.step_compiles == 0          # warm: zero recompiles
+    assert rag.metrics.step_launches > 0
+
+    sig = ContinuousEngine(params, cfg, num_slots=4, prompt_len=8,
+                           max_new=8, kv="paged", page_size=4, seed=0,
+                           step_mode="signature")
+    sig.serve(_mixed_reqs())
+    seen = {(bucket_pow2(r.n_full), bucket_pow2(r.n_cond))
+            for r in sig.metrics.records if r.n_full + r.n_cond}
+    assert sig.metrics.step_compiles == len(seen) > 1
+    assert rag.metrics.step_launches > 0
+
+
+def test_ragged_requires_paged(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError):
+        ContinuousEngine(params, cfg, num_slots=2, kv="slot",
+                         step_mode="ragged")
+
+
+def test_sim_step_counters_mirror_engine_accounting():
+    plan = GuidancePlan.suffix(5, 0.4, 4.0)
+    trace = [SimRequest(f"s{i}", i % 3, plan) for i in range(6)]
+    kw = dict(num_slots=4, pass_budget=8, kv="paged", page_size=4)
+    rag = simulate(trace, step_mode="ragged", **kw).metrics
+    sig = simulate(trace, step_mode="signature", **kw).metrics
+    assert rag.step_compiles == 1                  # one shape, ever
+    assert rag.step_launches == sig.step_launches > 0
+    expected = {(bucket_pow2(r.n_full), bucket_pow2(r.n_cond))
+                for r in sig.records if r.n_full + r.n_cond}
+    assert sig.step_compiles == len(expected) >= 1
+    with pytest.raises(ValueError):
+        simulate(trace, step_mode="ragged", num_slots=4, pass_budget=8)
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: autotuner dtype pricing, envelope, byte accounting
+# ---------------------------------------------------------------------------
+
+
+def test_autotuner_budget_priced_off_active_dtype_only():
+    """The dtype-pricing bug: a stale observation from another KV dtype
+    must not set the budget for the pool that is actually serving."""
+    t = BudgetAutotuner(target_tick_s=1.0, max_budget=64)
+    t.per_pass_s[("ragged", 8, "int8")] = 0.01     # the active pool
+    t.per_pass_s[(1, 0, "bf16")] = 0.5             # stale other-dtype entry
+    assert t.worst_for("int8") == 0.01
+    assert t.budget("int8") == 64                  # priced off int8 alone
+    assert t.budget() == 2                         # global worst: the bug's
+    assert t.worst_per_pass_s == 0.5               # old behaviour, kept as
+                                                   # the explicit global form
+    # dtype-unscoped legacy keys (direct injection) apply to every pool
+    t.per_pass_s[(0, 1)] = 0.02
+    assert t.worst_for("int8") == 0.02
+    assert t.budget("int8") == 50
+    rep = t.report("int8")
+    assert rep["budget"] == 50
+    assert set(rep["per_pass_s"]) == {"ragged,8,int8", "1,0,bf16", "0,1"}
+
+
+def test_envelope_violation_surfaced_not_silent():
+    """The min_budget clamp bug: when 2 passes already exceed the target,
+    budget() still returns 2 (one FULL step must stay schedulable) but
+    the report must say the envelope is being violated."""
+    t = BudgetAutotuner(target_tick_s=1e-3)
+    t.per_pass_s[("ragged", 4, "bf16")] = 1.0
+    assert t.budget("bf16") == 2
+    assert t.envelope_violated("bf16")
+    assert t.predicted_tick_s("bf16") == 2.0
+    assert t.report("bf16")["envelope_violated"] is True
+    ok = BudgetAutotuner(target_tick_s=1.0)
+    ok.per_pass_s[("ragged", 4, "bf16")] = 0.1
+    assert not ok.envelope_violated("bf16")
+    assert ok.report("bf16")["envelope_violated"] is False
+    assert BudgetAutotuner(target_tick_s=1.0).budget() is None
+
+
+def test_peak_bytes_counter_is_byte_true():
+    """The byte-accounting bug: peak bytes must be sampled at the
+    page_bytes in force when the occupancy happened, not derived from
+    the page peak afterwards."""
+    m = ServeMetrics()
+    m.page_bytes = 4
+    m.note_pages(10)                               # 40 bytes high water
+    m.page_bytes = 1                               # pool repriced
+    m.note_pages(12)                               # only 12 bytes now
+    assert m.peak_pages_in_use == 12               # page peak moves...
+    assert m.peak_bytes_in_use == 40               # ...byte peak must not
+    # (the old derived property would have reported 12 * 1 = 12)
+    assert m.summary()["peak_bytes_in_use"] == 40
+
+
+def test_kv_hbm_bytes_reports_byte_counter(small_model):
+    cfg, params = small_model
+    eng = ContinuousEngine(params, cfg, num_slots=2, prompt_len=8,
+                           max_new=4, kv="paged", page_size=4,
+                           kv_dtype="int8", seed=0)
+    eng.serve(_mixed_reqs(n=3, max_new=4))
+    hbm = eng.kv_hbm_bytes()
+    assert hbm["peak_in_use_bytes"] == eng.metrics.peak_bytes_in_use > 0
+    # constant-dtype run: byte counter and page-derived form agree, so
+    # the golden summaries are unchanged by the counter conversion
+    assert eng.metrics.peak_bytes_in_use == \
+        eng.metrics.peak_pages_in_use * eng.page_bytes

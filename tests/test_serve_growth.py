@@ -191,10 +191,23 @@ def test_autotune_budget_monotone_and_floored(target_s, per_pass_s, factor):
     fast, slow = tuner(per_pass_s), tuner(per_pass_s * factor)
     assert fast.budget() >= slow.budget()             # monotone in latency
     assert slow.budget() >= 2                         # >= one FULL slot
-    assert tuner(1e9).budget() == 2                   # floor binds
+    floored = tuner(1e9)
+    assert floored.budget() == 2                      # floor binds...
+    assert floored.envelope_violated()                # ...and says so
     capped = BudgetAutotuner(target_tick_s=target_s, max_budget=8)
     capped.per_pass_s[(1, 0)] = per_pass_s
     assert 2 <= capped.budget() <= 8
+    # the clamp-vs-envelope contract: a budget exceeds the target exactly
+    # when the min_budget floor overrode it, and report() surfaces both
+    for t in (fast, slow, floored, capped):
+        pred = t.predicted_tick_s()
+        assert pred == t.budget() * t.worst_per_pass_s
+        assert t.envelope_violated() == (pred > t.target_tick_s)
+        assert t.envelope_violated() == (t.budget() == t.min_budget
+                                         and pred > t.target_tick_s)
+        rep = t.report()
+        assert rep["predicted_tick_s"] == pred
+        assert rep["envelope_violated"] == t.envelope_violated()
 
 
 def test_autotune_budget_uses_worst_signature():
@@ -203,6 +216,7 @@ def test_autotune_budget_uses_worst_signature():
     t.per_pass_s[(0, 1)] = 0.5                        # worst: 2 passes fit
     assert t.worst_per_pass_s == 0.5
     assert t.budget() == 2
+    assert not t.envelope_violated()                  # 2 * 0.5 fits exactly
 
 
 # ---------------------------------------------------------------------------
