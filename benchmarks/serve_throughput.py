@@ -37,9 +37,15 @@ recompiles after warm-up (the per-signature cache pays one compile per
 phase-mix bucket traffic discovers), and per-tick wall time reported
 side by side. ``--step`` picks the mode the other parts run under.
 
+Part 7 (always on): the observability report (DESIGN.md §13) — TTFT/TPOT
+p50/p95/p99 from the engine's log2 histograms, per-request
+``passes_saved`` vs classic CFG (the paper's Table 1 reduction measured
+per request in a serving context), and ``--trace-out PATH`` to export the
+continuous run's event trace as Chrome-trace JSON.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput [--tiny] \
         [--kv paged] [--reservation lazy] [--kv-dtype int8] \
-        [--step auto|ragged|signature]
+        [--step auto|ragged|signature] [--trace-out trace.json]
 """
 
 from __future__ import annotations
@@ -56,7 +62,8 @@ from repro.models import layers as L
 from repro.models import transformer as T
 from repro.serve import (ContinuousEngine, ServeMetrics, ServeRequest,
                          SimRequest, kv_page_bytes, pages_for,
-                         pages_for_pool_bytes, poisson_arrivals, simulate)
+                         pages_for_pool_bytes, poisson_arrivals, simulate,
+                         write_chrome_trace)
 from repro.serving import Request, ServingEngine
 
 FRACTIONS = [0.0, 0.2, 0.5]
@@ -93,7 +100,8 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
                           kv: str = "slot", page_size: int = 4,
                           reservation: str = "eager",
                           kv_dtype: str = "bf16",
-                          step: str = "auto") -> dict:
+                          step: str = "auto",
+                          trace_out: str | None = None) -> dict:
     arrivals = poisson_arrivals(seed, n=n_req, rate=rate)
     budget = 2 * batch
 
@@ -116,6 +124,11 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
     eng.serve_trace(make_reqs("c"), arrivals)
     cont = eng.metrics
     hbm = eng.kv_hbm_bytes()
+    if trace_out:
+        doc = write_chrome_trace(cont, trace_out)
+        emit("serve/trace", len(doc["traceEvents"]),
+             f"out={trace_out};spans={doc['otherData']['request_spans']};"
+             f"ticks={doc['otherData']['ticks']}")
 
     static = ServingEngine(params, cfg, max_batch=batch, prompt_len=prompt_len,
                            max_new=max_new, selective_fraction=fraction)
@@ -138,8 +151,13 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
          f"reserved={hbm['reserved_bytes']};"
          f"reclaimed={cont.pages_reclaimed};"
          f"peak_pages={cont.peak_pages_in_use}")
+    emit("serve/savings", cont.passes_saved(),
+         f"full_cfg={cont.full_cfg_passes()};"
+         f"fraction={cont.savings_fraction():.3f};"
+         f"uncond_elided={cont.uncond_ticks_elided}")
     return {"continuous": cont.summary(), "static": stat.summary(),
             "pass_budget": budget, "kv": kv, "hbm": hbm,
+            "requests": cont.request_rows(),
             "in_flight_gain": cont.mean_in_flight() / max(stat.mean_in_flight(), 1e-9)}
 
 
@@ -330,7 +348,7 @@ def _ragged_vs_signature(params, cfg, *, n_req: int, prompt_len: int,
 
 def run(tiny: bool = False, kv: str = "slot",
         reservation: str = "eager", kv_dtype: str = "bf16",
-        step: str = "auto") -> dict:
+        step: str = "auto", trace_out: str | None = None) -> dict:
     if step == "ragged":
         kv = "paged"                                # ragged implies paged
     if kv_dtype == "int8":
@@ -355,7 +373,8 @@ def run(tiny: bool = False, kv: str = "slot",
                                     fraction=fractions[-1], batch=batch,
                                     rate=4.0 if tiny else 1.5, kv=kv,
                                     reservation=reservation,
-                                    kv_dtype=kv_dtype, step=step)
+                                    kv_dtype=kv_dtype, step=step,
+                                    trace_out=trace_out)
     out = {"rows": rows, "compare": compare}
     if kv == "paged":
         out["paged_mixed"] = _paged_mixed_lengths(
@@ -398,11 +417,30 @@ if __name__ == "__main__":
                          "(ragged = one fixed-shape flat-pass-list step, "
                          "one compile per model; implies --kv paged; auto "
                          "= engine default: ragged when paged)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the continuous run's event trace as "
+                         "Chrome-trace JSON (chrome://tracing / Perfetto)")
     args = ap.parse_args()
     out = run(tiny=args.tiny, kv=args.kv, reservation=args.reservation,
-              kv_dtype=args.kv_dtype, step=args.step)
+              kv_dtype=args.kv_dtype, step=args.step,
+              trace_out=args.trace_out)
     print("continuous-vs-static:", out["compare"]["continuous"])
     print("                     ", out["compare"]["static"])
+    cont = out["compare"]["continuous"]
+    for name in ("ttft", "tpot"):
+        h = cont[name]
+        print(f"{name} ticks: p50={h['p50']} p95={h['p95']} p99={h['p99']} "
+              f"(n={h['count']})")
+    print(f"guidance savings: passes_saved={cont['passes_saved']} "
+          f"({cont['savings_fraction']:.1%} of full CFG), "
+          f"uncond_ticks_elided={cont['uncond_ticks_elided']}")
+    for row in out["compare"]["requests"]:
+        print(f"  {row['uid']}: {row['state']} ttft={row['ttft']} "
+              f"tpot={row['tpot']} preempts={row['preempts']} "
+              f"passes={row['passes']}/{row['full_cfg_passes']} "
+              f"saved={row['passes_saved']}")
+    if args.trace_out:
+        print(f"chrome trace written to {args.trace_out}")
     print(f"in-flight gain at equal pass budget: "
           f"{out['compare']['in_flight_gain']:.2f}x")
     hbm = out["compare"]["hbm"]

@@ -20,6 +20,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--n", type=int, default=12)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the continuous run as Chrome-trace JSON "
+                         "(open in chrome://tracing or Perfetto)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -44,14 +47,23 @@ def main() -> None:
 
     # the same workload on the phase-aware continuous engine: COND-phase
     # requests cost 1 pass slot instead of 2, so more requests fly per tick
-    from repro.serve import ContinuousEngine, ServeRequest
+    from repro.serve import ContinuousEngine, ServeRequest, write_chrome_trace
     eng = ContinuousEngine(params, cfg, num_slots=8, pass_budget=8,
                            prompt_len=24, max_new=24, selective_fraction=0.5,
                            stop_on_eos=False)
     eng.serve([ServeRequest(uid=f"c-{i:02d}", prompt=PAPER_PROMPTS[i],
                             max_new_tokens=24, guidance_scale=4.0)
                for i in range(args.n)])
-    print(f"\ncontinuous engine: {eng.metrics.summary()}")
+    m = eng.metrics
+    print(f"\ncontinuous engine: {m.summary()}")
+    print(f"guidance savings: {m.passes_saved()} denoiser passes "
+          f"({m.savings_fraction():.1%} of full CFG), "
+          f"uncond ticks elided={m.uncond_ticks_elided}")
+    if args.trace_out:
+        doc = write_chrome_trace(m, args.trace_out)
+        print(f"chrome trace -> {args.trace_out} "
+              f"({doc['otherData']['request_spans']} request spans, "
+              f"{doc['otherData']['ticks']} ticks)")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,8 @@ from repro.configs import get_config
 from repro.data.prompts import PAPER_PROMPTS
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.serve import ContinuousEngine, ServeRequest, poisson_arrivals
+from repro.serve import (ContinuousEngine, ServeRequest, poisson_arrivals,
+                         write_chrome_trace)
 from repro.serving import Request, ServingEngine
 
 
@@ -68,6 +69,20 @@ def run_continuous(params, cfg, args) -> None:
     print(f"[step={eng.step_mode:9s}] "
           f"compiles={eng.metrics.step_compiles} "
           f"launches={eng.metrics.step_launches}")
+    m = eng.metrics
+    ttft, tpot = m.hists["ttft"].summary(), m.hists["tpot"].summary()
+    print(f"[obs       ] ttft p50/p95/p99={ttft['p50']}/{ttft['p95']}/"
+          f"{ttft['p99']} tpot p50/p95/p99={tpot['p50']}/{tpot['p95']}/"
+          f"{tpot['p99']} (ticks)")
+    print(f"[savings   ] passes_saved={m.passes_saved()} "
+          f"({m.savings_fraction():.1%} of full CFG) "
+          f"uncond_ticks_elided={m.uncond_ticks_elided} "
+          f"events={m.trace.emitted} dropped={m.trace.dropped}")
+    if args.trace_out:
+        doc = write_chrome_trace(m, args.trace_out)
+        print(f"[trace     ] {args.trace_out}: "
+              f"{doc['otherData']['request_spans']} request spans, "
+              f"{doc['otherData']['ticks']} ticks")
     hbm = eng.kv_hbm_bytes()
     print(f"[kv={args.kv:5s}] dtype={hbm.get('kv_dtype', 'bf16')} "
           f"reserved={hbm['reserved_bytes']/2**20:.2f}MiB "
@@ -125,6 +140,9 @@ def main() -> None:
                          "fixed-shape flat-pass-list step, one compile per "
                          "model, requires --kv paged; auto = engine "
                          "default: ragged when paged, DESIGN.md §12)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="continuous: write the run's event trace as "
+                         "Chrome-trace JSON (DESIGN.md §13)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--fraction", type=float, default=0.2,

@@ -8,11 +8,19 @@ reclaimed the moment its plan enters the COND suffix, so selective
 guidance saves HBM as well as FLOPs. ``repro.serving.ServingEngine``
 remains as a static-batching compatibility facade over
 :class:`ContinuousEngine`.
+
+Observability (``repro.serve.obs``, DESIGN.md §13): every engine/sim
+state change is a typed event in ``metrics.trace``; counters fold from
+the stream, latency percentiles come from log2 histograms, and a run
+exports to Chrome-trace JSON via :func:`to_chrome_trace`.
 """
 
 from repro.serve.autotune import BudgetAutotuner
 from repro.serve.engine import ContinuousEngine
-from repro.serve.metrics import ServeMetrics, TickRecord
+from repro.serve.metrics import RequestTimeline, ServeMetrics, TickRecord
+from repro.serve.obs import (Event, EventTrace, Log2Histogram, TickTimer,
+                             TickTiming, fold_counters, to_chrome_trace,
+                             write_chrome_trace)
 from repro.serve.queue import ArrivalQueue, ServeRequest
 from repro.serve.scheduler import (PassRow, Scheduler, TickPlan, bucket_pow2,
                                    provision_growth, victim_key)
@@ -26,13 +34,16 @@ from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
                                stream_page_needs)
 
 __all__ = [
-    "ArrivalQueue", "BudgetAutotuner", "ContinuousEngine", "PageAllocator",
-    "PassRow", "PrefixShareRegistry", "Scheduler", "ServeMetrics",
-    "ServeRequest", "SimRequest", "StatePool", "TickPlan", "TickRecord",
-    "bucket_pow2", "compare_policies",
+    "ArrivalQueue", "BudgetAutotuner", "ContinuousEngine", "Event",
+    "EventTrace", "Log2Histogram", "PageAllocator",
+    "PassRow", "PrefixShareRegistry", "RequestTimeline", "Scheduler",
+    "ServeMetrics", "ServeRequest", "SimRequest", "StatePool", "TickPlan",
+    "TickRecord", "TickTimer", "TickTiming",
+    "bucket_pow2", "compare_policies", "fold_counters",
     "fresh_lazy_needs", "kv_page_bytes", "page_nbytes",
     "paged_partition_specs", "pages_for", "pages_for_pool_bytes",
     "pool_partition_specs", "pooled_cache_axes", "poisson_arrivals",
     "poisson_trace", "provision_growth", "resume_lazy_needs", "simulate",
-    "stream_page_needs", "victim_key",
+    "stream_page_needs", "to_chrome_trace", "victim_key",
+    "write_chrome_trace",
 ]

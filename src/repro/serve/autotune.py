@@ -138,6 +138,16 @@ class BudgetAutotuner:
             return None
         return b * per_pass
 
+    def headroom_s(self, kv_dtype: str | None = None) -> float | None:
+        """Envelope slack: ``target_tick_s - predicted_tick_s``. Negative
+        exactly when :meth:`envelope_violated` — the observability report
+        surfaces this as a number instead of a bare flag so SLO dashboards
+        can trend it."""
+        pred = self.predicted_tick_s(kv_dtype)
+        if pred is None:
+            return None
+        return self.target_tick_s - pred
+
     def envelope_violated(self, kv_dtype: str | None = None) -> bool:
         """True when the returned budget *knowingly* exceeds the operator's
         ``target_tick_s`` — the ``min_budget`` clamp won, so a full tick is
@@ -158,5 +168,6 @@ class BudgetAutotuner:
             "worst_per_pass_s": self.worst_for(kv_dtype),
             "budget": self.budget(kv_dtype),
             "predicted_tick_s": self.predicted_tick_s(kv_dtype),
+            "headroom_s": self.headroom_s(kv_dtype),
             "envelope_violated": self.envelope_violated(kv_dtype),
         }

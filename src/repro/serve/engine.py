@@ -79,8 +79,6 @@ as fit ``target_tick_s``.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -92,6 +90,7 @@ from repro.data.tokenizer import EOS, PAD, encode
 from repro.models import transformer as T
 from repro.serve.autotune import BudgetAutotuner
 from repro.serve.metrics import ServeMetrics
+from repro.serve.obs import TickTimer
 from repro.serve.queue import ArrivalQueue, ServeRequest
 from repro.serve.scheduler import (Scheduler, TickPlan, bucket_pow2,
                                    provision_growth)
@@ -170,7 +169,8 @@ class _PrefillItem:
 
     def __init__(self, req: ServeRequest, slot: int, tokens: np.ndarray,
                  true_len: int, u_mask_below: int | None, key: np.ndarray,
-                 emit: bool, u_tokens: np.ndarray | None = None):
+                 emit: bool, u_tokens: np.ndarray | None = None,
+                 shared_pages: int = 0):
         self.req = req
         self.slot = slot
         self.tokens = tokens              # (true_len,) int32
@@ -181,6 +181,11 @@ class _PrefillItem:
         self.emit = emit
         self.u_tokens = u_tokens          # uncond-stream row; None = all-null
                                           # (resume: null prompt + generated)
+        self.shared_pages = shared_pages  # uncond prefix pages acquired from
+                                          # the canonical copy (event deferred
+                                          # to the queue-order bookkeeping
+                                          # pass so engine==sim stream order
+                                          # holds across length buckets)
 
 
 class ContinuousEngine:
@@ -315,11 +320,11 @@ class ContinuousEngine:
                         self.num_pages:
                     raise ValueError("page need exceeds pool")
         except ValueError:
-            self.metrics.rejected += 1
+            self.metrics.on_reject(req.uid, self.tick_count)
             return False
         ok = self.queue.push(req, self.tick_count)
         if not ok:
-            self.metrics.rejected += 1
+            self.metrics.on_reject(req.uid, self.tick_count)
         return ok
 
     def drain(self, max_ticks: int = 100_000) -> None:
@@ -353,65 +358,72 @@ class ContinuousEngine:
                 if r.uid in self.results}
 
     def tick(self) -> TickPlan:
-        t0 = time.perf_counter()
+        timer = TickTimer(self.tick_count)
         now = self.tick_count
         # metrics objects are replaceable (benchmarks reset them between
         # warmup and measurement): keep the byte pricing installed
         self.metrics.page_bytes = self.page_bytes
-        for dead in self.queue.expire(now):
-            self._resume.pop(dead.uid, None)   # a preempted request's ttl
-            self.metrics.expired += 1          # keeps running while queued
-        if self._autotuner is not None and not self._autotuner.per_pass_s:
-            self.autotune_budget()
-        if self.kv == "paged":
-            self._admit_paged(now)
-            self.metrics.note_pages(self.pages.n_in_use)
-        else:
-            self._admit(now)
-            self._maybe_defrag()
-        plan = self.scheduler.plan_tick()
-        if self.reservation == "lazy" and plan.in_flight:
-            # on-demand page growth / CoW detach / priority preemption —
-            # the same decision procedure the simulator replays offline
-            plan = provision_growth(
-                plan, self.scheduler, self.pages,
-                page_size=self.page_size,
-                pos_of=lambda uid: int(
-                    self._slots.pos[self._states[uid].slot]),
-                metrics=self.metrics,
-                preempt=lambda uid: self._preempt(uid, now),
-                copy_page=self._copy_page,
-                reclaim_cache=self._prefix.evict_under_pressure)
-            self.metrics.note_pages(self.pages.n_in_use)
-        sampled = self._execute(plan) if plan.in_flight else []
-        events = self.scheduler.commit(plan)
-        for ev, nxt in zip(events, sampled):
-            state = self._states[ev.uid]
-            if ev.done:
-                self._finalize(ev.uid, now)           # last sample discarded
-                continue
-            if self.stop_on_eos and nxt == EOS:
-                self._finalize(ev.uid, now)
-                continue
-            state.generated.append(int(nxt))
-            slot = state.slot
-            self._slots.tok[slot] = nxt
-            self._slots.pos[slot] += 1
-            self._slots.lstep[slot] += 1
-            self.metrics.on_token(ev.uid, now)
-            if self.kv == "paged" and ev.mode is Mode.FULL \
-                    and not state.cursor.done \
-                    and state.cursor.mode is Mode.COND:
-                # the plan just crossed into its COND suffix: the uncond
-                # stream is dead, return its pages to the shared pool now
-                freed = self._release_uncond(ev.uid)
-                if freed:
-                    self.metrics.on_reclaim(freed)
-        self.metrics.record_tick(
-            now, n_full=plan.n_full, n_cond=plan.n_cond, budget=plan.budget,
-            active=self.scheduler.n_active, queue_depth=len(self.queue),
-            pages_in_use=self.pages.n_in_use if self.pages else 0)
-        self.metrics.wall_s += time.perf_counter() - t0
+        with timer.phase("admit"):
+            for dead in self.queue.expire(now):
+                self._resume.pop(dead.uid, None)  # a preempted request's ttl
+                self.metrics.on_expire(dead.uid, now)  # keeps running queued
+            if self._autotuner is not None and not self._autotuner.per_pass_s:
+                self.autotune_budget()
+            if self.kv == "paged":
+                self._admit_paged(now)
+                self.metrics.note_pages(self.pages.n_in_use, now)
+            else:
+                self._admit(now)
+                self._maybe_defrag()
+        with timer.phase("schedule"):
+            plan = self.scheduler.plan_tick()
+            if self.reservation == "lazy" and plan.in_flight:
+                # on-demand page growth / CoW detach / priority preemption —
+                # the same decision procedure the simulator replays offline
+                plan = provision_growth(
+                    plan, self.scheduler, self.pages,
+                    page_size=self.page_size,
+                    pos_of=lambda uid: int(
+                        self._slots.pos[self._states[uid].slot]),
+                    metrics=self.metrics,
+                    preempt=lambda uid: self._preempt(uid, now),
+                    copy_page=self._copy_page,
+                    reclaim_cache=self._prefix.evict_under_pressure,
+                    now=now)
+                self.metrics.note_pages(self.pages.n_in_use, now)
+        with timer.phase("step"):
+            sampled = self._execute(plan) if plan.in_flight else []
+        with timer.phase("finalize"):
+            events = self.scheduler.commit(plan)
+            for ev, nxt in zip(events, sampled):
+                state = self._states[ev.uid]
+                if ev.done:
+                    self._finalize(ev.uid, now)       # last sample discarded
+                    continue
+                if self.stop_on_eos and nxt == EOS:
+                    self._finalize(ev.uid, now)
+                    continue
+                state.generated.append(int(nxt))
+                slot = state.slot
+                self._slots.tok[slot] = nxt
+                self._slots.pos[slot] += 1
+                self._slots.lstep[slot] += 1
+                self.metrics.on_token(ev.uid, now, cond=ev.mode is Mode.COND)
+                if ev.mode is Mode.FULL and not state.cursor.done \
+                        and state.cursor.mode is Mode.COND:
+                    # the plan just crossed into its COND suffix: the uncond
+                    # stream is dead — in the paged arena, return its pages
+                    # to the shared pool now
+                    self.metrics.on_phase_transition(ev.uid, now)
+                    if self.kv == "paged":
+                        self.metrics.on_reclaim(ev.uid, now,
+                                                self._release_uncond(ev.uid))
+            self.metrics.record_tick(
+                now, n_full=plan.n_full, n_cond=plan.n_cond,
+                budget=plan.budget, active=self.scheduler.n_active,
+                queue_depth=len(self.queue),
+                pages_in_use=self.pages.n_in_use if self.pages else 0)
+        self.metrics.on_tick_timing(timer.finish())
         self.tick_count += 1
         return plan
 
@@ -482,7 +494,9 @@ class ContinuousEngine:
                 slot, jnp.asarray(key), np.float32(req.guidance_scale),
                 np.float32(req.temperature))
             tok0 = int(tok0)
-            self.metrics.on_admit(req.uid, now)
+            self.metrics.on_admit(
+                req.uid, now, total_steps=plan.total_steps,
+                full_steps=plan.denoiser_passes() - plan.total_steps)
             if self.stop_on_eos and tok0 == EOS:
                 self._finalize(req.uid, now)
                 continue
@@ -525,8 +539,34 @@ class ContinuousEngine:
         groups: dict[int, list] = {}
         for item in batch:
             groups.setdefault(_bucket(item.true_len), []).append(item)
+        tok0_of: dict[str, int] = {}
         for Sb in sorted(groups):
-            self._prefill_paged_group(Sb, groups[Sb], now)
+            tok0_of.update(self._prefill_paged_group(Sb, groups[Sb]))
+        # bookkeeping in *queue order* (not bucket order): the simulator
+        # admits one request at a time, so the event stream must read
+        # share -> admit -> first-token (or share -> resume) per request
+        # in pop order for the engine==sim event contract to hold
+        for it in batch:
+            uid = it.req.uid
+            if it.shared_pages:
+                self.metrics.on_share(uid, now, it.shared_pages)
+            if not it.emit:                # resume: KV rebuilt, no emit
+                cursor = self._states[uid].cursor
+                self.metrics.on_resume(uid, now,
+                                       full=int(cursor.mode is Mode.FULL))
+                continue
+            state = self._states[uid]
+            plan = state.cursor.plan
+            self.metrics.on_admit(
+                uid, now, total_steps=plan.total_steps,
+                full_steps=plan.denoiser_passes() - plan.total_steps)
+            t0 = tok0_of[uid]
+            if self.stop_on_eos and t0 == EOS:
+                self._finalize(uid, now)
+                continue
+            self._slots.tok[it.slot] = t0
+            state.generated.append(t0)
+            self.metrics.on_token(uid, now)           # TTFT: prefill emits
 
     def _admit_common(self, req: ServeRequest, cursor: PlanCursor,
                       pos: int) -> int:
@@ -574,9 +614,9 @@ class ContinuousEngine:
         self.queue.pop()
         self.pages.alloc(req.uid, "c", need_c)
         u_mask: int | None = 0                 # founder scatters everything
+        n_share = 0
         if wants_u and shared:
-            got = self._prefix.acquire(S, req.uid)
-            self.metrics.on_share(len(got))
+            n_share = len(self._prefix.acquire(S, req.uid))
             u_mask = None                      # canonical content: no writes
         elif wants_u:
             self.pages.alloc(req.uid, "u", need_u)
@@ -586,7 +626,7 @@ class ContinuousEngine:
         self._slots.lstep[slot] = 0
         self._slots.key[slot] = key
         return _PrefillItem(req, slot, self._tokenize(req.prompt, S)[0],
-                            S, u_mask, key, emit=True)
+                            S, u_mask, key, emit=True, shared_pages=n_share)
 
     def _try_admit_resume(self, req: ServeRequest, plan: GuidancePlan,
                           S: int, now: int) -> _PrefillItem | None:
@@ -603,7 +643,6 @@ class ContinuousEngine:
         if wants_u:
             if n_share:
                 self._prefix.acquire(S, req.uid, count=n_share)
-                self.metrics.on_share(n_share)
                 if need_u:
                     self.pages.grow(req.uid, "u", need_u)
                 u_mask = n_share               # write only the private tail
@@ -618,7 +657,6 @@ class ContinuousEngine:
         self._slots.tok[slot] = rs.generated[-1]
         self._slots.lstep[slot] = rs.step
         self._slots.key[slot] = rs.key
-        self.metrics.on_resume(req.uid, now)
         row = np.concatenate([self._tokenize(req.prompt, S)[0],
                               np.asarray(rs.generated[:-1], np.int32)])
         # the uncond stream consumed the *sampled* tokens during decode:
@@ -626,10 +664,11 @@ class ContinuousEngine:
         u_row = row.copy()
         u_row[:S] = PAD
         return _PrefillItem(req, slot, row, L, u_mask, rs.key, emit=False,
-                            u_tokens=u_row)
+                            u_tokens=u_row,
+                            shared_pages=n_share if wants_u else 0)
 
-    def _prefill_paged_group(self, Sb: int, items: list[_PrefillItem],
-                             now: int) -> None:
+    def _prefill_paged_group(self, Sb: int,
+                             items: list[_PrefillItem]) -> dict[str, int]:
         kb = _bucket(len(items))
         nb_pre = pages_for(Sb, self.page_size)
         tokens = np.full((kb, Sb), PAD, np.int32)
@@ -663,18 +702,8 @@ class ContinuousEngine:
                                 jnp.asarray(keys), jnp.asarray(scales),
                                 jnp.asarray(temps))
         tok0 = np.asarray(tok0)
-        for i, it in enumerate(items):
-            if not it.emit:
-                continue                       # resume: KV rebuilt, no emit
-            state = self._states[it.req.uid]
-            self.metrics.on_admit(it.req.uid, now)
-            t0 = int(tok0[i])
-            if self.stop_on_eos and t0 == EOS:
-                self._finalize(it.req.uid, now)
-                continue
-            self._slots.tok[it.slot] = t0
-            state.generated.append(t0)
-            self.metrics.on_token(it.req.uid, now)    # TTFT: prefill emits
+        # token/admit bookkeeping happens in the caller, in queue order
+        return {it.req.uid: int(tok0[i]) for i, it in enumerate(items)}
 
     def _release_uncond(self, uid: str) -> int:
         """Free a request's unconditional pages at the COND transition,
@@ -850,7 +879,7 @@ class ContinuousEngine:
         key = ("step", n_full, n_cond)
         if key in self._jit:
             return self._jit[key]
-        self.metrics.on_step_compile()
+        self.metrics.on_step_compile(self.tick_count)
         cfg, rules = self.cfg, self.rules
 
         def fn(params, pool_c, pool_u, f_idx, f_tok, f_pos, f_scale, f_temp,
@@ -904,7 +933,7 @@ class ContinuousEngine:
         key = ("pstep", n_full, n_cond)
         if key in self._jit:
             return self._jit[key]
-        self.metrics.on_step_compile()
+        self.metrics.on_step_compile(self.tick_count)
         cfg, rules = self.cfg, self.rules
 
         def sample_rows(logits, keys, temps, lsteps):
@@ -954,7 +983,7 @@ class ContinuousEngine:
         key = ("rstep", R)
         if key in self._jit:
             return self._jit[key]
-        self.metrics.on_step_compile()
+        self.metrics.on_step_compile(self.tick_count)
         cfg, rules = self.cfg, self.rules
 
         def fn(params, pool, bt, tok, pos, scale, temp, rkey, lstep, u_idx,
@@ -1069,6 +1098,7 @@ class ContinuousEngine:
             budget = min(budget, self.ragged_rows)
         self.pass_budget = budget
         self.scheduler.pass_budget = budget
+        self.metrics.on_autotune(self.tick_count, budget)
         return self._autotuner.report(self.kv_dtype)
 
     # -- HBM accounting ----------------------------------------------------
@@ -1141,7 +1171,7 @@ class ContinuousEngine:
     def _execute(self, plan: TickPlan) -> list[int]:
         """Run one mixed-phase step; returns sampled next-tokens aligned
         with ``plan.full + plan.cond``."""
-        self.metrics.on_step_launch()
+        self.metrics.on_step_launch(self.tick_count)
         if self.step_mode == "ragged":
             return self._execute_ragged(plan)
         nf_b = _bucket(plan.n_full) if self.bucket else plan.n_full

@@ -1,21 +1,35 @@
-"""Serving metrics: per-tick occupancy and per-request latency accounting.
+"""Serving metrics: event stream, histograms, and latency accounting.
 
 Shared by the real engine (``repro.serve.engine``) and the offline
 simulator (``repro.serve.sim``) so policy numbers measured in simulation
 are directly comparable to numbers measured against the model.
 
-Two invariants the tests pin:
+Since PR 7 the metrics are layered on the ``repro.serve.obs`` event
+trace (DESIGN.md §13): every ``on_*`` hook both updates its running
+counter *and* emits a typed :class:`~repro.serve.obs.Event`, and the
+``obs`` tests pin that the counters equal ``fold_counters`` over the
+stream — counters are a view of the trace, not parallel state. The
+engine and simulator emit identical event streams on the same trace
+(asserted event-for-event, extending PR 4's counter contract).
+
+Invariants the tests pin:
 
 * ``passes`` recorded per tick counts the *actual* scheduled work
   (2·n_full + n_cond), never the bucket-padded compile shape;
 * over completed requests, ``denoiser_passes`` equals
   ``sum(plan.denoiser_passes())`` exactly (when early-EOS stopping is off)
-  — the engine's measured work is the plans' declared work.
+  — the engine's measured work is the plans' declared work;
+* per-request ``passes_saved == full_cfg_passes - passes`` — the paper's
+  guidance saving measured per request, not inferred from plans.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+from repro.serve.obs.hist import Log2Histogram, default_histograms
+from repro.serve.obs.timing import TickTiming
+from repro.serve.obs.trace import EventTrace
 
 
 @dataclass(frozen=True)
@@ -39,8 +53,16 @@ class RequestTimeline:
     admitted: float | None = None
     first_token: float | None = None      # tick of first emitted token
     completed: float | None = None
+    expired_at: float | None = None       # deadline passed while queued
+    preempted_at: float | None = None     # open preemption gap, if any
+    gap_ticks: float = 0.0                # closed preempt->resume dead time
+    n_preempts: int = 0
     tokens: int = 0
     passes: int = 0
+    total_steps: int = 0                  # plan.total_steps at admission
+    full_steps: int = 0                   # FULL (2-pass) steps in the plan
+    uncond_elided: int = 0                # COND-mode tokens: uncond passes
+                                          # the plan skipped for this request
 
     @property
     def ttft(self) -> float | None:
@@ -50,10 +72,36 @@ class RequestTimeline:
 
     @property
     def tpot(self) -> float | None:
-        """Mean ticks per output token after the first."""
+        """Mean ticks per output token after the first, with
+        preempt->resume gaps subtracted — preempted dead time is queueing,
+        not decode speed (it is reported separately as ``gap_ticks``)."""
         if self.completed is None or self.first_token is None or self.tokens < 2:
             return None
-        return (self.completed - self.first_token) / (self.tokens - 1)
+        return (self.completed - self.first_token - self.gap_ticks) \
+            / (self.tokens - 1)
+
+    @property
+    def queue_wait(self) -> float | None:
+        """Ticks from arrival to first admission."""
+        if self.admitted is None:
+            return None
+        return self.admitted - self.arrival
+
+    @property
+    def full_cfg_passes(self) -> int:
+        """Denoiser passes classic CFG would spend: 2 per plan step."""
+        return 2 * self.total_steps
+
+    @property
+    def passes_saved(self) -> int:
+        """``full_cfg_passes - passes`` — the paper's per-request saving
+        (equals the COND steps in the plan when the request ran to
+        completion without early EOS)."""
+        return self.full_cfg_passes - self.passes
+
+    @property
+    def terminal(self) -> bool:
+        return self.completed is not None or self.expired_at is not None
 
 
 @dataclass
@@ -62,6 +110,10 @@ class ServeMetrics:
     max_records: int = 65536     # records beyond this rotate out (aggregates
                                  # below are running counters, never trimmed)
     timelines: dict[str, RequestTimeline] = field(default_factory=dict)
+    trace: EventTrace = field(default_factory=EventTrace)
+    hists: dict[str, Log2Histogram] = field(default_factory=default_histograms)
+    tick_timings: list[TickTiming] = field(default_factory=list)
+    max_timings: int = 65536
     denoiser_passes: int = 0     # decode passes (plan units)
     prefill_passes: int = 0      # prefill stream passes (2 per admission)
     pages_reclaimed: int = 0     # paged arena: pages returned before
@@ -82,6 +134,8 @@ class ServeMetrics:
     shared_page_hits: int = 0    # uncond prompt-prefix pages served by the
                                  # canonical copy instead of a fresh grant
     cow_copies: int = 0          # shared pages detached copy-on-write
+    cache_evictions: int = 0     # prefix-registry entries evicted under
+                                 # pool pressure to un-share/free pages
     preemptions: int = 0         # in-flight requests evicted back to queue
     resumes: int = 0             # preempted requests re-admitted
     step_launches: int = 0       # decode step dispatches (one per non-empty
@@ -95,6 +149,10 @@ class ServeMetrics:
     completed: int = 0
     expired: int = 0
     rejected: int = 0
+    uncond_ticks_elided: int = 0  # COND-mode tokens across all requests:
+                                  # uncond denoiser passes selective
+                                  # guidance elided (the paper's saving,
+                                  # in pass units)
     wall_s: float = 0.0
     _ticks: int = 0
     _scheduled: int = 0          # sum of per-tick requests in flight
@@ -112,80 +170,169 @@ class ServeMetrics:
         if len(self.records) > self.max_records:
             del self.records[: -self.max_records]
         self.denoiser_passes += 2 * n_full + n_cond
-        self.peak_pages_in_use = max(self.peak_pages_in_use, pages_in_use)
-        self.peak_bytes_in_use = max(self.peak_bytes_in_use,
-                                     pages_in_use * self.page_bytes)
+        self._sample_occupancy(pages_in_use, tick)
         self._ticks += 1
         self._scheduled += n_full + n_cond
         self._budget_offered += budget
+        self.trace.emit("tick", tick, n_full=n_full, n_cond=n_cond,
+                        budget=budget, active=active,
+                        queue_depth=queue_depth, pages_in_use=pages_in_use)
 
-    def note_pages(self, pages_in_use: int) -> None:
+    def _sample_occupancy(self, pages_in_use: int, tick: int) -> None:
+        """One page-occupancy sample: updates both high-water marks and
+        emits an ``occupancy`` event when a new page peak is reached.
+        The byte peak is priced at the *current* ``page_bytes`` and can
+        therefore peak on a different sample than the page peak."""
+        if pages_in_use > self.peak_pages_in_use:
+            self.peak_pages_in_use = pages_in_use
+            self.trace.emit("occupancy", tick, pages=pages_in_use)
+        self.peak_bytes_in_use = max(self.peak_bytes_in_use,
+                                     pages_in_use * self.page_bytes)
+
+    def note_pages(self, pages_in_use: int, tick: int = 0) -> None:
         """Sample page occupancy mid-tick. Admission grants pages before
         the same tick's finalize/reclaim frees them, so the end-of-tick
         ``record_tick`` sample alone would undercount the true device
         high-water mark (e.g. a prefill-EOS request's pages)."""
-        self.peak_pages_in_use = max(self.peak_pages_in_use, pages_in_use)
-        self.peak_bytes_in_use = max(self.peak_bytes_in_use,
-                                     pages_in_use * self.page_bytes)
+        self._sample_occupancy(pages_in_use, tick)
 
-    def on_reclaim(self, pages: int) -> None:
+    def on_tick_timing(self, timing: TickTiming) -> None:
+        """One engine tick's wall-clock phase breakdown (engine only;
+        the simulator has no wall clock)."""
+        self.tick_timings.append(timing)
+        if len(self.tick_timings) > self.max_timings:
+            del self.tick_timings[: -self.max_timings]
+        self.wall_s += timing.duration_s
+        self.hists["tick_s"].record(timing.duration_s)
+
+    def on_reclaim(self, uid: str, tick: int, pages: int) -> None:
         """Pages returned to the pool *before* request completion — the
-        COND-transition HBM saving the paged arena exists to measure."""
+        COND-transition HBM saving the paged arena exists to measure.
+        A 0-page reclaim is a no-op (no event): a shared uncond prefix
+        may be released without any page actually going back."""
+        if pages <= 0:
+            return
         self.pages_reclaimed += pages
+        self.trace.emit("reclaim", tick, uid, pages=pages)
 
-    def on_grow(self, pages: int) -> None:
+    def on_grow(self, uid: str, tick: int, pages: int) -> None:
         """Pages granted on demand at a tick boundary (lazy reservation)."""
         self.pages_grown += pages
+        self.trace.emit("grow", tick, uid, pages=pages)
 
-    def on_share(self, pages: int) -> None:
+    def on_share(self, uid: str, tick: int, pages: int) -> None:
         """Uncond prefix pages served from the canonical shared copy."""
         self.shared_page_hits += pages
+        self.trace.emit("share", tick, uid, pages=pages)
 
-    def on_cow(self) -> None:
+    def on_cow(self, uid: str, tick: int) -> None:
         """A shared page detached copy-on-write ahead of a decode write."""
         self.cow_copies += 1
+        self.trace.emit("cow", tick, uid)
 
-    def on_step_launch(self) -> None:
+    def on_cache_evict(self, uid: str, tick: int) -> None:
+        """A prefix-registry entry evicted under pool pressure while
+        provisioning ``uid`` (un-shares pages; may free the canonical
+        copy outright)."""
+        self.cache_evictions += 1
+        self.trace.emit("cache_evict", tick, uid)
+
+    def on_step_launch(self, tick: int = 0) -> None:
         """One decode-step dispatch hit the device."""
         self.step_launches += 1
+        self.trace.emit("step_launch", tick)
 
-    def on_step_compile(self) -> None:
+    def on_step_compile(self, tick: int = 0) -> None:
         """A decode step was lowered + compiled (jit-cache miss). The
         engine counts this at miss time, so a metrics reset after warm-up
         (the benchmark pattern) reads 0 recompiles as long as the cache
         keeps hitting."""
         self.step_compiles += 1
+        self.trace.emit("step_compile", tick)
+
+    def on_autotune(self, tick: int, budget: int) -> None:
+        """The roofline autotuner (re)derived the per-tick pass budget."""
+        self.trace.emit("autotune", tick, budget=budget)
 
     def on_preempt(self, uid: str, tick: float) -> None:
         """An in-flight request evicted back to the queue (pages freed,
-        cursor/tokens checkpointed for exact resume)."""
+        cursor/tokens checkpointed for exact resume). Opens a preemption
+        gap on the timeline so TPOT excludes the dead time."""
         self.preemptions += 1
+        tl = self.timelines.get(uid)
+        if tl is not None:
+            tl.preempted_at = tick
+            tl.n_preempts += 1
+        self.trace.emit("preempt", int(tick), uid)
 
-    def on_resume(self, uid: str, tick: float) -> None:
+    def on_resume(self, uid: str, tick: float, *, full: int = 0) -> None:
         """A preempted request re-admitted: its KV is rebuilt by one
-        forward over prompt + generated tokens (both streams run)."""
+        forward over prompt + generated tokens (both streams run).
+        Closes the open preemption gap."""
         self.resumes += 1
         self.prefill_passes += 2
+        tl = self.timelines.get(uid)
+        if tl is not None and tl.preempted_at is not None:
+            tl.gap_ticks += tick - tl.preempted_at
+            tl.preempted_at = None
+        self.trace.emit("resume", int(tick), uid, full=int(full))
 
     def on_arrival(self, uid: str, tick: float) -> None:
         self.timelines[uid] = RequestTimeline(arrival=tick)
+        self.trace.emit("arrival", int(tick), uid)
 
-    def on_admit(self, uid: str, tick: float) -> None:
-        self.timelines[uid].admitted = tick
+    def on_reject(self, uid: str, tick: float) -> None:
+        """Admission control refused the request outright."""
+        self.rejected += 1
+        self.trace.emit("reject", int(tick), uid)
+
+    def on_admit(self, uid: str, tick: float, *, total_steps: int = 0,
+                 full_steps: int = 0) -> None:
+        tl = self.timelines[uid]
+        tl.admitted = tick
+        tl.total_steps = total_steps
+        tl.full_steps = full_steps
         self.prefill_passes += 2
+        if tl.queue_wait is not None:
+            self.hists["queue_wait"].record(tl.queue_wait)
+        self.trace.emit("admit", int(tick), uid, total_steps=total_steps,
+                        full_steps=full_steps)
 
-    def on_token(self, uid: str, tick: float) -> None:
+    def on_token(self, uid: str, tick: float, *, cond: bool = False) -> None:
         tl = self.timelines[uid]
         if tl.first_token is None:
             tl.first_token = tick
+            if tl.ttft is not None:
+                self.hists["ttft"].record(tl.ttft)
         tl.tokens += 1
         self.tokens_emitted += 1
+        if cond:
+            tl.uncond_elided += 1
+            self.uncond_ticks_elided += 1
+        self.trace.emit("token", int(tick), uid, cond=int(cond))
+
+    def on_phase_transition(self, uid: str, tick: float) -> None:
+        """The request's plan crossed FULL -> COND: from here on it costs
+        one denoiser pass per tick instead of two."""
+        self.trace.emit("phase", int(tick), uid)
 
     def on_complete(self, uid: str, tick: float, passes: int) -> None:
         tl = self.timelines[uid]
         tl.completed = tick
         tl.passes = passes
         self.completed += 1
+        if tl.tpot is not None:
+            self.hists["tpot"].record(tl.tpot)
+        self.trace.emit("complete", int(tick), uid, passes=passes)
+
+    def on_expire(self, uid: str, tick: float) -> None:
+        """Deadline passed while queued: the timeline is closed as
+        terminal so latency aggregation excludes it explicitly."""
+        self.expired += 1
+        tl = self.timelines.get(uid)
+        if tl is not None:
+            tl.expired_at = tick
+        self.trace.emit("expire", int(tick), uid)
 
     # -- aggregates --------------------------------------------------------
 
@@ -213,6 +360,46 @@ class ServeMetrics:
         vals = [t.tpot for t in self.timelines.values() if t.tpot is not None]
         return sum(vals) / len(vals) if vals else None
 
+    def passes_saved(self) -> int:
+        """Total denoiser passes saved vs classic CFG over *completed*
+        requests: ``sum(2*total_steps - passes)``. With early-EOS off
+        this equals the COND steps in the completed plans — the paper's
+        complexity reduction, measured."""
+        return sum(t.passes_saved for t in self.timelines.values()
+                   if t.completed is not None and t.total_steps > 0)
+
+    def full_cfg_passes(self) -> int:
+        return sum(t.full_cfg_passes for t in self.timelines.values()
+                   if t.completed is not None)
+
+    def savings_fraction(self) -> float:
+        """passes_saved / full_cfg_passes over completed requests — the
+        measured counterpart of the paper's Table 1 reduction."""
+        full = self.full_cfg_passes()
+        return self.passes_saved() / full if full else 0.0
+
+    def request_rows(self) -> list[dict]:
+        """Per-request report rows (benchmark / launch output)."""
+        rows = []
+        for uid, t in self.timelines.items():
+            rows.append({
+                "uid": uid,
+                "state": ("done" if t.completed is not None else
+                          "expired" if t.expired_at is not None else
+                          "in_flight"),
+                "queue_wait": t.queue_wait,
+                "ttft": t.ttft,
+                "tpot": None if t.tpot is None else round(t.tpot, 3),
+                "gap_ticks": t.gap_ticks,
+                "preempts": t.n_preempts,
+                "tokens": t.tokens,
+                "passes": t.passes,
+                "full_cfg_passes": t.full_cfg_passes,
+                "passes_saved": t.passes_saved if t.completed is not None
+                else None,
+            })
+        return rows
+
     def summary(self) -> dict:
         return {
             "ticks": self.ticks,
@@ -231,11 +418,21 @@ class ServeMetrics:
             "pages_grown": self.pages_grown,
             "shared_page_hits": self.shared_page_hits,
             "cow_copies": self.cow_copies,
+            "cache_evictions": self.cache_evictions,
             "preemptions": self.preemptions,
             "resumes": self.resumes,
             "step_launches": self.step_launches,
             "step_compiles": self.step_compiles,
             "mean_ttft": self.mean_ttft(),
             "mean_tpot": self.mean_tpot(),
+            "ttft": self.hists["ttft"].summary(),
+            "tpot": self.hists["tpot"].summary(),
+            "queue_wait": self.hists["queue_wait"].summary(),
+            "tick_s": self.hists["tick_s"].summary(),
+            "passes_saved": self.passes_saved(),
+            "uncond_ticks_elided": self.uncond_ticks_elided,
+            "savings_fraction": round(self.savings_fraction(), 4),
+            "events": {"emitted": self.trace.emitted,
+                       "dropped": self.trace.dropped},
             "wall_s": round(self.wall_s, 4),
         }

@@ -297,13 +297,16 @@ class Scheduler:
 
 def provision_growth(plan: TickPlan, sched: Scheduler, pages, *,
                      page_size: int, pos_of, metrics, preempt,
-                     copy_page=None, reclaim_cache=None) -> TickPlan:
+                     copy_page=None, reclaim_cache=None,
+                     now: int = 0) -> TickPlan:
     """Grant the pages this tick's writes need — growing, copy-on-write
     detaching, or preempting — and return the (possibly filtered) plan.
 
     The lazy-reservation core, shared verbatim by the engine and the
     offline simulator so their ``pages_grown``/``preemptions``/
-    ``cow_copies`` counts agree tick for tick. For each scheduled entry,
+    ``cow_copies`` counts — and the grow/cow/cache-evict *events*, which
+    ``now`` stamps with the current tick — agree tick for tick. For each
+    scheduled entry,
     strongest first (descending :func:`victim_key`), every stream the
     step writes ("c", plus "u" for FULL steps) must have a *private* page
     covering the write position:
@@ -343,14 +346,15 @@ def provision_growth(plan: TickPlan, sched: Scheduler, pages, *,
                     if got is not None:
                         if copy_page is not None:
                             copy_page(*got)
-                        metrics.on_cow()
+                        metrics.on_cow(entry.uid, now)
                         break
                 else:
                     grown = pages.grow(entry.uid, stream, 1)
                     if grown is not None:
-                        metrics.on_grow(len(grown))
+                        metrics.on_grow(entry.uid, now, len(grown))
                         break
                 if reclaim_cache is not None and reclaim_cache():
+                    metrics.on_cache_evict(entry.uid, now)
                     continue                         # retry: cache evicted
                 victim = sched.victim(exclude=entry.uid)
                 if victim is None or \

@@ -191,13 +191,13 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             req_of[sr.uid] = req
             metrics.on_arrival(sr.uid, tick)
             if pages is not None and sum(need_of[sr.uid]) > pages.num_pages:
-                metrics.rejected += 1       # can never fit: don't wedge FCFS
-            elif not queue.push(req, tick):
-                metrics.rejected += 1
+                metrics.on_reject(sr.uid, tick)  # can never fit: don't
+            elif not queue.push(req, tick):      # wedge the FCFS head
+                metrics.on_reject(sr.uid, tick)
         # deadline expiry
         for dead in queue.expire(tick):
             resume.pop(dead.uid, None)
-            metrics.expired += 1
+            metrics.on_expire(dead.uid, tick)
         # admission
         quota = sched.admission_quota(pool.n_free)
         if prefills_per_tick is not None:
@@ -224,7 +224,7 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                 if wants_u:
                     if n_share:
                         prefix.acquire(S, uid, count=n_share)
-                        metrics.on_share(n_share)
+                        metrics.on_share(uid, tick, n_share)
                         if need_u:
                             pages.grow(uid, "u", need_u)
                     else:
@@ -242,7 +242,7 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                 pages.alloc(uid, "c", need_c)
                 if wants_u and shared:
                     got = prefix.acquire(S, uid)
-                    metrics.on_share(len(got))
+                    metrics.on_share(uid, tick, len(got))
                 elif wants_u:
                     pages.alloc(uid, "u", need_u)
                     prefix.publish(S, uid)
@@ -263,12 +263,16 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                         deadline=req.deadline, priority=req.priority)
             last_scheduled[uid] = tick
             if resumed:
-                metrics.on_resume(uid, tick)       # KV rebuilt, no emit
+                metrics.on_resume(uid, tick,       # KV rebuilt, no emit
+                                  full=int(cursor.mode is Mode.FULL))
             else:
-                metrics.on_admit(uid, tick)
+                plan_ = req.plan
+                metrics.on_admit(
+                    uid, tick, total_steps=plan_.total_steps,
+                    full_steps=plan_.denoiser_passes() - plan_.total_steps)
                 metrics.on_token(uid, tick)        # prefill emits token 0
         if pages is not None:
-            metrics.note_pages(pages.n_in_use)
+            metrics.note_pages(pages.n_in_use, tick)
         # pack + provision (lazy growth / CoW / preemption) + execute
         plan = sched.plan_tick()
         if reservation == "lazy" and plan.in_flight:
@@ -277,19 +281,19 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                 pos_of=lambda uid: sim_req[uid].prompt_len
                 + cursors[uid].step,
                 metrics=metrics, preempt=preempt,
-                reclaim_cache=prefix.evict_under_pressure)
-            metrics.note_pages(pages.n_in_use)
+                reclaim_cache=prefix.evict_under_pressure, now=tick)
+            metrics.note_pages(pages.n_in_use, tick)
         if plan.in_flight:
             # mirror the engine's step dispatch: one launch per non-empty
             # tick, one compile per never-seen step shape
-            metrics.on_step_launch()
+            metrics.on_step_launch(tick)
             shape = ("rstep",) if step_mode == "ragged" else (
                 "step",
                 bucket_pow2(plan.n_full) if bucket else plan.n_full,
                 bucket_pow2(plan.n_cond) if bucket else plan.n_cond)
             if shape not in compiled:
                 compiled.add(shape)
-                metrics.on_step_compile()
+                metrics.on_step_compile(tick)
         events = sched.commit(plan)
         for ev in events:
             report.max_wait = max(report.max_wait,
@@ -297,10 +301,13 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             last_scheduled[ev.uid] = tick
             cursor = cursors[ev.uid]
             if not ev.done:
-                metrics.on_token(ev.uid, tick)     # step i emits token i+1
-                if pages is not None and ev.mode is Mode.FULL \
-                        and cursor.mode is Mode.COND:
-                    metrics.on_reclaim(release_uncond(ev.uid))
+                metrics.on_token(ev.uid, tick,     # step i emits token i+1
+                                 cond=ev.mode is Mode.COND)
+                if ev.mode is Mode.FULL and cursor.mode is Mode.COND:
+                    metrics.on_phase_transition(ev.uid, tick)
+                    if pages is not None:
+                        metrics.on_reclaim(ev.uid, tick,
+                                           release_uncond(ev.uid))
             else:
                 pool.free(ev.slot)
                 if pages is not None:

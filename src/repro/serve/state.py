@@ -447,6 +447,8 @@ class PrefixShareRegistry:
         self.alloc = alloc
         self._users: dict[int, set[str]] = {}       # prompt_len -> uids
         self._of_uid: dict[str, int] = {}
+        self.evictions = 0           # entries dropped under pool pressure
+        self.evicted_pages = 0       # physical pages those drops returned
 
     def lookup(self, prompt_len: int) -> list[int] | None:
         """Canonical uncond prompt pages for this length, or None."""
@@ -521,13 +523,20 @@ class PrefixShareRegistry:
         can dissolve the very CoW that needed the free page — a request
         whose worst-case span equals the whole pool must not wedge on its
         own published prefix). ``provision_growth`` exhausts this before
-        resorting to preemption: dropping cache beats killing work."""
+        resorting to preemption: dropping cache beats killing work.
+
+        Pressure evictions are counted on the registry (``evictions`` /
+        ``evicted_pages``) — note a 0-page eviction still helps, by
+        un-sharing the page whose CoW needed the grant, which is why the
+        return type stays bool (did anything change), not pages-freed."""
         for prompt_len in sorted(self._users):
             if self.reclaimable(prompt_len):
-                self.evict(prompt_len)
+                self.evictions += 1
+                self.evicted_pages += self.evict(prompt_len)
                 return True
         for prompt_len in sorted(self._users):
-            self.evict(prompt_len)
+            self.evictions += 1
+            self.evicted_pages += self.evict(prompt_len)
             return True
         return False
 
