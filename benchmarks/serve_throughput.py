@@ -43,6 +43,17 @@ p50/p95/p99 from the engine's log2 histograms, per-request
 per request in a serving context), and ``--trace-out PATH`` to export the
 continuous run's event trace as Chrome-trace JSON.
 
+Part 8 (``--host-pool-bytes N``, implies ``--reservation lazy``): the
+two-tier KV hierarchy (DESIGN.md §14) vs plain lazy at **equal device
+pool bytes** on a contended staggered-priority trace. ``--trace
+popular`` draws prompts Zipf-style from a small head set, so the
+content-addressed prefix cache turns repeat prefills into
+copy-on-write shares; preemption victims swap to the pinned-host tier
+and resume by DMA restore. Tiered must finish the same tokens with
+strictly fewer total denoiser passes, and the offline simulator must
+reproduce the engine's swap/hit/evict counters exactly. ``--only-tier``
+runs just this part (the CI kv-tier smoke).
+
     PYTHONPATH=src python -m benchmarks.serve_throughput [--tiny] \
         [--kv paged] [--reservation lazy] [--kv-dtype int8] \
         [--step auto|ragged|signature] [--trace-out trace.json]
@@ -53,6 +64,7 @@ from __future__ import annotations
 import argparse
 
 import jax
+import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_smoke_config
@@ -61,9 +73,9 @@ from repro.data.prompts import PAPER_PROMPTS
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.serve import (ContinuousEngine, ServeMetrics, ServeRequest,
-                         SimRequest, kv_page_bytes, pages_for,
-                         pages_for_pool_bytes, poisson_arrivals, simulate,
-                         write_chrome_trace)
+                         SimRequest, host_pages_for_bytes, kv_page_bytes,
+                         pages_for, pages_for_pool_bytes, poisson_arrivals,
+                         simulate, write_chrome_trace)
 from repro.serving import Request, ServingEngine
 
 FRACTIONS = [0.0, 0.2, 0.5]
@@ -346,9 +358,110 @@ def _ragged_vs_signature(params, cfg, *, n_req: int, prompt_len: int,
     return stats
 
 
+def _popular_prompts(seed: int, n: int, n_prompts: int = 3) -> list[int]:
+    """Zipf-weighted prompt indices (p proportional to 1/rank^1.5): a
+    'popular prompts' trace where the head prompt recurs — the workload
+    the content-addressed prefix cache exists for."""
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, n_prompts + 1) ** 1.5
+    return [int(k) for k in rng.choice(n_prompts, size=n, p=p / p.sum())]
+
+
+def _tiered_vs_lazy(params, cfg, *, batch: int,
+                    host_pool_bytes: int, trace: str = "popular",
+                    page_size: int = 4, seed: int = 0) -> dict:
+    """§14 acceptance: two-tier KV (host swap + content prefix cache) vs
+    plain lazy at **equal device pool bytes**.
+
+    The trace staggers arrivals two ticks apart with strictly rising
+    priority, so each newcomer preempts its predecessor when the tight
+    pool runs dry — under the tier, victims park their pages on the host
+    and resume by DMA restore (zero denoiser passes) instead of the
+    batched recompute forward. ``trace="popular"`` draws prompts
+    Zipf-style from a 3-prompt head set so repeat prompts hit the
+    content cache (2 prefill passes avoided each, CoW on divergence);
+    ``"burst"`` uses distinct prompts (misses only — swap savings
+    alone). Both engines see identical requests and device pool bytes;
+    outputs must be token-identical and the tiered run must do strictly
+    fewer total denoiser passes. The offline simulator replays the same
+    trace and must reproduce the tier counters exactly."""
+    n_req = 2 * batch
+    prompt_len, max_new = 8, 6      # fixed micro geometry: the pool below
+    plan = GuidancePlan.suffix(max_new, 0.5, 4.0)    # FULL prefix: uncond
+    num_pages = n_req + 4           # is tuned to it (~1.5 requests' peak)
+    arrivals = [2 * i for i in range(n_req)]
+    picks = _popular_prompts(seed, n_req) if trace == "popular" \
+        else [i % len(PAPER_PROMPTS) for i in range(n_req)]
+    host_pages = host_pages_for_bytes(host_pool_bytes,
+                                      kv_page_bytes(cfg, page_size, "bf16"))
+
+    def engine(tiered):
+        eng = ContinuousEngine(params, cfg, num_slots=n_req,
+                               pass_budget=2 * n_req, prompt_len=prompt_len,
+                               max_new=max_new, stop_on_eos=False,
+                               kv="paged", page_size=page_size,
+                               num_pages=num_pages, reservation="lazy",
+                               prefills_per_tick=1,
+                               host_pool_bytes=host_pool_bytes if tiered
+                               else 0,
+                               prefix_cache="content" if tiered else "length")
+        reqs = [ServeRequest(uid=f"t{i}", prompt=PAPER_PROMPTS[picks[i]],
+                             max_new_tokens=max_new, plan=plan,
+                             prompt_len=prompt_len, priority=i)
+                for i in range(n_req)]
+        out = eng.serve_trace(reqs, arrivals)
+        assert len(out) == n_req
+        return out, eng.metrics
+
+    tok_lazy, m_lazy = engine(False)
+    tok_tier, m_tier = engine(True)
+    assert tok_tier == tok_lazy, \
+        "host restore / prefix-hit replay must be token-identical"
+    total = {}
+    for tag, m in [("lazy", m_lazy), ("tiered", m_tier)]:
+        s = m.summary()
+        total[tag] = s["prefill_passes"] + s["denoiser_passes"]
+        emit(f"serve/tier_{tag}", total[tag],
+             f"prefill={s['prefill_passes']};decode={s['denoiser_passes']};"
+             f"preempt={s['preemptions']};resumes={s['resumes']};"
+             f"ticks={s['ticks']};"
+             f"tick_us={1e6 * m.wall_s / max(m.ticks, 1):.0f}")
+    st = m_tier.summary()
+    emit("serve/tier_savings", st["recompute_passes_avoided"],
+         f"swap_outs={st['swap_outs']};swap_ins={st['swap_ins']};"
+         f"host_evictions={st['host_evictions']};"
+         f"prefix_hits={st['prefix_hits']};"
+         f"hit_rate={st['prefix_hit_rate']:.2f}")
+    assert st["swap_ins"] > 0, st
+    assert st["recompute_passes_avoided"] > 0, st
+    if trace == "popular":
+        assert st["prefix_hits"] > 0 and st["prefix_hit_rate"] > 0, st
+    assert total["tiered"] < total["lazy"], \
+        f"tier must do strictly less denoiser work: {total}"
+
+    sim_trace = [SimRequest(f"t{i}", 2 * i, plan, prompt_len=prompt_len,
+                            priority=i, content=f"p{picks[i]}")
+                 for i in range(n_req)]
+    rep = simulate(sim_trace, num_slots=n_req, pass_budget=2 * n_req,
+                   kv="paged", page_size=page_size, num_pages=num_pages,
+                   reservation="lazy", prefills_per_tick=1,
+                   host_pages=host_pages, prefix_cache="content")
+    ss = rep.metrics.summary()
+    for key in ("preemptions", "swap_outs", "swap_ins", "host_evictions",
+                "prefix_hits", "prefix_misses", "recompute_passes_avoided"):
+        assert ss[key] == st[key], f"sim {key}={ss[key]} != engine {st[key]}"
+    return {"total_passes": total, "num_pages": num_pages,
+            "host_pages": host_pages, "trace": trace,
+            "tiered": st, "lazy": m_lazy.summary(), "sim_matches": True}
+
+
 def run(tiny: bool = False, kv: str = "slot",
         reservation: str = "eager", kv_dtype: str = "bf16",
-        step: str = "auto", trace_out: str | None = None) -> dict:
+        step: str = "auto", trace_out: str | None = None,
+        host_pool_bytes: int = 0, trace: str = "popular",
+        only_tier: bool = False) -> dict:
+    if host_pool_bytes:
+        reservation = "lazy"                        # only lazy preempts
     if step == "ragged":
         kv = "paged"                                # ragged implies paged
     if kv_dtype == "int8":
@@ -364,6 +477,12 @@ def run(tiny: bool = False, kv: str = "slot",
     else:
         n_req, prompt_len, max_new, batch = 8, 24, 24, 4
         fractions = FRACTIONS
+    if only_tier:
+        if not host_pool_bytes:
+            raise SystemExit("--only-tier needs --host-pool-bytes > 0")
+        return {"tiered_vs_lazy": _tiered_vs_lazy(
+            params, cfg, batch=batch,
+            host_pool_bytes=host_pool_bytes, trace=trace)}
     rows = _static_sweep(params, cfg, n_req=n_req, prompt_len=prompt_len,
                          max_new=max_new, fractions=fractions)
     # arrival rate well above the service rate so a queue builds and the
@@ -392,6 +511,10 @@ def run(tiny: bool = False, kv: str = "slot",
         out["int8_vs_bf16"] = _int8_vs_bf16(
             params, cfg, prompt_len=prompt_len, max_new=max_new,
             batch=batch)
+    if host_pool_bytes > 0:
+        out["tiered_vs_lazy"] = _tiered_vs_lazy(
+            params, cfg, batch=batch, host_pool_bytes=host_pool_bytes,
+            trace=trace)
     return out
 
 
@@ -420,10 +543,38 @@ if __name__ == "__main__":
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the continuous run's event trace as "
                          "Chrome-trace JSON (chrome://tracing / Perfetto)")
+    ap.add_argument("--host-pool-bytes", type=int, default=0,
+                    help="pinned-host swap tier byte budget; >0 runs the "
+                         "tiered-vs-lazy comparison (implies --reservation "
+                         "lazy, DESIGN.md §14)")
+    ap.add_argument("--trace", choices=["popular", "burst"],
+                    default="popular",
+                    help="tiered-part prompt mix: popular = Zipf head-set "
+                         "(content-cache hits), burst = distinct prompts "
+                         "(swap savings only)")
+    ap.add_argument("--only-tier", action="store_true",
+                    help="run just the tiered-vs-lazy part (the CI kv-tier "
+                         "smoke; needs --host-pool-bytes)")
     args = ap.parse_args()
     out = run(tiny=args.tiny, kv=args.kv, reservation=args.reservation,
               kv_dtype=args.kv_dtype, step=args.step,
-              trace_out=args.trace_out)
+              trace_out=args.trace_out,
+              host_pool_bytes=args.host_pool_bytes, trace=args.trace,
+              only_tier=args.only_tier)
+    if "tiered_vs_lazy" in out:
+        tv = out["tiered_vs_lazy"]
+        st = tv["tiered"]
+        print(f"tiered @ {tv['num_pages']} device pages + "
+              f"{tv['host_pages']} host pages ({tv['trace']} trace): "
+              f"total passes tiered={tv['total_passes']['tiered']} "
+              f"lazy={tv['total_passes']['lazy']}; "
+              f"swap_outs={st['swap_outs']} swap_ins={st['swap_ins']} "
+              f"prefix_hits={st['prefix_hits']} "
+              f"hit_rate={st['prefix_hit_rate']:.2f} "
+              f"recompute_passes_avoided={st['recompute_passes_avoided']} "
+              f"(sim reproduces: {tv['sim_matches']})")
+    if args.only_tier:
+        raise SystemExit(0)
     print("continuous-vs-static:", out["compare"]["continuous"])
     print("                     ", out["compare"]["static"])
     cont = out["compare"]["continuous"]

@@ -47,7 +47,8 @@ def run_static(params, cfg, args) -> None:
 def run_continuous(params, cfg, args) -> None:
     """Poisson-ish arrivals into the phase-aware engine, vs the static
     facade at the same pass budget."""
-    budget = args.pass_budget or 2 * args.batch
+    budget = "auto" if args.pass_budget == "auto" \
+        else (int(args.pass_budget) or 2 * args.batch)
     slots = args.slots or 2 * args.batch
     arrivals = poisson_arrivals(args.seed, n=args.requests, rate=args.rate)
     reqs = [ServeRequest(uid=f"c{i}", prompt=PAPER_PROMPTS[i % len(PAPER_PROMPTS)],
@@ -55,6 +56,8 @@ def run_continuous(params, cfg, args) -> None:
                          guidance_scale=args.guidance_scale)
             for i in range(args.requests)]
 
+    swap_min = args.swap_min_pages if args.swap_min_pages == "auto" \
+        else int(args.swap_min_pages)
     eng = ContinuousEngine(params, cfg, num_slots=slots, pass_budget=budget,
                            prompt_len=args.prompt_len, max_new=args.max_new,
                            selective_fraction=args.fraction, seed=args.seed,
@@ -62,6 +65,9 @@ def run_continuous(params, cfg, args) -> None:
                            page_size=args.page_size,
                            reservation=args.reservation,
                            kv_dtype=args.kv_dtype,
+                           host_pool_bytes=args.host_pool_bytes,
+                           swap_min_pages=swap_min,
+                           prefix_cache=args.prefix_cache,
                            step_mode=None if args.step == "auto"
                            else args.step)
     eng.serve_trace(reqs, arrivals)
@@ -93,6 +99,16 @@ def run_continuous(params, cfg, args) -> None:
               f"shared_page_hits={m.shared_page_hits} "
               f"cow_copies={m.cow_copies} preemptions={m.preemptions} "
               f"resumes={m.resumes}")
+    if args.host_pool_bytes or args.prefix_cache == "content":
+        m = eng.metrics
+        s = m.summary()
+        print(f"[tier      ] swap_outs={s['swap_outs']} "
+              f"swap_ins={s['swap_ins']} "
+              f"host_evictions={s['host_evictions']} "
+              f"prefix_hits={s['prefix_hits']} "
+              f"prefix_misses={s['prefix_misses']} "
+              f"hit_rate={s['prefix_hit_rate']:.2f} "
+              f"recompute_passes_avoided={s['recompute_passes_avoided']}")
 
     static = ServingEngine(params, cfg, max_batch=args.batch,
                            prompt_len=args.prompt_len, max_new=args.max_new,
@@ -116,8 +132,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--slots", type=int, default=0,
                     help="continuous: arena slots (default 2*batch)")
-    ap.add_argument("--pass-budget", type=int, default=0,
-                    help="continuous: denoiser passes per tick (default 2*batch)")
+    ap.add_argument("--pass-budget", default="0",
+                    help="continuous: denoiser passes per tick (default "
+                         "2*batch), or 'auto' to derive from the roofline "
+                         "step-latency model")
     ap.add_argument("--rate", type=float, default=1.0,
                     help="continuous: mean arrivals per tick")
     ap.add_argument("--kv", choices=["slot", "paged"], default="slot",
@@ -134,6 +152,23 @@ def main() -> None:
                     help="continuous --kv paged: page pool dtype (int8 = "
                          "quantized pages + fp32 per-row scales, ~2x pages "
                          "per byte, DESIGN.md \u00a711)")
+    ap.add_argument("--host-pool-bytes", type=int, default=0,
+                    help="continuous --reservation lazy: pinned-host swap "
+                         "tier byte budget; preemption victims park their "
+                         "KV pages there and resume by DMA restore instead "
+                         "of recompute (0 = off, DESIGN.md §14)")
+    ap.add_argument("--swap-min-pages", default="0",
+                    help="smallest checkpoint (pages) worth swapping to "
+                         "host; smaller ones recompute. 'auto' derives the "
+                         "restore-vs-recompute break-even from the roofline "
+                         "autotuner (requires --pass-budget auto)")
+    ap.add_argument("--prefix-cache", choices=["length", "content"],
+                    default="length",
+                    help="continuous --reservation lazy: 'content' keys "
+                         "canonical prompt pages by token-ids hash so "
+                         "identical prompts share cond-stream KV "
+                         "copy-on-write (DESIGN.md §14); 'length' is the "
+                         "uncond length-only sharing of §10")
     ap.add_argument("--step", choices=["auto", "ragged", "signature"],
                     default="auto",
                     help="continuous: decode step mode (ragged = one "
@@ -159,6 +194,15 @@ def main() -> None:
     if args.step == "ragged" and args.kv != "paged":
         ap.error("--step ragged requires --kv paged (the flat pass list "
                  "addresses KV through block tables)")
+    if args.host_pool_bytes and args.reservation != "lazy":
+        ap.error("--host-pool-bytes requires --reservation lazy "
+                 "(only lazy preempts, so only lazy swaps)")
+    if args.prefix_cache == "content" and args.reservation != "lazy":
+        ap.error("--prefix-cache content requires --reservation lazy "
+                 "(shared pages need CoW growth)")
+    if args.swap_min_pages == "auto" and args.pass_budget != "auto":
+        ap.error("--swap-min-pages auto prices the break-even off the "
+                 "roofline autotuner: set --pass-budget auto")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

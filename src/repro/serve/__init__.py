@@ -13,6 +13,13 @@ Observability (``repro.serve.obs``, DESIGN.md §13): every engine/sim
 state change is a typed event in ``metrics.trace``; counters fold from
 the stream, latency percentiles come from log2 histograms, and a run
 exports to Chrome-trace JSON via :func:`to_chrome_trace`.
+
+Tiered KV memory (DESIGN.md §14): preemption victims park their pages
+in a byte-budgeted pinned-host :class:`HostPagePool` and resume by DMA
+restore instead of recompute (``plan_swap_out`` is the shared
+engine/sim decision procedure), and a :class:`ContentPrefixRegistry`
+keyed by :func:`content_key` lets identical prompts share
+cond-stream prompt KV copy-on-write.
 """
 
 from repro.serve.autotune import BudgetAutotuner
@@ -26,22 +33,27 @@ from repro.serve.scheduler import (PassRow, Scheduler, TickPlan, bucket_pow2,
                                    provision_growth, victim_key)
 from repro.serve.sim import (SimRequest, compare_policies, poisson_arrivals,
                              poisson_trace, simulate)
-from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
-                               fresh_lazy_needs, kv_page_bytes, page_nbytes,
-                               paged_partition_specs, pages_for,
-                               pages_for_pool_bytes, pool_partition_specs,
-                               pooled_cache_axes, resume_lazy_needs,
-                               stream_page_needs)
+from repro.serve.state import (ContentPrefixRegistry, HostPagePool,
+                               PageAllocator, PrefixShareRegistry, StatePool,
+                               content_key, fresh_lazy_needs,
+                               host_pages_for_bytes, kv_page_bytes,
+                               page_nbytes, paged_partition_specs, pages_for,
+                               pages_for_pool_bytes, plan_swap_out,
+                               pool_partition_specs, pooled_cache_axes,
+                               resume_lazy_needs, stream_page_needs)
 
 __all__ = [
-    "ArrivalQueue", "BudgetAutotuner", "ContinuousEngine", "Event",
-    "EventTrace", "Log2Histogram", "PageAllocator",
+    "ArrivalQueue", "BudgetAutotuner", "ContentPrefixRegistry",
+    "ContinuousEngine", "Event", "EventTrace", "HostPagePool",
+    "Log2Histogram", "PageAllocator",
     "PassRow", "PrefixShareRegistry", "RequestTimeline", "Scheduler",
     "ServeMetrics", "ServeRequest", "SimRequest", "StatePool", "TickPlan",
     "TickRecord", "TickTimer", "TickTiming",
-    "bucket_pow2", "compare_policies", "fold_counters",
-    "fresh_lazy_needs", "kv_page_bytes", "page_nbytes",
+    "bucket_pow2", "compare_policies", "content_key", "fold_counters",
+    "fresh_lazy_needs", "host_pages_for_bytes", "kv_page_bytes",
+    "page_nbytes",
     "paged_partition_specs", "pages_for", "pages_for_pool_bytes",
+    "plan_swap_out",
     "pool_partition_specs", "pooled_cache_axes", "poisson_arrivals",
     "poisson_trace", "provision_growth", "resume_lazy_needs", "simulate",
     "stream_page_needs", "to_chrome_trace", "victim_key",

@@ -156,6 +156,50 @@ class BudgetAutotuner:
         pred = self.predicted_tick_s(kv_dtype)
         return pred is not None and pred > self.target_tick_s
 
+    #: break-even verdict for "swapping never pays on this link": larger
+    #: than any real checkpoint, so ``plan_swap_out`` always recomputes
+    SWAP_NEVER = 1 << 30
+
+    def swap_break_even_pages(self, page_bytes: int, *,
+                              host_gbps: float = 8.0,
+                              kv_dtype: str | None = None) -> int:
+        """Restore-bytes vs recompute-passes break-even (DESIGN.md §14):
+        the smallest checkpoint size, in pages, for which restoring from
+        the host tier beats recomputing the KV with the batched resume
+        forward — the floor ``swap_min_pages="auto"`` installs into
+        ``plan_swap_out``.
+
+        Cost model, both sides in roofline seconds:
+
+        * **restore(n)** = ``t_setup + n * page_bytes / host_bw`` — a
+          fixed DMA round-trip setup (priced at one per-pass unit, the
+          kernel-launch scale of the gather/scatter pair) plus per-byte
+          transfer;
+        * **recompute(n)** = ``2 * per_pass * n`` — the two-stream resume
+          forward's work grows with the span it rebuilds, priced per page
+          at the roofline's worst applicable per-pass seconds.
+
+        Short checkpoints sit under the DMA setup cost, so recompute wins
+        (the issue's "long generated suffixes swap"); the break-even is
+        the smallest ``n`` where restore is no slower. When the per-page
+        DMA alone exceeds the per-page recompute (``page_bytes/host_bw >=
+        2*per_pass``) the lines never cross and :data:`SWAP_NEVER` says
+        so. Monotonicity (pinned in tests): a faster link lowers the
+        floor, fatter pages raise it, a slower model (larger per-pass)
+        lowers it. Returns 0 — swap everything — before any applicable
+        observation or on degenerate inputs.
+        """
+        per_pass = self.worst_for(kv_dtype)
+        if per_pass is None or per_pass <= 0 or page_bytes <= 0 \
+                or host_gbps <= 0:
+            return 0
+        per_page_s = page_bytes / (host_gbps * 1e9)
+        margin = 2 * per_pass - per_page_s     # per-page restore advantage
+        if margin <= 0:
+            return self.SWAP_NEVER
+        import math
+        return max(1, min(self.SWAP_NEVER, math.ceil(per_pass / margin)))
+
     def report(self, kv_dtype: str | None = None) -> dict:
         """Full autotuner state. ``per_pass_s`` lists every observation;
         worst/budget/predicted/violated scope to ``kv_dtype`` when given

@@ -94,14 +94,18 @@ from repro.serve.obs import TickTimer
 from repro.serve.queue import ArrivalQueue, ServeRequest
 from repro.serve.scheduler import (Scheduler, TickPlan, bucket_pow2,
                                    provision_growth)
-from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
-                               fresh_lazy_needs, kv_page_bytes, pages_for,
-                               resume_lazy_needs, stream_page_needs)
+from repro.serve.state import (ContentPrefixRegistry, HostPagePool,
+                               PageAllocator, PrefixShareRegistry, StatePool,
+                               content_key, fresh_lazy_needs,
+                               host_pages_for_bytes, kv_page_bytes, pages_for,
+                               plan_swap_out, resume_lazy_needs,
+                               stream_page_needs)
 
 KV_MODES = ("slot", "paged")
 KV_DTYPES = ("bf16", "int8")
 RESERVATION_MODES = ("eager", "lazy")
 STEP_MODES = ("signature", "ragged")
+PREFIX_CACHE_MODES = ("length", "content")
 
 
 def _sample(logits, key, temperature):
@@ -170,7 +174,9 @@ class _PrefillItem:
     def __init__(self, req: ServeRequest, slot: int, tokens: np.ndarray,
                  true_len: int, u_mask_below: int | None, key: np.ndarray,
                  emit: bool, u_tokens: np.ndarray | None = None,
-                 shared_pages: int = 0):
+                 shared_pages: int = 0, restore: int = 0,
+                 cached: tuple | None = None, hit_pages: int = 0,
+                 miss: bool = False, publish_key: str | None = None):
         self.req = req
         self.slot = slot
         self.tokens = tokens              # (true_len,) int32
@@ -186,6 +192,17 @@ class _PrefillItem:
                                           # to the queue-order bookkeeping
                                           # pass so engine==sim stream order
                                           # holds across length buckets)
+        self.restore = restore            # pages restored from the host tier
+                                          # (resume-by-copy: skips the prefill
+                                          # forward entirely)
+        self.cached = cached              # content-cache hit: the founder's
+                                          # (l_u, l_c) last-position logits —
+                                          # token 0 replays from these, no
+                                          # forward runs for this item
+        self.hit_pages = hit_pages        # cond prompt pages shared on a hit
+        self.miss = miss                  # content lookup ran and missed
+        self.publish_key = publish_key    # install this prefill's logits as
+                                          # the content entry's payload
 
 
 class ContinuousEngine:
@@ -210,7 +227,10 @@ class ContinuousEngine:
                  reservation: str = "eager",
                  kv_dtype: str = "bf16",
                  target_tick_s: float = 50e-3,
-                 step_mode: str | None = None):
+                 step_mode: str | None = None,
+                 host_pool_bytes: int = 0,
+                 swap_min_pages: int | str = 0,
+                 prefix_cache: str = "length"):
         if kv not in KV_MODES:
             raise ValueError(f"kv {kv!r} not in {KV_MODES}")
         if step_mode is None:
@@ -232,6 +252,24 @@ class ContinuousEngine:
         if reservation == "lazy" and kv != "paged":
             raise ValueError('reservation="lazy" requires kv="paged" '
                              "(the slot arena reserves whole rows)")
+        if prefix_cache not in PREFIX_CACHE_MODES:
+            raise ValueError(f"prefix_cache {prefix_cache!r} not in "
+                             f"{PREFIX_CACHE_MODES}")
+        if prefix_cache == "content" and reservation != "lazy":
+            raise ValueError('prefix_cache="content" requires '
+                             'reservation="lazy" (the cache shares prompt '
+                             "pages, which eager reservation pre-grants)")
+        if host_pool_bytes < 0:
+            raise ValueError(host_pool_bytes)
+        if host_pool_bytes and reservation != "lazy":
+            raise ValueError("host_pool_bytes requires reservation=\"lazy\" "
+                             "(swap-out rides the preemption path)")
+        if swap_min_pages != "auto" and (not isinstance(swap_min_pages, int)
+                                         or swap_min_pages < 0):
+            raise ValueError(f"swap_min_pages {swap_min_pages!r}")
+        if swap_min_pages == "auto" and pass_budget != "auto":
+            raise ValueError('swap_min_pages="auto" needs the roofline '
+                             'latency model: set pass_budget="auto"')
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -283,11 +321,26 @@ class ContinuousEngine:
                                        kv_dtype=kv_dtype)
             if reservation == "lazy":
                 self._prefix = PrefixShareRegistry(self.pages)
+        self.prefix_cache = prefix_cache
+        self._content: ContentPrefixRegistry | None = \
+            ContentPrefixRegistry(self.pages) if prefix_cache == "content" \
+            else None
         self.scheduler = Scheduler(self.pass_budget, policy=policy,
                                    starvation_limit=starvation_limit)
         self.metrics = ServeMetrics()
         self.page_bytes = kv_page_bytes(cfg, page_size, kv_dtype) \
             if kv == "paged" else 0
+        # host tier: byte budget -> whole pages at this pool's page price
+        self.host_pool_bytes = host_pool_bytes
+        host_pages = host_pages_for_bytes(host_pool_bytes, self.page_bytes)
+        if host_pool_bytes and not host_pages:
+            raise ValueError(f"host_pool_bytes={host_pool_bytes} affords no "
+                             f"whole page (page_bytes={self.page_bytes})")
+        self._host: HostPagePool | None = \
+            HostPagePool(host_pages, page_bytes=self.page_bytes) \
+            if host_pages else None
+        self._swap_min_auto = swap_min_pages == "auto"
+        self._swap_min = 0 if self._swap_min_auto else int(swap_min_pages)
         # price pages in HBM bytes at the pool's dtype so occupancy
         # metrics compare across bf16/int8 (abstract specs only)
         self.metrics.page_bytes = self.page_bytes
@@ -365,8 +418,12 @@ class ContinuousEngine:
         self.metrics.page_bytes = self.page_bytes
         with timer.phase("admit"):
             for dead in self.queue.expire(now):
-                self._resume.pop(dead.uid, None)  # a preempted request's ttl
-                self.metrics.on_expire(dead.uid, now)  # keeps running queued
+                had_ckpt = self._resume.pop(dead.uid, None) is not None
+                self.metrics.on_expire(dead.uid, now)  # ttl keeps running
+                if had_ckpt and self._host is not None:   # queued; drop the
+                    freed = self._host.drop(dead.uid)     # host checkpoint
+                    if freed:                             # with it — no leak
+                        self.metrics.on_host_evict(dead.uid, now, freed)
             if self._autotuner is not None and not self._autotuner.per_pass_s:
                 self.autotune_budget()
             if self.kv == "paged":
@@ -388,7 +445,7 @@ class ContinuousEngine:
                     metrics=self.metrics,
                     preempt=lambda uid: self._preempt(uid, now),
                     copy_page=self._copy_page,
-                    reclaim_cache=self._prefix.evict_under_pressure,
+                    reclaim_cache=self._reclaim_cache,
                     now=now)
                 self.metrics.note_pages(self.pages.n_in_use, now)
         with timer.phase("step"):
@@ -538,28 +595,52 @@ class ContinuousEngine:
             self._init_paged_pool()
         groups: dict[int, list] = {}
         for item in batch:
+            if item.restore or item.cached is not None:
+                continue               # no forward: host restore / replay
             groups.setdefault(_bucket(item.true_len), []).append(item)
         tok0_of: dict[str, int] = {}
         for Sb in sorted(groups):
             tok0_of.update(self._prefill_paged_group(Sb, groups[Sb]))
+        for it in batch:
+            if it.cached is None:
+                continue
+            # content-cache hit: token 0 replays from the founder's cached
+            # pre-combine logits with this request's own scale/key/temp —
+            # bit-exact vs the prefill's vmapped sample (elementwise
+            # cfg_combine + per-element vmap semantics)
+            l_u, l_c = it.cached
+            t0 = self._hit_sample_fn()(
+                jnp.asarray(l_u), jnp.asarray(l_c),
+                np.float32(it.req.guidance_scale), jnp.asarray(it.key),
+                np.float32(it.req.temperature))
+            tok0_of[it.req.uid] = int(t0)
         # bookkeeping in *queue order* (not bucket order): the simulator
         # admits one request at a time, so the event stream must read
-        # share -> admit -> first-token (or share -> resume) per request
-        # in pop order for the engine==sim event contract to hold
+        # share -> hit/miss -> admit -> first-token (or share -> swap_in
+        # -> resume) per request in pop order for the engine==sim event
+        # contract to hold
         for it in batch:
             uid = it.req.uid
             if it.shared_pages:
                 self.metrics.on_share(uid, now, it.shared_pages)
+            if it.hit_pages:
+                self.metrics.on_prefix_hit(uid, now, it.hit_pages)
+            elif it.miss:
+                self.metrics.on_prefix_miss(uid, now)
             if not it.emit:                # resume: KV rebuilt, no emit
+                if it.restore:
+                    self.metrics.on_swap_in(uid, now, it.restore)
                 cursor = self._states[uid].cursor
                 self.metrics.on_resume(uid, now,
-                                       full=int(cursor.mode is Mode.FULL))
+                                       full=int(cursor.mode is Mode.FULL),
+                                       from_host=bool(it.restore))
                 continue
             state = self._states[uid]
             plan = state.cursor.plan
             self.metrics.on_admit(
                 uid, now, total_steps=plan.total_steps,
-                full_steps=plan.denoiser_passes() - plan.total_steps)
+                full_steps=plan.denoiser_passes() - plan.total_steps,
+                cached=it.cached is not None)
             t0 = tok0_of[uid]
             if self.stop_on_eos and t0 == EOS:
                 self._finalize(uid, now)
@@ -588,6 +669,22 @@ class ContinuousEngine:
         self._req_seq += 1
         return key
 
+    def _free_for_admission(self, n: int, uid: str, now: int) -> bool:
+        """Make ``n`` device pages free for a blocked admission by
+        draining the content cache. The §14 content entries are
+        *persistent*, so an idle pool can be all cache with nothing
+        active to trigger ``provision_growth``'s reclaim path — without
+        this the queue head would wedge on pure cache. The length-keyed
+        uncond registry is left alone: its entries die with their users,
+        so it can never pin an idle pool (and evicting live shares here
+        would change pre-§14 scheduling)."""
+        while self.pages.n_free < n:
+            if self._content is None or \
+                    not self._content.evict_under_pressure():
+                return False
+            self.metrics.on_cache_evict(uid, now)
+        return True
+
     def _try_admit_eager(self, req: ServeRequest, plan: GuidancePlan,
                          S: int, now: int) -> _PrefillItem | None:
         need_c, need_u = stream_page_needs(plan, S, self.page_size)
@@ -609,7 +706,17 @@ class ContinuousEngine:
         shared = self._prefix.lookup(S) is not None
         need_c, need_u, wants_u = fresh_lazy_needs(plan, S, self.page_size,
                                                    shared=shared)
-        if self.pages.n_free < need_c + need_u:
+        tokens = self._tokenize(req.prompt, S)[0]
+        ckey = content_key(tokens) if self._content is not None else None
+        if ckey is not None and self._content.ready(ckey, now) \
+                and self._content.matches(ckey, tokens) \
+                and (not wants_u or shared):
+            # identical prompt, founder's prefill already ran, and the
+            # uncond side (if any) is servable from the length registry:
+            # admit with zero forward passes
+            return self._admit_prefix_hit(req, plan, S, now, tokens, ckey,
+                                          wants_u)
+        if not self._free_for_admission(need_c + need_u, req.uid, now):
             return None
         self.queue.pop()
         self.pages.alloc(req.uid, "c", need_c)
@@ -625,16 +732,72 @@ class ContinuousEngine:
         key = self._fresh_key()
         self._slots.lstep[slot] = 0
         self._slots.key[slot] = key
-        return _PrefillItem(req, slot, self._tokenize(req.prompt, S)[0],
-                            S, u_mask, key, emit=True, shared_pages=n_share)
+        miss = ckey is not None
+        publish_key = None
+        if miss and self._content.lookup(ckey) is None:
+            # found the content cache cold: this prefill's cond prompt
+            # pages become the canonical entry (hittable next tick)
+            self._content.publish(ckey, req.uid, ids=tokens, tick=now)
+            publish_key = ckey
+        return _PrefillItem(req, slot, tokens, S, u_mask, key, emit=True,
+                            shared_pages=n_share, miss=miss,
+                            publish_key=publish_key)
+
+    def _admit_prefix_hit(self, req: ServeRequest, plan: GuidancePlan,
+                          S: int, now: int, tokens: np.ndarray, ckey: str,
+                          wants_u: bool) -> _PrefillItem:
+        """Content-cache hit: share the canonical cond prompt pages (and
+        the length-keyed uncond prefix, when the plan has a FULL phase)
+        and replay token 0 from the founder's cached last-position logits
+        — the whole admission costs zero denoiser passes."""
+        self.queue.pop()
+        got = self._content.acquire(ckey, req.uid)
+        n_share = len(self._prefix.acquire(S, req.uid)) if wants_u else 0
+        slot = self._admit_common(req, PlanCursor(plan), S)
+        key = self._fresh_key()
+        self._slots.lstep[slot] = 0
+        self._slots.key[slot] = key
+        payload = self._content.payload(ckey)
+        assert payload is not None     # ready() gates on the founder tick
+        return _PrefillItem(req, slot, tokens, S, None, key, emit=True,
+                            shared_pages=n_share, hit_pages=len(got),
+                            cached=payload)
 
     def _try_admit_resume(self, req: ServeRequest, plan: GuidancePlan,
                           S: int, now: int) -> _PrefillItem | None:
         rs = self._resume[req.uid]
+        if self._host is not None and self._host.holds(req.uid):
+            # restore by copy: the preemption swap kept this checkpoint's
+            # exact KV pages, so re-admission is a host->device DMA and
+            # zero denoiser passes (the recompute path below stays the
+            # fallback once LRU pressure drops the checkpoint)
+            held = self._host.pages_of(req.uid)
+            total = sum(len(v) for v in held.values())
+            if not self._free_for_admission(total, req.uid, now):
+                return None
+            self.queue.pop()
+            del self._resume[req.uid]
+            if self._pool_p is None:
+                self._init_paged_pool()
+            for stream in sorted(held):
+                dst = self.pages.alloc(req.uid, stream, len(held[stream]))
+                self._restore_pages(held[stream], dst)
+            self._host.drop(req.uid)
+            L = S + rs.step
+            cursor = PlanCursor(plan, step=rs.step,
+                                passes_executed=rs.passes)
+            slot = self._admit_common(req, cursor, L)
+            state = self._states[req.uid]
+            state.generated = list(rs.generated)
+            self._slots.tok[slot] = rs.generated[-1]
+            self._slots.lstep[slot] = rs.step
+            self._slots.key[slot] = rs.key
+            return _PrefillItem(req, slot, np.zeros(0, np.int32), L, None,
+                                rs.key, emit=False, restore=total)
         shared = self._prefix.lookup(S) is not None
         need_c, need_u, wants_u, n_share = resume_lazy_needs(
             plan, rs.step, S, self.page_size, shared=shared)
-        if self.pages.n_free < need_c + need_u:
+        if not self._free_for_admission(need_c + need_u, req.uid, now):
             return None
         self.queue.pop()
         del self._resume[req.uid]
@@ -695,13 +858,24 @@ class ContinuousEngine:
             scales[i] = it.req.guidance_scale
             temps[i] = it.req.temperature
         fn = self._paged_prefill_fn(Sb, kb)
-        self._pool_p, tok0 = fn(self.params, self._pool_p,
-                                jnp.asarray(tokens), jnp.asarray(tokens_u),
-                                jnp.asarray(true_len),
-                                jnp.asarray(btc), jnp.asarray(btu),
-                                jnp.asarray(keys), jnp.asarray(scales),
-                                jnp.asarray(temps))
+        self._pool_p, tok0, l_c, l_u = fn(
+            self.params, self._pool_p,
+            jnp.asarray(tokens), jnp.asarray(tokens_u),
+            jnp.asarray(true_len),
+            jnp.asarray(btc), jnp.asarray(btu),
+            jnp.asarray(keys), jnp.asarray(scales),
+            jnp.asarray(temps))
         tok0 = np.asarray(tok0)
+        if self._content is not None and \
+                any(it.publish_key for it in items):
+            # install the founders' pre-combine last-position logits as
+            # the content entries' payloads: a later hit replays token 0
+            # from these with its own scale/key/temp, zero passes
+            l_c_h, l_u_h = np.asarray(l_c), np.asarray(l_u)
+            for i, it in enumerate(items):
+                if it.publish_key:
+                    self._content.set_payload(
+                        it.publish_key, (l_u_h[i].copy(), l_c_h[i].copy()))
         # token/admit bookkeeping happens in the caller, in queue order
         return {it.req.uid: int(tok0[i]) for i, it in enumerate(items)}
 
@@ -716,27 +890,93 @@ class ContinuousEngine:
             freed += self._prefix.release(uid)
         return freed
 
+    def _reclaim_cache(self) -> bool:
+        """Pool-pressure cache reclaim, content tier first: persistent
+        content entries are pure cache (recomputable from the prompt) so
+        they yield before the uncond length-prefix registry, whose
+        canonical copies live requests may still be acquiring."""
+        if self._content is not None and \
+                self._content.evict_under_pressure():
+            return True
+        return self._prefix.evict_under_pressure()
+
     def _preempt(self, uid: str, now: int) -> None:
         """RUNNING -> PREEMPTED: evict ``uid`` back to the queue. Its
         pages are freed for the preemptor; the plan cursor, generated
         tokens and RNG key are checkpointed so the eventual resume is
-        token-identical to an uninterrupted run."""
+        token-identical to an uninterrupted run. With a host tier, the
+        victim's pages are copied out first (preempt -> host_evict* ->
+        swap_out event order, the contract the sim replays) so resume
+        restores by DMA copy instead of recompute."""
         state = self._states.pop(uid)
         self._resume[uid] = _ResumeState(
             step=state.cursor.step, passes=state.cursor.passes_executed,
             generated=list(state.generated),
             key=self._slots.key[state.slot].copy())
         self.pool.free(state.slot)
+        self.metrics.on_preempt(uid, now)
+        swap = plan_swap_out(self.pages, self._host, uid,
+                             min_pages=self._swap_min)
+        if swap is not None:
+            put = self._host.put(uid, swap)
+            assert put is not None       # plan_swap_out checked capacity
+            placed, evicted = put
+            for euid, n_freed in evicted:
+                self.metrics.on_host_evict(euid, now, n_freed)
+            self._swap_out(uid, swap, placed)
+            self.metrics.on_swap_out(uid, now, sum(swap.values()))
         self.pages.free_all(uid)
         self._prefix.release(uid)
+        if self._content is not None:
+            self._content.release(uid)
         self.scheduler.release(uid)
         self.queue.requeue(state.req)
-        self.metrics.on_preempt(uid, now)
 
     def _copy_page(self, src: int, dst: int) -> None:
         """Device copy backing a CoW detach (page payload, all layers)."""
         fn = self._copy_page_fn()
         self._pool_p = fn(self._pool_p, np.int32(src), np.int32(dst))
+
+    def _swap_out(self, uid: str, swap: dict[str, int],
+                  placed: dict[str, list[int]]) -> None:
+        """Copy a preemption victim's device pages into its reserved host
+        slots, stream by stream: one pow2-bucketed gather per stream
+        reads the pages (values and int8 scales through the same
+        indices, so the §11 pair invariant holds across tiers), then a
+        host-side scatter into the arena."""
+        if self._host.arena is None:
+            self._host.attach(self._pool_p)
+        for stream in sorted(swap):
+            pages_dev = self.pages.owned(uid, stream)
+            n = len(pages_dev)
+            nb = _bucket(n)
+            idx = np.zeros(nb, np.int32)       # pad in-range: store slices
+            idx[:n] = pages_dev
+            rows = jax.device_get(
+                self._gather_pages_fn(nb)(self._pool_p, jnp.asarray(idx)))
+            self._host.store(placed[stream], rows)
+
+    def _restore_pages(self, host_slots: list[int],
+                       dev_pages: list[int]) -> None:
+        """Scatter host-tier page rows into freshly granted device pages
+        (the resume-from-host path): one pow2-bucketed scatter, padding
+        addressed at the out-of-range page index so it drops."""
+        rows = self._host.load(host_slots)
+        n = len(dev_pages)
+        nb = _bucket(n)
+        idx = np.full(nb, self.num_pages, np.int32)
+        idx[:n] = dev_pages
+
+        def pad(leaf):
+            axis = 1 if leaf.ndim == 5 else 0
+            if leaf.shape[axis] == nb:
+                return jnp.asarray(leaf)
+            widths = [(0, 0)] * leaf.ndim
+            widths[axis] = (0, nb - leaf.shape[axis])
+            return jnp.asarray(np.pad(leaf, widths))
+
+        self._pool_p = self._scatter_pages_fn(nb)(
+            self._pool_p, jnp.asarray(idx), jax.tree.map(pad, rows))
 
     def _finalize(self, uid: str, now: int) -> None:
         state = self._states.pop(uid)
@@ -745,6 +985,8 @@ class ContinuousEngine:
             self.pages.free_all(uid)
             if self._prefix is not None:
                 self._prefix.release(uid)
+            if self._content is not None:
+                self._content.release(uid)
         self.scheduler.release(uid)
         self.results[uid] = state.generated
         self.metrics.on_complete(uid, now, state.cursor.passes_executed)
@@ -869,7 +1111,9 @@ class ContinuousEngine:
             pages_u = btu[:, slot_of].reshape(kb * Sb)
             pool = scatter_all(pool, caches_c, pages_c, offs)
             pool = scatter_all(pool, caches_u, pages_u, offs)
-            return pool, tok0
+            # the pre-combine logits ride out so content-cache founders
+            # can deposit them as replayable payloads
+            return pool, tok0, l_c, l_u
 
         self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1))
         return self._jit[key]
@@ -1027,6 +1271,48 @@ class ContinuousEngine:
             self._jit[key] = jax.jit(fn, donate_argnums=self._donate(0))
         return self._jit[key]
 
+    def _gather_pages_fn(self, nb: int):
+        """Gather ``nb`` whole pages from every pool leaf (swap-out read).
+        Padding indices are in-range (0): the host store slices them off,
+        and a clamped read can never fault."""
+        key = ("hgather", nb)
+        if key not in self._jit:
+            def fn(pool, idx):
+                return jax.tree.map(
+                    lambda leaf: leaf[:, idx] if leaf.ndim == 5
+                    else leaf[idx], pool)
+            self._jit[key] = jax.jit(fn)
+        return self._jit[key]
+
+    def _scatter_pages_fn(self, nb: int):
+        """Scatter ``nb`` page rows into the pool (restore-from-host
+        write); padding rows address ``num_pages`` and drop."""
+        key = ("hscatter", nb)
+        if key not in self._jit:
+            def fn(pool, idx, rows):
+                def one(leaf, r):
+                    if leaf.ndim == 5:          # (layers, P, ps, K, hd)
+                        return leaf.at[:, idx].set(r, mode="drop")
+                    return leaf.at[idx].set(r, mode="drop")
+                return jax.tree.map(one, pool, rows)
+            self._jit[key] = jax.jit(fn, donate_argnums=self._donate(0))
+        return self._jit[key]
+
+    def _hit_sample_fn(self):
+        """Token-0 replay for a content-cache hit: Eq. 1 over the
+        founder's cached pre-combine logits with the hit request's own
+        scale/key/temperature. ``cfg_combine`` is elementwise and the
+        prefill samples through a per-row ``vmap``, so this unbatched
+        replay is bit-exact against what a fresh prefill would emit."""
+        key = ("hit_sample",)
+        if key not in self._jit:
+            def fn(l_u, l_c, scale, rkey, temp):
+                lg = cfg_combine(l_u, l_c, scale)
+                return _sample(lg[None], jax.random.fold_in(rkey, 0),
+                               temp)[0]
+            self._jit[key] = jax.jit(fn)
+        return self._jit[key]
+
     # -- pass-budget autotuning (roofline hook) ----------------------------
 
     def autotune_budget(self) -> dict:
@@ -1099,6 +1385,11 @@ class ContinuousEngine:
         self.pass_budget = budget
         self.scheduler.pass_budget = budget
         self.metrics.on_autotune(self.tick_count, budget)
+        if self._swap_min_auto and self._host is not None:
+            # restore-bytes vs recompute-passes break-even: checkpoints
+            # cheaper to recompute than to DMA back skip the host tier
+            self._swap_min = self._autotuner.swap_break_even_pages(
+                self.page_bytes, kv_dtype=self.kv_dtype)
         return self._autotuner.report(self.kv_dtype)
 
     # -- HBM accounting ----------------------------------------------------

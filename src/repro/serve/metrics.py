@@ -153,6 +153,16 @@ class ServeMetrics:
                                   # uncond denoiser passes selective
                                   # guidance elided (the paper's saving,
                                   # in pass units)
+    swap_outs: int = 0           # victim KV checkpoints copied to host tier
+    swap_ins: int = 0            # resumes restored from host (zero passes)
+    host_evictions: int = 0      # host checkpoints dropped (LRU pressure or
+                                 # the owning resume checkpoint expired)
+    prefix_hits: int = 0         # content-cache hits: cond prompt KV shared,
+                                 # prefill forward skipped (DESIGN.md §14)
+    prefix_misses: int = 0       # content-cache lookups that prefilled
+    recompute_passes_avoided: int = 0  # prefill passes the host tier and the
+                                       # content cache together elided (2 per
+                                       # swap_in, 2 per prefix_hit)
     wall_s: float = 0.0
     _ticks: int = 0
     _scheduled: int = 0          # sum of per-tick requests in flight
@@ -254,6 +264,41 @@ class ServeMetrics:
         """The roofline autotuner (re)derived the per-tick pass budget."""
         self.trace.emit("autotune", tick, budget=budget)
 
+    def on_swap_out(self, uid: str, tick: int, pages: int) -> None:
+        """A preemption victim's KV pages were copied to the host tier
+        (checkpointed for restore-by-copy instead of recompute)."""
+        self.swap_outs += 1
+        self.trace.emit("swap_out", tick, uid, pages=pages)
+
+    def on_swap_in(self, uid: str, tick: int, pages: int) -> None:
+        """A resume restored its KV from the host tier by copy — zero
+        denoiser passes, where the recompute path pays a 2-pass batched
+        forward over prompt + generated."""
+        self.swap_ins += 1
+        self.recompute_passes_avoided += 2
+        self.trace.emit("swap_in", tick, uid, pages=pages)
+
+    def on_host_evict(self, uid: str, tick: int, pages: int) -> None:
+        """A host-tier checkpoint was dropped — LRU pressure from a newer
+        swap-out, or its owning resume checkpoint expired. The uid (if it
+        ever resumes) falls back to the recompute path."""
+        self.host_evictions += 1
+        self.trace.emit("host_evict", tick, uid, pages=pages)
+
+    def on_prefix_hit(self, uid: str, tick: int, pages: int) -> None:
+        """Content-addressed prefix cache hit: cond prompt KV served from
+        the canonical copy and token 0 replayed from the founder's cached
+        logits — the admission skips its prefill forward entirely."""
+        self.prefix_hits += 1
+        self.recompute_passes_avoided += 2
+        self.trace.emit("prefix_hit", tick, uid, pages=pages)
+
+    def on_prefix_miss(self, uid: str, tick: int) -> None:
+        """Content-cache lookup missed (cold, evicted, colliding, or not
+        yet warm): the request prefills normally."""
+        self.prefix_misses += 1
+        self.trace.emit("prefix_miss", tick, uid)
+
     def on_preempt(self, uid: str, tick: float) -> None:
         """An in-flight request evicted back to the queue (pages freed,
         cursor/tokens checkpointed for exact resume). Opens a preemption
@@ -265,17 +310,22 @@ class ServeMetrics:
             tl.n_preempts += 1
         self.trace.emit("preempt", int(tick), uid)
 
-    def on_resume(self, uid: str, tick: float, *, full: int = 0) -> None:
+    def on_resume(self, uid: str, tick: float, *, full: int = 0,
+                  from_host: bool = False) -> None:
         """A preempted request re-admitted: its KV is rebuilt by one
-        forward over prompt + generated tokens (both streams run).
-        Closes the open preemption gap."""
+        forward over prompt + generated tokens (both streams run) — or,
+        with ``from_host``, restored from the host tier by copy, in which
+        case no prefill passes are spent. Closes the open preemption
+        gap."""
         self.resumes += 1
-        self.prefill_passes += 2
+        if not from_host:
+            self.prefill_passes += 2
         tl = self.timelines.get(uid)
         if tl is not None and tl.preempted_at is not None:
             tl.gap_ticks += tick - tl.preempted_at
             tl.preempted_at = None
-        self.trace.emit("resume", int(tick), uid, full=int(full))
+        self.trace.emit("resume", int(tick), uid, full=int(full),
+                        from_host=int(from_host))
 
     def on_arrival(self, uid: str, tick: float) -> None:
         self.timelines[uid] = RequestTimeline(arrival=tick)
@@ -287,16 +337,20 @@ class ServeMetrics:
         self.trace.emit("reject", int(tick), uid)
 
     def on_admit(self, uid: str, tick: float, *, total_steps: int = 0,
-                 full_steps: int = 0) -> None:
+                 full_steps: int = 0, cached: bool = False) -> None:
+        """``cached`` marks a content-cache hit: the admission shared the
+        canonical cond prompt KV and replayed token 0 from cached logits,
+        so no prefill passes were spent."""
         tl = self.timelines[uid]
         tl.admitted = tick
         tl.total_steps = total_steps
         tl.full_steps = full_steps
-        self.prefill_passes += 2
+        if not cached:
+            self.prefill_passes += 2
         if tl.queue_wait is not None:
             self.hists["queue_wait"].record(tl.queue_wait)
         self.trace.emit("admit", int(tick), uid, total_steps=total_steps,
-                        full_steps=full_steps)
+                        full_steps=full_steps, cached=int(cached))
 
     def on_token(self, uid: str, tick: float, *, cond: bool = False) -> None:
         tl = self.timelines[uid]
@@ -421,6 +475,15 @@ class ServeMetrics:
             "cache_evictions": self.cache_evictions,
             "preemptions": self.preemptions,
             "resumes": self.resumes,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "host_evictions": self.host_evictions,
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+            "prefix_hit_rate": round(
+                self.prefix_hits / (self.prefix_hits + self.prefix_misses), 4)
+            if (self.prefix_hits + self.prefix_misses) else 0.0,
+            "recompute_passes_avoided": self.recompute_passes_avoided,
             "step_launches": self.step_launches,
             "step_compiles": self.step_compiles,
             "mean_ttft": self.mean_ttft(),

@@ -122,6 +122,20 @@ def to_chrome_trace(metrics, *, synthetic_tick_s: float = 1e-3) -> dict:
         elif ev.kind == "preempt":
             close(ev.uid, start_of(ev.tick))
             open_span[ev.uid] = ("preempted", start_of(ev.tick))
+        elif ev.kind == "swap_out":
+            # the victim's gap is a "swapped" span (KV parked on host),
+            # visually distinct from a plain recompute-bound "preempted"
+            close(ev.uid, start_of(ev.tick))
+            open_span[ev.uid] = ("swapped", start_of(ev.tick))
+        elif ev.kind == "host_evict":
+            # LRU pressure demoted the checkpoint: back to the recompute
+            # path (expiry-driven evicts find the span already closed)
+            if open_span.get(ev.uid, ("",))[0] == "swapped":
+                close(ev.uid, start_of(ev.tick), {"host_evicted": True})
+                open_span[ev.uid] = ("preempted", start_of(ev.tick))
+        elif ev.kind == "swap_in":
+            close(ev.uid, start_of(ev.tick),
+                  {"restored_pages": ev.get("pages")})
         elif ev.kind == "resume":
             close(ev.uid, start_of(ev.tick))
             mode = "FULL" if ev.get("full", 0) else "COND"
@@ -146,6 +160,11 @@ def to_chrome_trace(metrics, *, synthetic_tick_s: float = 1e-3) -> dict:
             "wall_s": summary.get("wall_s", 0.0),
             "passes_saved": summary.get("passes_saved", 0),
             "uncond_ticks_elided": summary.get("uncond_ticks_elided", 0),
+            "swap_outs": summary.get("swap_outs", 0),
+            "swap_ins": summary.get("swap_ins", 0),
+            "prefix_hits": summary.get("prefix_hits", 0),
+            "recompute_passes_avoided":
+                summary.get("recompute_passes_avoided", 0),
             "events_emitted": metrics.trace.emitted,
             "events_dropped": metrics.trace.dropped,
         },

@@ -46,6 +46,13 @@ EVENT_KINDS = (
     "expire",         # deadline passed while queued (uid)
     "step_launch",    # one decode-step dispatch hit the device
     "step_compile",   # decode step lowered + compiled (jit-cache miss)
+    "swap_out",       # victim's KV pages copied to the host tier (uid; pages)
+    "swap_in",        # resume restored KV from host — zero passes (uid; pages)
+    "host_evict",     # host-tier checkpoint dropped: LRU pressure or the
+                      # owning resume checkpoint expired (uid; pages)
+    "prefix_hit",     # cond prompt KV served from the content cache (uid;
+                      # pages) — admission skips the prefill forward
+    "prefix_miss",    # content-cache lookup missed; normal prefill (uid)
     "occupancy",      # page occupancy reached a new high-water mark (pages)
     "autotune",       # pass budget (re)derived from the roofline (budget)
     "tick",           # end-of-tick record (n_full, n_cond, budget, active,
@@ -138,6 +145,8 @@ FOLDED_COUNTERS = (
     "completed", "expired", "rejected", "pages_reclaimed", "pages_grown",
     "shared_page_hits", "cow_copies", "cache_evictions", "preemptions",
     "resumes", "step_launches", "step_compiles", "uncond_ticks_elided",
+    "swap_outs", "swap_ins", "host_evictions", "prefix_hits",
+    "prefix_misses", "recompute_passes_avoided",
 )
 
 
@@ -160,10 +169,15 @@ def fold_counters(events) -> dict:
             c["tokens_emitted"] += 1
             c["uncond_ticks_elided"] += ev.get("cond", 0)
         elif k == "admit":
-            c["prefill_passes"] += 2
+            # a content-cache hit admits with zero prefill passes — the
+            # cached-logits replay produces token 0 without a forward
+            if not ev.get("cached", 0):
+                c["prefill_passes"] += 2
         elif k == "resume":
             c["resumes"] += 1
-            c["prefill_passes"] += 2
+            # restore-from-host rebuilds KV by copy, not by recompute
+            if not ev.get("from_host", 0):
+                c["prefill_passes"] += 2
         elif k == "complete":
             c["completed"] += 1
         elif k == "expire":
@@ -186,5 +200,17 @@ def fold_counters(events) -> dict:
             c["step_launches"] += 1
         elif k == "step_compile":
             c["step_compiles"] += 1
+        elif k == "swap_out":
+            c["swap_outs"] += 1
+        elif k == "swap_in":
+            c["swap_ins"] += 1
+            c["recompute_passes_avoided"] += 2
+        elif k == "host_evict":
+            c["host_evictions"] += 1
+        elif k == "prefix_hit":
+            c["prefix_hits"] += 1
+            c["recompute_passes_avoided"] += 2
+        elif k == "prefix_miss":
+            c["prefix_misses"] += 1
         # arrival / phase / occupancy / autotune carry no counter
     return c

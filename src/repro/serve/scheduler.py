@@ -312,12 +312,17 @@ def provision_growth(plan: TickPlan, sched: Scheduler, pages, *,
     covering the write position:
 
     * position beyond the block table -> :meth:`PageAllocator.grow`;
-    * position lands in a shared page (uncond prompt prefix) ->
+    * position lands in a shared page (uncond prompt prefix, or a
+      content-cache cond prompt page — the procedure is stream-agnostic,
+      any refcount>1 page at the write index CoW-detaches) ->
       :meth:`PageAllocator.cow` + ``copy_page(src, dst)`` device copy;
     * pool dry -> first evict prefix-registry cache entries
       (``reclaim_cache()``: frees stranded canonical pages and un-shares
       pages whose CoW was the whole problem — cache eviction is free,
-      preemption loses work), then evict the weakest *strictly weaker*
+      preemption loses work; with the §14 tier the callback drains the
+      content-addressed prompt cache before the length-keyed uncond
+      registry, since content entries are pure speculation while uncond
+      shares are in active use), then evict the weakest *strictly weaker*
       in-flight request via ``preempt(uid)`` (which must free its pages)
       and retry; no such victim -> defer this entry (dropped from the
       plan, keeps its pages, ages toward the starvation guard).

@@ -22,9 +22,10 @@ from repro.core.selective import GuidancePlan, Mode, PlanCursor
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import ArrivalQueue, ServeRequest
 from repro.serve.scheduler import Scheduler, bucket_pow2, provision_growth
-from repro.serve.state import (PageAllocator, PrefixShareRegistry, StatePool,
-                               fresh_lazy_needs, pages_for, resume_lazy_needs,
-                               stream_page_needs)
+from repro.serve.state import (ContentPrefixRegistry, HostPagePool,
+                               PageAllocator, PrefixShareRegistry, StatePool,
+                               fresh_lazy_needs, pages_for, plan_swap_out,
+                               resume_lazy_needs, stream_page_needs)
 
 
 @dataclass(frozen=True)
@@ -36,6 +37,11 @@ class SimRequest:
     prompt_len: int = 8                # paged arena: mixed lengths share
                                        # one pool (slot sim ignores this)
     priority: int = 0                  # packs first, preempted last
+    content: str | None = None         # prompt-identity label: two requests
+                                       # with equal labels model identical
+                                       # token ids (the engine hashes real
+                                       # ids; the sim needs only equality).
+                                       # None = unique prompt
 
     @property
     def full_steps(self) -> int:
@@ -48,6 +54,9 @@ class SimReport:
     metrics: ServeMetrics
     completions: dict[str, int] = field(default_factory=dict)   # uid -> tick
     max_wait: int = 0        # worst ticks-between-schedules over all requests
+    pages: PageAllocator | None = None     # the replayed device allocator
+    host: HostPagePool | None = None       # host-tier bookkeeping, if any
+    content: ContentPrefixRegistry | None = None   # content cache, if any
 
     @property
     def makespan(self) -> int:
@@ -80,7 +89,9 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
              page_size: int = 4, num_pages: int | None = None,
              reservation: str = "eager", kv_dtype: str = "bf16",
              page_bytes: int | None = None, step_mode: str | None = None,
-             bucket: bool = True, on_tick=None) -> SimReport:
+             bucket: bool = True, host_pages: int = 0,
+             swap_min_pages: int = 0, prefix_cache: str = "length",
+             on_tick=None) -> SimReport:
     """Replay ``trace`` against a scheduler policy; returns a
     :class:`SimReport` whose metrics mirror the real engine's.
 
@@ -112,6 +123,17 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
     ragged mode charges exactly one compile ever — the simulated
     counters equal the real engine's on the same trace.
 
+    ``host_pages`` enables the two-tier bookkeeping (DESIGN.md §14): a
+    :class:`HostPagePool` (never attached — no storage) takes preemption
+    victims' pages per :func:`plan_swap_out` (``swap_min_pages`` is the
+    restore-vs-recompute floor) and resumes restore by copy, LRU evictees
+    falling back to the recompute path. ``prefix_cache="content"`` mirrors
+    the engine's content-addressed cond prompt cache using each request's
+    ``content`` label as the identity the engine derives by hashing token
+    ids. Both replay the engine's exact decision procedures, so
+    ``swap_outs``/``swap_ins``/``host_evictions``/``prefix_hits``/
+    ``prefix_misses`` — and the event streams — agree event for event.
+
     ``on_tick(tick, pages, sched, queue)``, when given, runs at the end
     of every simulated tick — the serve-invariant harness hooks
     :meth:`PageAllocator.check` here.
@@ -126,11 +148,19 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
         raise ValueError(step_mode)
     if step_mode == "ragged" and kv != "paged":
         raise ValueError('step_mode="ragged" requires kv="paged"')
+    if prefix_cache not in ("length", "content"):
+        raise ValueError(prefix_cache)
+    if prefix_cache == "content" and reservation != "lazy":
+        raise ValueError('prefix_cache="content" requires reservation="lazy"')
+    if host_pages and reservation != "lazy":
+        raise ValueError("host_pages requires reservation=\"lazy\"")
     trace = sorted(trace, key=lambda r: (r.arrival, r.uid))
     queue = ArrivalQueue(max_depth=queue_depth)
     pool = StatePool(num_slots)
     pages: PageAllocator | None = None
     prefix: PrefixShareRegistry | None = None
+    content: ContentPrefixRegistry | None = None
+    host: HostPagePool | None = None
     need_of: dict[str, tuple[int, int]] = {}
     if kv == "paged":
         cap = max((r.prompt_len + r.plan.total_steps for r in trace),
@@ -140,7 +170,11 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
         pages = PageAllocator(num_pages, page_size, kv_dtype=kv_dtype)
         if reservation == "lazy":
             prefix = PrefixShareRegistry(pages)
-        for r in trace:
+        if prefix_cache == "content":
+            content = ContentPrefixRegistry(pages)
+        if host_pages > 0:
+            host = HostPagePool(host_pages)      # bookkeeping only: the
+        for r in trace:                          # sim never attaches storage
             need_of[r.uid] = stream_page_needs(r.plan, r.prompt_len,
                                                page_size)
     sched = Scheduler(pass_budget, policy=policy,
@@ -148,7 +182,7 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
     metrics = ServeMetrics()
     if page_bytes is not None:
         metrics.page_bytes = page_bytes
-    report = SimReport(metrics)
+    report = SimReport(metrics, pages=pages, host=host, content=content)
     cursors: dict[str, PlanCursor] = {}
     sim_req: dict[str, SimRequest] = {r.uid: r for r in trace}
     req_of: dict[str, ServeRequest] = {}
@@ -165,15 +199,53 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             freed += prefix.release(uid)
         return freed
 
+    def ckey_of(uid: str):
+        # the engine hashes the prompt's token ids; two sim requests model
+        # identical prompts iff their content labels are equal (None =
+        # unique prompt, keyed by uid so it can publish but never hit)
+        if content is None:
+            return None
+        label = sim_req[uid].content
+        return label if label is not None else f"~{uid}"
+
+    def reclaim_cache() -> bool:
+        # content tier first, mirroring the engine's _reclaim_cache
+        if content is not None and content.evict_under_pressure():
+            return True
+        return prefix.evict_under_pressure()
+
+    def free_for_admission(n: int, uid: str) -> bool:
+        # blocked admission drains the *content* cache only (engine's
+        # _free_for_admission): persistent entries can fill an idle pool
+        # with nothing active to trigger provision_growth's reclaim, and
+        # the non-persistent length registry can never pin an idle pool
+        while pages.n_free < n:
+            if content is None or not content.evict_under_pressure():
+                return False
+            metrics.on_cache_evict(uid, tick)
+        return True
+
     def preempt(uid: str) -> None:
+        # event order is the engine's _preempt contract:
+        # preempt -> host_evict* (LRU victims) -> swap_out
         entry = sched._active[uid]
         resume[uid] = (cursors[uid].step, cursors[uid].passes_executed)
         pool.free(entry.slot)
+        metrics.on_preempt(uid, tick)
+        swap = plan_swap_out(pages, host, uid, min_pages=swap_min_pages)
+        if swap is not None:
+            put = host.put(uid, swap)
+            assert put is not None     # plan_swap_out checked capacity
+            _placed, evicted = put
+            for euid, n_freed in evicted:
+                metrics.on_host_evict(euid, tick, n_freed)
+            metrics.on_swap_out(uid, tick, sum(swap.values()))
         pages.free_all(uid)
         prefix.release(uid)
+        if content is not None:
+            content.release(uid)
         sched.release(uid)
         queue.requeue(req_of[uid])
-        metrics.on_preempt(uid, tick)
 
     def drained() -> bool:
         return (next_arrival >= len(trace) and len(queue) == 0
@@ -194,10 +266,15 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                 metrics.on_reject(sr.uid, tick)  # can never fit: don't
             elif not queue.push(req, tick):      # wedge the FCFS head
                 metrics.on_reject(sr.uid, tick)
-        # deadline expiry
+        # deadline expiry: a preempted request's host checkpoint dies with
+        # its resume checkpoint (the no-leak-at-drain contract)
         for dead in queue.expire(tick):
-            resume.pop(dead.uid, None)
+            had_ckpt = resume.pop(dead.uid, None) is not None
             metrics.on_expire(dead.uid, tick)
+            if had_ckpt and host is not None:
+                freed = host.drop(dead.uid)
+                if freed:
+                    metrics.on_host_evict(dead.uid, tick, freed)
         # admission
         quota = sched.admission_quota(pool.n_free)
         if prefills_per_tick is not None:
@@ -209,26 +286,42 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             uid = req.uid
             S = sim_req[uid].prompt_len
             resumed = False
+            from_host = 0              # pages restored from the host tier
+            hit_pages = 0              # cond pages shared on a content hit
+            miss = False               # content lookup ran and missed
             if pages is None:
                 queue.pop()
             elif reservation == "lazy" and uid in resume:
                 step, passes = resume[uid]
-                shared = prefix.lookup(S) is not None
-                need_c, need_u, wants_u, n_share = resume_lazy_needs(
-                    req.plan, step, S, page_size, shared=shared)
-                if pages.n_free < need_c + need_u:
-                    break              # head-of-line waits for pages
-                queue.pop()
-                del resume[uid]
-                pages.alloc(uid, "c", need_c)
-                if wants_u:
-                    if n_share:
-                        prefix.acquire(S, uid, count=n_share)
-                        metrics.on_share(uid, tick, n_share)
-                        if need_u:
-                            pages.grow(uid, "u", need_u)
-                    else:
-                        pages.alloc(uid, "u", need_u)
+                if host is not None and host.holds(uid):
+                    # restore by copy — the engine's zero-pass path
+                    held = host.pages_of(uid)
+                    total = sum(len(v) for v in held.values())
+                    if not free_for_admission(total, uid):
+                        break          # head-of-line waits for pages
+                    queue.pop()
+                    del resume[uid]
+                    for stream in sorted(held):
+                        pages.alloc(uid, stream, len(held[stream]))
+                    host.drop(uid)
+                    from_host = total
+                else:
+                    shared = prefix.lookup(S) is not None
+                    need_c, need_u, wants_u, n_share = resume_lazy_needs(
+                        req.plan, step, S, page_size, shared=shared)
+                    if not free_for_admission(need_c + need_u, uid):
+                        break          # head-of-line waits for pages
+                    queue.pop()
+                    del resume[uid]
+                    pages.alloc(uid, "c", need_c)
+                    if wants_u:
+                        if n_share:
+                            prefix.acquire(S, uid, count=n_share)
+                            metrics.on_share(uid, tick, n_share)
+                            if need_u:
+                                pages.grow(uid, "u", need_u)
+                        else:
+                            pages.alloc(uid, "u", need_u)
                 resumed = True
                 cursor = PlanCursor(req.plan, step=step,
                                     passes_executed=passes)
@@ -236,16 +329,33 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                 shared = prefix.lookup(S) is not None
                 need_c, need_u, wants_u = fresh_lazy_needs(
                     req.plan, S, page_size, shared=shared)
-                if pages.n_free < need_c + need_u:
-                    break              # head-of-line waits for pages
-                queue.pop()
-                pages.alloc(uid, "c", need_c)
-                if wants_u and shared:
-                    got = prefix.acquire(S, uid)
-                    metrics.on_share(uid, tick, len(got))
-                elif wants_u:
-                    pages.alloc(uid, "u", need_u)
-                    prefix.publish(S, uid)
+                ckey = ckey_of(uid)
+                if ckey is not None and content.ready(ckey, tick) \
+                        and content.matches(ckey, ckey) \
+                        and (not wants_u or shared):
+                    # content hit: share canonical cond prompt pages, no
+                    # fresh grant needed (the engine skips its prefill)
+                    queue.pop()
+                    got = content.acquire(ckey, uid)
+                    hit_pages = len(got)
+                    if wants_u:
+                        n_share = len(prefix.acquire(S, uid))
+                        metrics.on_share(uid, tick, n_share)
+                else:
+                    if not free_for_admission(need_c + need_u, uid):
+                        break          # head-of-line waits for pages
+                    queue.pop()
+                    pages.alloc(uid, "c", need_c)
+                    if wants_u and shared:
+                        got = prefix.acquire(S, uid)
+                        metrics.on_share(uid, tick, len(got))
+                    elif wants_u:
+                        pages.alloc(uid, "u", need_u)
+                        prefix.publish(S, uid)
+                    miss = ckey is not None
+                    if miss and content.lookup(ckey) is None:
+                        # founder: canonical entry, hittable next tick
+                        content.publish(ckey, uid, ids=ckey, tick=tick)
             else:
                 need_c, need_u = need_of[uid]
                 if pages.n_free < need_c + need_u:
@@ -262,14 +372,24 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             sched.admit(uid, slot, cursor, arrival=req.arrival,
                         deadline=req.deadline, priority=req.priority)
             last_scheduled[uid] = tick
+            # event order per admission mirrors the engine's queue-order
+            # bookkeeping: share -> hit/miss -> (swap_in ->) resume|admit
+            if hit_pages:
+                metrics.on_prefix_hit(uid, tick, hit_pages)
+            elif miss:
+                metrics.on_prefix_miss(uid, tick)
             if resumed:
+                if from_host:
+                    metrics.on_swap_in(uid, tick, from_host)
                 metrics.on_resume(uid, tick,       # KV rebuilt, no emit
-                                  full=int(cursor.mode is Mode.FULL))
+                                  full=int(cursor.mode is Mode.FULL),
+                                  from_host=bool(from_host))
             else:
                 plan_ = req.plan
                 metrics.on_admit(
                     uid, tick, total_steps=plan_.total_steps,
-                    full_steps=plan_.denoiser_passes() - plan_.total_steps)
+                    full_steps=plan_.denoiser_passes() - plan_.total_steps,
+                    cached=bool(hit_pages))
                 metrics.on_token(uid, tick)        # prefill emits token 0
         if pages is not None:
             metrics.note_pages(pages.n_in_use, tick)
@@ -281,7 +401,7 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                 pos_of=lambda uid: sim_req[uid].prompt_len
                 + cursors[uid].step,
                 metrics=metrics, preempt=preempt,
-                reclaim_cache=prefix.evict_under_pressure, now=tick)
+                reclaim_cache=reclaim_cache, now=tick)
             metrics.note_pages(pages.n_in_use, tick)
         if plan.in_flight:
             # mirror the engine's step dispatch: one launch per non-empty
@@ -314,6 +434,8 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                     pages.free_all(ev.uid)
                     if prefix is not None:
                         prefix.release(ev.uid)
+                    if content is not None:
+                        content.release(ev.uid)
                 sched.release(ev.uid)
                 metrics.on_complete(ev.uid, tick, cursor.passes_executed)
                 report.completions[ev.uid] = tick
@@ -321,6 +443,8 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                             budget=plan.budget, active=sched.n_active,
                             queue_depth=len(queue),
                             pages_in_use=pages.n_in_use if pages else 0)
+        if host is not None:
+            host.check()               # conservation, every simulated tick
         if on_tick is not None:
             on_tick(tick, pages, sched, queue)
         tick += 1

@@ -425,102 +425,126 @@ class PageAllocator:
             assert len(pages) == len(set(pages)), key
 
 
-class PrefixShareRegistry:
-    """Canonical uncond prompt-prefix pages, keyed by prompt length.
+class ShareRegistry:
+    """Canonical-page share registry, generalized over the key space.
 
-    The CFG null stream is the *same* null conditioning for every request
-    (``null_prompt`` zeroes the tokens), so two requests with equal prompt
-    length have bit-identical unconditional prompt KV — the prefix pages
-    the founder's prefill wrote can back every later request's uncond
-    block table via :meth:`PageAllocator.share`.
+    The machinery PR 4 built for length-keyed uncond prefix sharing —
+    a registry that itself holds a :meth:`PageAllocator.share` on the
+    canonical pages (owner uid ``~prefix``) so their content survives the
+    founder, with per-key user sets, pressure eviction and CoW-safe
+    un-sharing — is key-agnostic. This base class carries it; subclasses
+    fix three knobs:
 
-    The registry itself holds a share on the canonical pages (owner uid
-    ``~prefix``) so their content survives the founder completing; the
-    entry is dropped — and the registry's refs released — when the last
-    *user* (founder or sharer) stops referencing it, which is what keeps
-    the no-leak-at-drain invariant intact.
+    * ``STREAM`` — which per-uid stream canonical pages come from and are
+      shared back into (``"u"`` for the null stream, ``"c"`` for prompts);
+    * ``PERSISTENT`` — whether an entry survives its last user leaving
+      (a *true cache*, evicted only under pressure or explicitly) or dies
+      with it (PR 4's no-leak-at-drain contract);
+    * ``_eviction_order`` — deterministic pressure-eviction order, which
+      must be reproducible between the engine and the simulator.
     """
 
     OWNER = "~prefix"
+    STREAM = "u"
+    PERSISTENT = False
 
     def __init__(self, alloc: PageAllocator):
         self.alloc = alloc
-        self._users: dict[int, set[str]] = {}       # prompt_len -> uids
-        self._of_uid: dict[str, int] = {}
+        self._users: dict = {}          # key -> set of user uids
+        self._of_uid: dict[str, object] = {}
+        self._seq: dict = {}            # key -> publish order (monotonic)
+        self._next_seq = 0
         self.evictions = 0           # entries dropped under pool pressure
         self.evicted_pages = 0       # physical pages those drops returned
 
-    def lookup(self, prompt_len: int) -> list[int] | None:
-        """Canonical uncond prompt pages for this length, or None."""
-        if prompt_len not in self._users:
+    def _canon(self, key) -> str:
+        """The registry owner's stream name for ``key`` — distinct per
+        key so one ``OWNER`` uid can hold many canonical entries."""
+        return f"{self.STREAM}{key}"
+
+    def lookup(self, key) -> list[int] | None:
+        """Canonical pages for ``key``, or None."""
+        if key not in self._users:
             return None
-        return self.alloc.owned(self.OWNER, f"u{prompt_len}")
+        return self.alloc.owned(self.OWNER, self._canon(key))
 
-    def publish(self, prompt_len: int, uid: str) -> None:
-        """Make ``uid``'s freshly-prefilled uncond prompt pages the
-        canonical prefix for ``prompt_len`` (founder path)."""
-        if prompt_len in self._users:
-            raise ValueError(f"prefix for length {prompt_len} already "
-                             "published")
-        pages = self.alloc.owned(uid, "u")
-        self.alloc.share(self.OWNER, f"u{prompt_len}", pages)
-        self._users[prompt_len] = {uid}
-        self._of_uid[uid] = prompt_len
+    def publish(self, key, uid: str) -> None:
+        """Make ``uid``'s freshly-prefilled ``STREAM`` pages the canonical
+        entry for ``key`` (founder path)."""
+        if key in self._users:
+            raise ValueError(f"prefix for {key!r} already published")
+        pages = self.alloc.owned(uid, self.STREAM)
+        self.alloc.share(self.OWNER, self._canon(key), pages)
+        self._users[key] = {uid}
+        self._of_uid[uid] = key
+        self._seq[key] = self._next_seq
+        self._next_seq += 1
 
-    def acquire(self, prompt_len: int, uid: str, *,
+    def acquire(self, key, uid: str, *,
                 count: int | None = None) -> list[int] | None:
         """Share the first ``count`` canonical pages (default: all) into
-        ``(uid, "u")`` and register ``uid`` as a user; None on miss."""
-        pages = self.lookup(prompt_len)
+        ``(uid, STREAM)`` and register ``uid`` as a user; None on miss."""
+        pages = self.lookup(key)
         if pages is None:
             return None
         take = pages if count is None else pages[:count]
-        self.alloc.share(uid, "u", take)
-        self._users[prompt_len].add(uid)
-        self._of_uid[uid] = prompt_len
+        self.alloc.share(uid, self.STREAM, take)
+        self._users[key].add(uid)
+        self._of_uid[uid] = key
         return list(take)
 
     def release(self, uid: str) -> int:
-        """Drop ``uid``'s registry membership (idempotent); frees the
-        canonical pages once the last user leaves. Returns the physical
-        pages that freeing the canonical entry returned to the pool (0
-        while other users remain), so the COND-transition reclaim can
-        count them."""
-        prompt_len = self._of_uid.pop(uid, None)
-        if prompt_len is None:
+        """Drop ``uid``'s registry membership (idempotent). Non-persistent
+        entries free their canonical pages once the last user leaves;
+        persistent entries linger as cache. Returns the physical pages
+        that freeing the canonical entry returned to the pool (0 while
+        other users remain), so the COND-transition reclaim can count
+        them."""
+        key = self._of_uid.pop(uid, None)
+        if key is None:
             return 0
-        users = self._users[prompt_len]
+        users = self._users[key]
         users.discard(uid)
-        if users:
+        if users or self.PERSISTENT:
             return 0
-        del self._users[prompt_len]
-        return self.alloc.free(self.OWNER, f"u{prompt_len}")
+        del self._users[key]
+        self._seq.pop(key, None)
+        self._drop_payload(key)
+        return self.alloc.free(self.OWNER, self._canon(key))
 
-    def reclaimable(self, prompt_len: int) -> int:
+    def reclaimable(self, key) -> int:
         """Canonical pages held *only* by the registry (refcount 1) —
         physical pages an eviction would actually return. Nonzero once
         every user has CoW-detached or released a page the registry still
         pins (e.g. the partial prompt page after the founder diverges)."""
-        pages = self.lookup(prompt_len)
+        pages = self.lookup(key)
         if pages is None:
             return 0
         return sum(1 for p in pages if self.alloc.refcount(p) == 1)
 
-    def evict(self, prompt_len: int) -> int:
+    def evict(self, key) -> int:
         """Drop a canonical entry under pool pressure (the registry is a
         cache: losing it costs future sharing, never correctness — users
         keep their own shares). Returns physical pages freed."""
-        users = self._users.pop(prompt_len)
+        users = self._users.pop(key)
         for uid in users:
             del self._of_uid[uid]
-        return self.alloc.free(self.OWNER, f"u{prompt_len}")
+        self._seq.pop(key, None)
+        self._drop_payload(key)
+        return self.alloc.free(self.OWNER, self._canon(key))
+
+    def _drop_payload(self, key) -> None:
+        """Hook: subclasses drop any per-entry payload here."""
+
+    def _eviction_order(self) -> list:
+        return sorted(self._users)
 
     def evict_under_pressure(self) -> bool:
         """Evict one entry because the pool ran dry; False when the
         registry is already empty. Entries that pin registry-only pages
         go first (eviction returns physical pages), then any entry in
-        deterministic length order (eviction un-shares its pages, which
-        can dissolve the very CoW that needed the free page — a request
+        ``_eviction_order`` (eviction un-shares its pages, which can
+        dissolve the very CoW that needed the free page — a request
         whose worst-case span equals the whole pool must not wedge on its
         own published prefix). ``provision_growth`` exhausts this before
         resorting to preemption: dropping cache beats killing work.
@@ -529,16 +553,350 @@ class PrefixShareRegistry:
         ``evicted_pages``) — note a 0-page eviction still helps, by
         un-sharing the page whose CoW needed the grant, which is why the
         return type stays bool (did anything change), not pages-freed."""
-        for prompt_len in sorted(self._users):
-            if self.reclaimable(prompt_len):
+        for key in self._eviction_order():
+            if self.reclaimable(key):
                 self.evictions += 1
-                self.evicted_pages += self.evict(prompt_len)
+                self.evicted_pages += self.evict(key)
                 return True
-        for prompt_len in sorted(self._users):
+        for key in self._eviction_order():
             self.evictions += 1
-            self.evicted_pages += self.evict(prompt_len)
+            self.evicted_pages += self.evict(key)
             return True
         return False
+
+
+class PrefixShareRegistry(ShareRegistry):
+    """Canonical uncond prompt-prefix pages, keyed by prompt length.
+
+    The CFG null stream is the *same* null conditioning for every request
+    (``null_prompt`` zeroes the tokens), so two requests with equal prompt
+    length have bit-identical unconditional prompt KV — the prefix pages
+    the founder's prefill wrote can back every later request's uncond
+    block table via :meth:`PageAllocator.share`.
+
+    The entry is dropped — and the registry's refs released — when the
+    last *user* (founder or sharer) stops referencing it, which is what
+    keeps the no-leak-at-drain invariant intact. Pressure eviction walks
+    entries in deterministic length order. (Keys are prompt lengths and
+    ``_canon`` yields ``u<len>``, bit-compatible with the PR 4 layout.)
+    """
+
+    STREAM = "u"
+    PERSISTENT = False
+
+
+def content_key(ids) -> str:
+    """Content hash of a token-id sequence — the key the cond-stream
+    prefix cache dedupes identical prompts by (DESIGN.md §14).
+
+    sha1 over the little-endian int32 id bytes (length is implicit in the
+    byte count), truncated to 16 hex chars: collision-improbable for a
+    cache, and cheap to compare/sort. The registry still *verifies* the
+    stored ids on every hit, so even a manufactured collision degrades to
+    a miss, never to serving another prompt's KV.
+    """
+    import hashlib
+
+    arr = np.ascontiguousarray(np.asarray(ids, np.int32))
+    return hashlib.sha1(arr.tobytes()).hexdigest()[:16]
+
+
+class ContentPrefixRegistry(ShareRegistry):
+    """Content-addressed canonical *cond* prompt pages (DESIGN.md §14).
+
+    Extends the length-only uncond sharing to the conditional stream:
+    identical prompts (same token ids, keyed by :func:`content_key`) have
+    bit-identical cond prompt KV, so later arrivals share the founder's
+    prompt pages and skip their prefill forward entirely. Differences
+    from :class:`PrefixShareRegistry`:
+
+    * **persistent** — entries outlive their users (popular prompts
+      arrive staggered; a cache that dies with the founder never hits),
+      so canonical pages are only returned by pressure eviction or an
+      explicit :meth:`evict`/:meth:`drop_all`;
+    * **verified** — each entry stores the exact token ids; a lookup must
+      :meth:`matches` them, so hash collisions degrade to misses;
+    * **warm-up gated** — an entry is :meth:`ready` only strictly after
+      its publish tick: the founder's prefill runs later in the same
+      tick, and the model-free simulator must reproduce the engine's
+      hit/miss decisions without seeing device state;
+    * **payload** — the founder's last-position cond/uncond logits ride
+      along so a hit can replay token 0 bit-exactly with zero passes;
+    * pressure eviction walks **publish order** (oldest first), not key
+      order: hash keys sort differently between the engine (hex digests)
+      and the simulator (raw content labels), publish order is identical.
+    """
+
+    STREAM = "c"
+    PERSISTENT = True
+
+    def __init__(self, alloc: PageAllocator):
+        super().__init__(alloc)
+        self._ids: dict = {}        # key -> verified token ids
+        self._tick: dict = {}       # key -> publish tick (warm-up gate)
+        self._payload: dict = {}    # key -> founder logits (engine only)
+        self.hits = 0
+        self.misses = 0
+
+    def _canon(self, key) -> str:
+        return f"c@{key}"
+
+    @staticmethod
+    def _norm(ids):
+        if ids is None or isinstance(ids, (str, bytes)):
+            return ids
+        return tuple(int(t) for t in ids)
+
+    def publish(self, key, uid: str, *, ids=None, tick: int = 0) -> None:
+        super().publish(key, uid)
+        self._ids[key] = self._norm(ids)
+        self._tick[key] = int(tick)
+
+    def matches(self, key, ids) -> bool:
+        """True when the stored ids equal ``ids`` exactly — the collision
+        guard every hit must pass."""
+        want = self._ids.get(key)
+        return want is not None and want == self._norm(ids)
+
+    def ready(self, key, now: int) -> bool:
+        """Hittable: published strictly before ``now`` (founder's prefill
+        has run and its logits payload is installed)."""
+        return key in self._users and self._tick.get(key, 0) < int(now)
+
+    def set_payload(self, key, payload) -> None:
+        if key in self._users:
+            self._payload[key] = payload
+
+    def payload(self, key):
+        return self._payload.get(key)
+
+    def _drop_payload(self, key) -> None:
+        self._ids.pop(key, None)
+        self._tick.pop(key, None)
+        self._payload.pop(key, None)
+
+    def _eviction_order(self) -> list:
+        return sorted(self._users, key=self._seq.__getitem__)
+
+    def drop_all(self) -> int:
+        """Evict every entry (drain/teardown); returns pages freed."""
+        return sum(self.evict(key) for key in self._eviction_order())
+
+
+# ---------------------------------------------------------------------------
+# Host tier: byte-budgeted page pool for swapped-out KV (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def host_pages_for_bytes(host_bytes: int, page_bytes: int) -> int:
+    """Host-tier pages a byte budget affords (0 disables the tier)."""
+    if page_bytes <= 0:
+        return 0
+    return max(0, int(host_bytes // page_bytes))
+
+
+class HostPagePool:
+    """Byte-budgeted host tier for preemption-victim KV pages.
+
+    Two halves, separable on purpose:
+
+    * **Bookkeeping** — a slot allocator over ``num_pages`` host pages
+      with per-``(uid, stream)`` ownership, whole-checkpoint LRU
+      eviction, and a :meth:`check` conservation audit mirroring
+      :meth:`PageAllocator.check`. This half is model-free, so the trace
+      simulator runs the *same* swap decisions as the engine without
+      allocating a byte.
+    * **Storage** (:meth:`attach` / :meth:`store` / :meth:`load`) — a
+      host-memory numpy arena mirroring the device pool's page/scale pair
+      layout (int8 values and their fp32 scales travel together, so the
+      one-refcount-per-pair invariant of DESIGN.md §11 holds across
+      tiers). On real accelerators these buffers would be pinned so
+      ``jax.device_put`` DMA-copies without staging; on CPU the copies
+      degenerate to memcpy, which is exactly what the bit-exactness
+      tests pin.
+
+    Unlike the device allocator there is no refcounting: a checkpoint's
+    host pages have exactly one owner (sharing is a device-tier concept),
+    and eviction is all-or-nothing per uid — a half-present checkpoint
+    could not be restored anyway.
+    """
+
+    def __init__(self, num_pages: int, *, page_bytes: int = 0):
+        if num_pages < 1:
+            raise ValueError(num_pages)
+        self.num_pages = num_pages
+        self.page_bytes = int(page_bytes)
+        self._free = list(range(num_pages - 1, -1, -1))
+        self._owned: dict[tuple[str, str], list[int]] = {}
+        self._lru: dict[str, int] = {}   # uid -> recency stamp
+        self._stamp = 0
+        self.arena = None
+        self.evictions = 0           # checkpoints LRU-evicted by put()
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_in_use(self) -> int:
+        return self.num_pages - self.n_free
+
+    @property
+    def bytes_in_use(self) -> int:
+        return self.n_in_use * self.page_bytes
+
+    def holds(self, uid: str) -> bool:
+        return uid in self._lru
+
+    def pages_of(self, uid: str) -> dict[str, list[int]]:
+        """``{stream: host slots}`` for a held checkpoint (stream-sorted)."""
+        return {s: list(v) for (u, s), v in sorted(self._owned.items())
+                if u == uid}
+
+    def lru_order(self) -> list[str]:
+        """Held uids, least-recently stored first (the eviction order)."""
+        return sorted(self._lru, key=self._lru.__getitem__)
+
+    # -- put / drop --------------------------------------------------------
+
+    def put(self, uid: str, needs: dict[str, int]):
+        """Reserve host slots for ``uid``'s streams, LRU-evicting whole
+        older checkpoints until the new one fits. Returns
+        ``(slots_by_stream, evicted)`` where ``evicted`` is
+        ``[(uid, pages_freed), ...]`` in eviction order, or None when the
+        checkpoint exceeds the tier outright (caller falls back to the
+        recompute path)."""
+        if uid in self._lru:
+            raise ValueError(f"uid {uid!r} already held")
+        total = sum(needs.values())
+        if total <= 0 or total > self.num_pages:
+            return None
+        evicted = []
+        while self.n_free < total:
+            victim = self.lru_order()[0]
+            evicted.append((victim, self.drop(victim)))
+            self.evictions += 1
+        placed = {}
+        for stream in sorted(needs):
+            n = needs[stream]
+            if n < 1:
+                raise ValueError((stream, n))
+            slots = [self._free.pop() for _ in range(n)]
+            self._owned[(uid, stream)] = slots
+            placed[stream] = list(slots)
+        self._lru[uid] = self._stamp
+        self._stamp += 1
+        return placed, evicted
+
+    def touch(self, uid: str) -> None:
+        """Refresh LRU recency (e.g. when a resume is deferred but the
+        checkpoint stays hot)."""
+        if uid in self._lru:
+            self._lru[uid] = self._stamp
+            self._stamp += 1
+
+    def drop(self, uid: str) -> int:
+        """Release a checkpoint's host pages (idempotent); returns pages
+        freed. Both the consume path (restore) and the eviction paths
+        (TTL expiry, LRU pressure) land here — a dropped checkpoint's
+        uid simply resumes through recompute."""
+        if uid not in self._lru:
+            return 0
+        del self._lru[uid]
+        freed = 0
+        for key in [k for k in self._owned if k[0] == uid]:
+            slots = self._owned.pop(key)
+            self._free.extend(slots)
+            freed += len(slots)
+        return freed
+
+    # -- audit -------------------------------------------------------------
+
+    def check(self) -> None:
+        """Conservation invariants, mirroring ``PageAllocator.check``:
+        free and owned slots partition the tier, nothing double-freed or
+        double-owned, every held uid owns at least one stream, and the
+        byte budget is never exceeded (structural: the partition bounds
+        ``n_in_use`` by ``num_pages``)."""
+        owned = [s for v in self._owned.values() for s in v]
+        assert len(self._free) == len(set(self._free)), "double-freed slot"
+        assert len(owned) == len(set(owned)), "double-owned slot"
+        assert sorted(self._free + owned) == list(range(self.num_pages))
+        assert {u for u, _ in self._owned} == set(self._lru)
+        assert 0 <= self.n_in_use <= self.num_pages
+
+    # -- storage (engine-side; the simulator never attaches) ---------------
+
+    def attach(self, template) -> None:
+        """Allocate the host arena mirroring ``template`` (the device
+        pool pytree), with each leaf's pages axis resized to the host
+        tier's. Layer-stacked leaves carry pages on axis 1, per-layer
+        leaves (values and int8 scales alike) on axis 0 — the same rule
+        the engine's page-copy kernel uses."""
+        import jax
+
+        def mirror(leaf):
+            shape = list(leaf.shape)
+            shape[1 if leaf.ndim == 5 else 0] = self.num_pages
+            return np.zeros(tuple(shape), dtype=leaf.dtype)
+
+        self.arena = jax.tree.map(mirror, template)
+
+    def store(self, slots: list[int], rows) -> None:
+        """Write gathered page rows into host slots. ``rows`` leaves may
+        be padded past ``len(slots)`` along the pages axis (gathers run
+        at pow2-bucketed widths); the excess is ignored."""
+        import jax
+
+        idx = np.asarray(slots, np.int32)
+
+        def put_leaf(dst, src):
+            src = np.asarray(src)
+            if dst.ndim == 5:
+                dst[:, idx] = src[:, :len(idx)]
+            else:
+                dst[idx] = src[:len(idx)]
+
+        jax.tree.map(put_leaf, self.arena, rows)
+
+    def load(self, slots: list[int]):
+        """Read host slots back as a page-rows pytree (numpy; the caller
+        ``jax.device_put``s and scatters into fresh device pages)."""
+        import jax
+
+        idx = np.asarray(slots, np.int32)
+
+        def get_leaf(src):
+            return src[:, idx] if src.ndim == 5 else src[idx]
+
+        return jax.tree.map(get_leaf, self.arena)
+
+
+def plan_swap_out(pages: PageAllocator, host: HostPagePool | None, uid: str,
+                  *, min_pages: int = 0) -> dict[str, int] | None:
+    """Decide whether a preemption victim's KV swaps to the host tier.
+
+    Returns ``{stream: n_pages}`` needs (the exact per-stream page counts
+    a later restore must re-grant) or None for the recompute path: no
+    host tier, nothing resident, a suffix shorter than ``min_pages``
+    (the autotuner's restore-vs-recompute break-even, DESIGN.md §14), or
+    a checkpoint larger than the whole tier. The single definition shared
+    by the engine and the simulator — like ``provision_growth`` — so
+    their swap counters agree tick for tick.
+    """
+    if host is None:
+        return None
+    needs = {}
+    for stream in ("c", "u"):
+        n = len(pages.owned(uid, stream))
+        if n:
+            needs[stream] = n
+    total = sum(needs.values())
+    if total == 0 or total < min_pages or total > host.num_pages:
+        return None
+    return needs
 
 
 # ---------------------------------------------------------------------------

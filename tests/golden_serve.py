@@ -62,6 +62,15 @@ CONFIGS = {
     # AND the extra-headroom schedule can't drift silently
     "paged_int8": {"kv": "paged", "reservation": "lazy", "num_pages": 22,
                    "kv_dtype": "int8"},
+    # paged_lazy's exact device pool plus the §14 two-tier hierarchy: a
+    # 4-page host tier (deliberately under peak swap demand so LRU
+    # pressure and the recompute fallback both fire) and the
+    # content-addressed prompt cache over the trace's 3-way content
+    # cycle. Pins nonzero swap_outs/swap_ins/host_evictions/prefix_hits
+    # and — via the shared "tokens" key — token-count identity with
+    # paged_lazy at equal device pool bytes.
+    "paged_tiered": {"kv": "paged", "reservation": "lazy", "num_pages": 14,
+                     "host_pages": 4, "prefix_cache": "content"},
 }
 
 SUMMARY_KEYS = (
@@ -69,6 +78,8 @@ SUMMARY_KEYS = (
     "pages_reclaimed", "peak_pages_in_use", "page_bytes",
     "peak_bytes_in_use", "pages_grown",
     "shared_page_hits", "cow_copies", "preemptions", "resumes",
+    "swap_outs", "swap_ins", "host_evictions", "prefix_hits",
+    "prefix_misses", "recompute_passes_avoided",
 )
 
 
@@ -81,9 +92,14 @@ def build_trace(spec=None):
     plan = GuidancePlan.suffix(spec["total_steps"], spec["fraction"],
                                spec["guidance_scale"])
     lens, prios = spec["prompt_lens"], spec["priorities"]
+    # content labels cycle with the prompt lengths (same modulus), so a
+    # shared label always implies an identical prompt — only the
+    # paged_tiered config reads them (prefix_cache="content"); the
+    # legacy configs ignore the field entirely
     return [SimRequest(f"g{i:02d}", int(t), plan,
                        prompt_len=lens[i % len(lens)],
-                       priority=prios[i % len(prios)])
+                       priority=prios[i % len(prios)],
+                       content=f"c{i % len(lens)}")
             for i, t in enumerate(arrivals)]
 
 
@@ -101,7 +117,9 @@ def run_config(trace, name, params=None, spec=None):
                   kv_dtype=kv_dtype,
                   page_bytes=page_nbytes(page_size, spec["kv_heads"],
                                          spec["head_dim"], spec["n_layers"],
-                                         kv_dtype))
+                                         kv_dtype),
+                  host_pages=cfg.get("host_pages", 0),
+                  prefix_cache=cfg.get("prefix_cache", "length"))
     rep = simulate(trace, **kw)
     records = [[r.tick, r.n_full, r.n_cond, r.active, r.queue_depth,
                 r.pages_in_use, r.bytes_in_use] for r in rep.metrics.records]

@@ -231,13 +231,16 @@ def golden():
 
 
 @pytest.mark.parametrize("config",
-                         ["slot", "paged_eager", "paged_lazy", "paged_int8"])
+                         ["slot", "paged_eager", "paged_lazy", "paged_int8",
+                          "paged_tiered"])
 def test_golden_trace_replay(golden, config):
     """The checked-in per-tick metrics replay exactly: any packing,
     paging, sharing or preemption policy drift fails here first — the
     ``paged_int8`` config additionally pins the dtype-aware per-tick
-    page *and byte* counters at equal pool bytes to ``paged_lazy``.
-    Regenerate (intentionally) with: PYTHONPATH=src python
+    page *and byte* counters at equal pool bytes to ``paged_lazy``, and
+    ``paged_tiered`` pins the §14 swap/hit/evict counters (and, via the
+    shared token count, output identity) on paged_lazy's exact device
+    pool. Regenerate (intentionally) with: PYTHONPATH=src python
     tests/golden_serve.py"""
     trace = golden_serve.build_trace(golden["spec"])
     got = golden_serve.run_config(trace, config, golden["params"],

@@ -1,0 +1,601 @@
+"""Tiered KV memory suite (DESIGN.md §14), marker ``tier``.
+
+Four layers:
+
+* **host-pool properties** — hypothesis-driven model checks of the
+  :class:`HostPagePool` slot allocator (free/owned partition, byte
+  budget never exceeded, whole-checkpoint LRU eviction order, idempotent
+  drop) and bit-exact storage roundtrips for bf16 and int8 value+scale
+  pools; :func:`plan_swap_out` decision pins.
+* **content-cache contracts** — :func:`content_key` determinism, the
+  collision guard (manufactured key collisions degrade to misses, never
+  to serving another prompt's KV), the warm-up gate, persistence past
+  the founder, and publish-order pressure eviction.
+* **random-trace invariants** — contended simulator traces with both
+  tiers on: device/host conservation audits every tick, no leak at
+  drain (host empty, device holding only canonical cache), fold parity
+  of the six tier counters, TTL expiry dropping host checkpoints
+  (satellite fix), LRU eviction falling back to recompute, and the
+  admission-time cache-reclaim livelock regression.
+* **exactness pins against the real (smoke) model** — a swap/restore
+  resume is token-identical to an unpreempted solo run (bf16 and int8),
+  a content-cache hit is token-identical to a cold solo run, and the
+  engine and simulator agree on the tier counters and the full event
+  stream.
+
+Plus the ``swap_break_even_pages`` cost-model properties backing
+``swap_min_pages="auto"``.
+"""
+
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke_config
+from repro.core.selective import GuidancePlan
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serve import (BudgetAutotuner, ContentPrefixRegistry,
+                         ContinuousEngine, HostPagePool, PageAllocator,
+                         ServeRequest, SimRequest, content_key, fold_counters,
+                         host_pages_for_bytes, kv_page_bytes, plan_swap_out,
+                         simulate)
+from repro.serve.obs import FOLDED_COUNTERS
+
+pytestmark = pytest.mark.tier
+
+TIER_COUNTERS = ("swap_outs", "swap_ins", "host_evictions", "prefix_hits",
+                 "prefix_misses", "recompute_passes_avoided")
+
+
+# ---------------------------------------------------------------------------
+# HostPagePool bookkeeping properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=2, max_value=12),
+       st.lists(st.tuples(st.integers(min_value=0, max_value=5),
+                          st.integers(min_value=0, max_value=4),
+                          st.integers(min_value=0, max_value=3)),
+                max_size=30))
+def test_host_pool_conservation_lru_and_budget(num_pages, ops):
+    """Model-based: puts and drops against an ordered-dict oracle. The
+    free/owned slots always partition the tier (so the byte budget is
+    structurally never exceeded), ``put`` LRU-evicts whole checkpoints
+    oldest-first until the new one fits, oversize/empty checkpoints are
+    refused without evicting, and ``drop`` is idempotent."""
+    pool = HostPagePool(num_pages, page_bytes=64)
+    model = collections.OrderedDict()      # uid -> total pages (LRU order)
+    for uid_i, nc, nu in ops:
+        uid = f"u{uid_i}"
+        if uid in model:                   # held: exercise drop instead
+            assert pool.drop(uid) == model.pop(uid)
+            assert pool.drop(uid) == 0     # idempotent
+            pool.check()
+            continue
+        needs = {s: n for s, n in [("c", nc), ("u", nu)] if n}
+        total = sum(needs.values())
+        got = pool.put(uid, needs) if total else pool.put(uid, {})
+        if total == 0 or total > num_pages:
+            assert got is None             # refused, nothing evicted
+            assert pool.lru_order() == list(model)
+            continue
+        placed, evicted = got
+        expect = []
+        free = num_pages - sum(model.values())
+        while free < total:                # oracle: whole-checkpoint LRU
+            vic, n = next(iter(model.items()))
+            model.pop(vic)
+            expect.append((vic, n))
+            free += n
+        assert evicted == expect
+        assert sorted(placed) == sorted(needs)
+        assert all(len(placed[s]) == needs[s] for s in needs)
+        model[uid] = total
+        pool.check()
+        assert pool.n_in_use == sum(model.values())
+        assert pool.bytes_in_use <= num_pages * 64
+        assert pool.lru_order() == list(model)
+    pool.check()
+
+
+def test_host_pool_touch_refreshes_lru():
+    pool = HostPagePool(4)
+    pool.put("a", {"c": 2})
+    pool.put("b", {"c": 2})
+    pool.touch("a")                        # deferred resume keeps it hot
+    _, evicted = pool.put("c", {"c": 2})
+    assert evicted == [("b", 2)]           # b, not a, was least recent
+    assert pool.holds("a") and not pool.holds("b")
+
+
+def _roundtrip(template, n_dev_pages):
+    """Store rows for device pages [2,0,3] (padded to width 4) and load
+    them back; returns (stored_rows, loaded_rows)."""
+    pool = HostPagePool(6)
+    pool.attach(template)
+    placed, _ = pool.put("r", {"c": 3})
+    rng = np.random.default_rng(0)
+
+    def fill(leaf):
+        data = rng.normal(size=leaf.shape).astype(np.float32) * 3
+        return np.asarray(jnp.asarray(data).astype(leaf.dtype))
+
+    arena = jax.tree.map(fill, template)
+    idx = np.array([2, 0, 3, 0], np.int32)       # padded gather width 4
+
+    def gather(leaf):
+        return leaf[:, idx] if leaf.ndim == 5 else leaf[idx]
+
+    rows = jax.tree.map(gather, arena)
+    pool.store(placed["c"], rows)
+    loaded = pool.load(placed["c"])
+
+    def clip(leaf):
+        return leaf[:, :3] if leaf.ndim == 5 else leaf[:3]
+
+    return jax.tree.map(clip, rows), loaded
+
+
+def test_host_roundtrip_bitexact_bf16():
+    """store -> load is the identity on bf16 page rows (the DMA path the
+    restore exactness pin relies on), padding rows ignored."""
+    template = {"k": jnp.zeros((2, 5, 4, 2, 8), jnp.bfloat16),
+                "v": jnp.zeros((2, 5, 4, 2, 8), jnp.bfloat16)}
+    want, got = _roundtrip(template, 5)
+    for w, g in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        assert g.dtype == w.dtype
+        assert np.array_equal(np.asarray(w), np.asarray(g))
+
+
+def test_host_roundtrip_bitexact_int8_values_and_scales():
+    """int8 quantized values and their fp32 per-row scales travel as one
+    checkpoint (the §11 one-refcount-per-pair invariant across tiers) and
+    roundtrip bit-exactly — scales leaves carry pages on axis 0."""
+    template = {"k": jnp.zeros((2, 5, 4, 2, 8), jnp.int8),
+                "k_scale": jnp.zeros((5, 4, 2), jnp.float32),
+                "v": jnp.zeros((2, 5, 4, 2, 8), jnp.int8),
+                "v_scale": jnp.zeros((5, 4, 2), jnp.float32)}
+    want, got = _roundtrip(template, 5)
+    for w, g in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        assert g.dtype == w.dtype
+        assert np.array_equal(np.asarray(w), np.asarray(g))
+
+
+def test_plan_swap_out_decisions():
+    """The shared engine/sim decision procedure: per-stream needs for a
+    resident victim; None when there is no tier, nothing resident, the
+    suffix is under the break-even floor, or the checkpoint exceeds the
+    whole tier."""
+    pages = PageAllocator(16, 4)
+    host = HostPagePool(4)
+    pages.alloc("v", "c", 3)
+    pages.alloc("v", "u", 1)
+    assert plan_swap_out(pages, host, "v") == {"c": 3, "u": 1}
+    assert plan_swap_out(pages, None, "v") is None            # no tier
+    assert plan_swap_out(pages, host, "ghost") is None        # not resident
+    assert plan_swap_out(pages, host, "v", min_pages=5) is None   # floor
+    assert plan_swap_out(pages, host, "v", min_pages=4) == {"c": 3, "u": 1}
+    pages.alloc("big", "c", 5)
+    assert plan_swap_out(pages, HostPagePool(4), "big") is None   # oversize
+
+
+def test_host_pages_for_bytes():
+    assert host_pages_for_bytes(0, 1024) == 0
+    assert host_pages_for_bytes(4096, 1024) == 4
+    assert host_pages_for_bytes(1023, 1024) == 0
+    assert host_pages_for_bytes(4096, 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed prefix cache contracts
+# ---------------------------------------------------------------------------
+
+
+def test_content_key_deterministic_and_length_sensitive():
+    a = content_key([1, 2, 3])
+    assert a == content_key(np.array([1, 2, 3], np.int64))
+    assert a != content_key([1, 2, 4])
+    assert a != content_key([1, 2])
+    assert len(a) == 16 and int(a, 16) >= 0
+
+
+def test_content_registry_collision_degrades_to_miss():
+    """A manufactured key collision (same key, different ids) must fail
+    ``matches`` — the cache can only ever serve the exact prompt."""
+    pages = PageAllocator(8, 4)
+    reg = ContentPrefixRegistry(pages)
+    pages.alloc("f", "c", 2)
+    reg.publish("k", "f", ids=(1, 2, 3), tick=0)
+    assert reg.matches("k", (1, 2, 3))
+    assert not reg.matches("k", (1, 2, 4))     # collision -> miss
+    assert not reg.matches("k", (1, 2))
+    assert not reg.matches("other", (1, 2, 3))
+
+
+def test_content_registry_warmup_gate_and_persistence():
+    """An entry is hittable only strictly after its publish tick (the
+    founder's prefill runs later the same tick), and survives both the
+    founder's release and the founder's pages being freed."""
+    pages = PageAllocator(8, 4)
+    reg = ContentPrefixRegistry(pages)
+    pages.alloc("f", "c", 2)
+    reg.publish("k", "f", ids="k", tick=3)
+    assert not reg.ready("k", 3)               # same tick: not yet
+    assert reg.ready("k", 4)
+    reg.set_payload("k", ("lu", "lc"))
+    reg.release("f")                           # founder leaves: persistent
+    pages.free_all("f")
+    assert reg.lookup("k") is not None
+    assert reg.payload("k") == ("lu", "lc")
+    got = reg.acquire("k", "hit1")
+    assert len(got) == 2
+    reg.release("hit1")
+    pages.free_all("hit1")
+    assert reg.lookup("k") is not None         # still cache
+    assert reg.reclaimable("k") == 2           # registry-only pages
+    assert reg.evict_under_pressure()
+    pages.check()
+    assert pages.n_free == pages.num_pages     # canonical freed
+    assert not reg.evict_under_pressure()      # empty now
+
+
+def test_content_registry_evicts_in_publish_order():
+    """Pressure eviction must walk publish order, not key order: hex
+    digests (engine) and raw labels (sim) sort differently, publish
+    order is identical by construction."""
+    pages = PageAllocator(12, 4)
+    reg = ContentPrefixRegistry(pages)
+    for i, key in enumerate(["zz", "aa", "mm"]):   # reverse-sorted keys
+        uid = f"f{i}"
+        pages.alloc(uid, "c", 1)
+        reg.publish(key, uid, ids=key, tick=i)
+        reg.release(uid)
+        pages.free_all(uid)
+    order = []
+    while reg.evict_under_pressure():
+        order.append(set(reg._users))
+    assert order == [{"aa", "mm"}, {"mm"}, set()]  # zz, then aa, then mm
+    assert reg.drop_all() == 0
+
+
+# ---------------------------------------------------------------------------
+# Random-trace invariants (simulator, both tiers on)
+# ---------------------------------------------------------------------------
+
+
+def _tier_trace(items):
+    return [SimRequest(f"r{i:03d}", arrival,
+                       GuidancePlan.suffix(total, frac, 4.0),
+                       prompt_len=plen, priority=prio,
+                       content=None if lab == 3 else f"p{lab}")
+            for i, (arrival, total, frac, plen, prio, lab)
+            in enumerate(items)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=12),
+                          st.integers(min_value=1, max_value=8),
+                          st.floats(min_value=0.0, max_value=1.0),
+                          st.integers(min_value=1, max_value=8),
+                          st.integers(min_value=0, max_value=3),
+                          st.integers(min_value=0, max_value=3)),
+                min_size=1, max_size=14),
+       st.integers(min_value=10, max_value=24),
+       st.integers(min_value=2, max_value=10))
+def test_tiered_conservation_and_no_leak_at_drain(items, num_pages,
+                                                  host_pages):
+    """Every tick of every random two-tier trace: the device allocator
+    and the host pool both pass their conservation audits (the host
+    check runs inside ``simulate`` each tick); at drain the host tier is
+    empty (satellite fix: no stranded checkpoints), the device pool
+    holds only the persistent canonical content cache, and dropping that
+    cache returns every last page. The six tier counters equal the fold
+    of the event stream, and every swap-in consumed a prior swap-out."""
+    trace = _tier_trace(items)
+    worst = max(p + t for _, t, _, p, _, _ in items)
+    num_pages = max(num_pages, 2 * -(-worst // 4))    # admissible solo
+    rep = simulate(trace, num_slots=4, pass_budget=5, kv="paged",
+                   page_size=4, num_pages=num_pages, reservation="lazy",
+                   host_pages=host_pages, prefix_cache="content",
+                   on_tick=lambda t, p, s, q: p.check())
+    m = rep.metrics
+    assert m.completed == len(trace)
+    assert rep.host.n_in_use == 0                     # host tier drained
+    rep.host.check()
+    assert m.resumes == m.preemptions
+    assert m.swap_ins <= m.swap_outs
+    assert m.swap_outs <= m.preemptions
+    canon = rep.pages.num_pages - rep.pages.n_free
+    freed = rep.content.drop_all()
+    assert freed == canon                             # only cache remained
+    rep.pages.check()
+    assert rep.pages.n_free == rep.pages.num_pages
+    assert m.trace.dropped == 0
+    fold = fold_counters(m.trace)
+    for key in FOLDED_COUNTERS:
+        assert fold[key] == getattr(m, key), key
+    # conservation across swap/restore: declared work still runs once
+    assert m.tokens_emitted == sum(r.plan.total_steps for r in trace)
+
+
+def test_ttl_expiry_drops_host_checkpoint():
+    """Satellite fix: a preempted-and-swapped request whose deadline
+    passes while queued must release its host pages with its resume
+    checkpoint — counted as a host eviction, leaving the tier empty."""
+    plan = GuidancePlan.suffix(8, 0.5, 4.0)
+    trace = [SimRequest("victim", 0, plan, ttl=3.0, prompt_len=4),
+             SimRequest("strong", 2, plan, prompt_len=4, priority=5)]
+    rep = simulate(trace, num_slots=2, pass_budget=4, kv="paged",
+                   page_size=4, num_pages=6, reservation="lazy",
+                   host_pages=8,
+                   on_tick=lambda t, p, s, q: p.check())
+    m = rep.metrics
+    assert m.preemptions >= 1 and m.swap_outs >= 1
+    assert m.expired == 1 and m.completed == 1
+    assert m.swap_ins == 0                 # victim never came back
+    assert m.host_evictions >= 1           # its checkpoint died with it
+    assert rep.host.n_in_use == 0
+    assert m.records[-1].pages_in_use == 0
+
+
+def test_lru_eviction_falls_back_to_recompute():
+    """A host tier smaller than two checkpoints: a strong arrival evicts
+    two weak victims in succession, the second swap-out LRU-evicts the
+    first's checkpoint, and its owner must still complete — through the
+    recompute resume path (swap_ins < resumes, host eviction counted)."""
+    plan = GuidancePlan.suffix(6, 0.5, 4.0)
+    trace = [SimRequest(f"w{i}", 0, plan, prompt_len=8, priority=i)
+             for i in range(3)]
+    trace.append(SimRequest("strong", 2, GuidancePlan.suffix(10, 0.5, 4.0),
+                            prompt_len=8, priority=10))
+    rep = simulate(trace, num_slots=4, pass_budget=4, kv="paged",
+                   page_size=4, num_pages=12, reservation="lazy",
+                   host_pages=4,          # one checkpoint, not two
+                   on_tick=lambda t, p, s, q: p.check())
+    m = rep.metrics
+    assert m.completed == 4
+    assert m.swap_outs >= 2
+    assert m.host_evictions >= 1          # LRU pressure demoted one
+    assert m.swap_ins < m.resumes         # someone recomputed
+    assert m.resumes == m.preemptions
+    assert rep.host.n_in_use == 0
+
+
+def test_swap_min_pages_floor_disables_small_swaps():
+    """``swap_min_pages`` above every checkpoint size means the tier is
+    never used — identical schedule, zero swap traffic."""
+    plan = GuidancePlan.suffix(6, 0.5, 4.0)
+    trace = [SimRequest("weak", 0, plan, prompt_len=8),
+             SimRequest("strong", 2, plan, prompt_len=8, priority=5)]
+    kw = dict(num_slots=2, pass_budget=4, kv="paged", page_size=4,
+              num_pages=7, reservation="lazy", host_pages=8)
+    hot = simulate(trace, **kw).metrics
+    cold = simulate(trace, swap_min_pages=64, **kw).metrics
+    assert hot.preemptions >= 1 and hot.swap_outs >= 1
+    assert cold.preemptions >= 1 and cold.swap_outs == 0
+    assert cold.swap_ins == 0 and cold.recompute_passes_avoided == 0
+    assert cold.tokens_emitted == hot.tokens_emitted
+
+
+def test_admission_reclaims_idle_content_cache():
+    """Livelock regression: a persistent canonical entry pinning most of
+    an idle pool must be evicted *at admission* — nothing is active, so
+    ``provision_growth``'s reclaim path never runs."""
+    trace = [SimRequest("A", 0, GuidancePlan.suffix(2, 1.0, 4.0),
+                        prompt_len=12),
+             SimRequest("B", 8, GuidancePlan.suffix(2, 0.5, 4.0),
+                        prompt_len=4)]
+    rep = simulate(trace, num_slots=2, pass_budget=4, kv="paged",
+                   page_size=4, num_pages=4, reservation="lazy",
+                   prefix_cache="content", max_ticks=200)
+    m = rep.metrics
+    assert m.completed == 2
+    assert m.cache_evictions >= 1          # A's canonical entry made room
+
+
+def test_simulate_validates_tier_params():
+    t = [SimRequest("x", 0, GuidancePlan.suffix(2, 0.5, 4.0))]
+    with pytest.raises(ValueError):
+        simulate(t, num_slots=2, pass_budget=4, kv="paged", page_size=4,
+                 reservation="eager", prefix_cache="content")
+    with pytest.raises(ValueError):
+        simulate(t, num_slots=2, pass_budget=4, kv="paged", page_size=4,
+                 reservation="eager", host_pages=4)
+    with pytest.raises(ValueError):
+        simulate(t, num_slots=2, pass_budget=4, prefix_cache="bogus")
+
+
+# ---------------------------------------------------------------------------
+# swap_min_pages="auto" cost model
+# ---------------------------------------------------------------------------
+
+
+def test_swap_break_even_monotone_in_link_page_and_model():
+    """Restore-vs-recompute break-even: a faster host link lowers the
+    floor, fatter pages raise it, a slower model lowers it; when per-page
+    DMA alone exceeds per-page recompute the verdict is SWAP_NEVER; no
+    observations (or degenerate inputs) mean swap everything."""
+    def tuner(per_pass):
+        t = BudgetAutotuner(target_tick_s=1.0)
+        t.per_pass_s[(1, 0, "bf16")] = per_pass
+        return t
+
+    t = tuner(1e-3)
+    base = t.swap_break_even_pages(1 << 20)
+    assert base >= 1
+    assert t.swap_break_even_pages(1 << 20, host_gbps=16.0) <= base
+    assert t.swap_break_even_pages(1 << 22) >= base         # fatter pages
+    assert tuner(4e-3).swap_break_even_pages(1 << 20) <= base
+    slow_link = t.swap_break_even_pages(1 << 20, host_gbps=1e-4)
+    assert slow_link == BudgetAutotuner.SWAP_NEVER
+    assert BudgetAutotuner(target_tick_s=1.0).swap_break_even_pages(
+        1 << 20) == 0                                       # no observation
+    assert t.swap_break_even_pages(0) == 0
+    # dtype scoping: an int8-only tuner prices an int8 pool, and a bf16
+    # observation never prices it
+    ti = BudgetAutotuner(target_tick_s=1.0)
+    ti.per_pass_s[(1, 0, "bf16")] = 1e-3
+    assert ti.swap_break_even_pages(1 << 20, kv_dtype="int8") == 0
+
+
+# ---------------------------------------------------------------------------
+# Exactness pins against the real (smoke) model
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke_config("llama3.2-1b")
+    params = T.init_model(cfg, L.ArrayMaker(jax.random.PRNGKey(0)))
+    return cfg, params
+
+
+def _tier_engine(params, cfg, *, num_pages=None, host_pages=16,
+                 prefix_cache="length", kv_dtype="bf16", prefills=2,
+                 num_slots=4, budget=6):
+    page_bytes = kv_page_bytes(cfg, 4, kv_dtype)
+    return ContinuousEngine(params, cfg, num_slots=num_slots,
+                            pass_budget=budget, prompt_len=8, max_new=6,
+                            selective_fraction=0.5, stop_on_eos=False,
+                            kv="paged", page_size=4, num_pages=num_pages,
+                            prefills_per_tick=prefills, reservation="lazy",
+                            kv_dtype=kv_dtype,
+                            host_pool_bytes=host_pages * page_bytes,
+                            prefix_cache=prefix_cache)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_swap_restore_token_identical_to_solo(small_model, kv_dtype):
+    """Acceptance: the tight-pool preemption swaps the victim's pages to
+    host; its restored generation is token-identical to an unpreempted
+    solo run — for bf16 pages and for int8 value+scale pairs — with the
+    swap actually exercised (swap_outs/swap_ins nonzero) and zero
+    prefill passes paid on the restore."""
+    cfg, params = small_model
+    plan = GuidancePlan.suffix(6, 0.5, 4.0)
+    mk = lambda: [ServeRequest(uid="weak", prompt="weak request",
+                               max_new_tokens=6, plan=plan, priority=0),
+                  ServeRequest(uid="strong", prompt="strong request",
+                               max_new_tokens=6, plan=plan, priority=5)]
+    eng = _tier_engine(params, cfg, num_pages=7, kv_dtype=kv_dtype)
+    out = eng.serve_trace(mk(), [0, 2])
+    m = eng.metrics
+    assert m.preemptions >= 1
+    assert m.swap_outs >= 1 and m.swap_ins >= 1
+    assert m.swap_ins == m.resumes             # every resume restored
+    assert m.recompute_passes_avoided == 2 * m.swap_ins
+    for uid, prompt in [("weak", "weak request"),
+                        ("strong", "strong request")]:
+        solo = _tier_engine(params, cfg, kv_dtype=kv_dtype)
+        ref = solo.serve([ServeRequest(uid=uid, prompt=prompt,
+                                       max_new_tokens=6, plan=plan)])
+        assert out[uid] == ref[uid], uid
+    eng.pages.check()
+    assert eng.pages.n_free == eng.pages.num_pages
+    assert eng._host.n_in_use == 0
+
+
+def test_prefix_hit_token_identical_to_cold(small_model):
+    """Acceptance: repeat identical prompts admit through the content
+    cache (shared cond pages + replayed token 0) and generate exactly
+    what a cold solo run generates; distinct keys/temperatures stay
+    per-request via the unbatched replay."""
+    cfg, params = small_model
+    reqs = [ServeRequest(uid=f"h{i}", prompt="popular prompt",
+                         max_new_tokens=6) for i in range(3)]
+    eng = _tier_engine(params, cfg, prefix_cache="content", prefills=1,
+                       host_pages=0)
+    out = eng.serve_trace(reqs, [0, 1, 2])
+    m = eng.metrics
+    assert m.prefix_hits == 2 and m.prefix_misses == 1
+    assert m.recompute_passes_avoided == 4
+    for i in range(3):
+        solo = _tier_engine(params, cfg, prefix_cache="content",
+                            prefills=1, host_pages=0)
+        ref = solo.serve([ServeRequest(uid=f"h{i}", prompt="popular prompt",
+                                       max_new_tokens=6)])
+        assert out[f"h{i}"] == ref[f"h{i}"], f"h{i}"
+    eng.pages.check()
+    canon = eng.pages.num_pages - eng.pages.n_free
+    assert eng._content.drop_all() == canon    # only cache pages remain
+    assert eng.pages.n_free == eng.pages.num_pages
+
+
+def test_distinct_prompts_miss_and_verify(small_model):
+    """Different prompts (same length) must miss: the ids check rejects
+    serving one prompt's KV for another even at equal prompt_len."""
+    cfg, params = small_model
+    reqs = [ServeRequest(uid=f"d{i}", prompt=f"distinct prompt {i}",
+                         max_new_tokens=6) for i in range(3)]
+    eng = _tier_engine(params, cfg, prefix_cache="content", prefills=1,
+                       host_pages=0)
+    out = eng.serve_trace(reqs, [0, 1, 2])
+    assert len(out) == 3
+    assert eng.metrics.prefix_hits == 0
+    assert eng.metrics.prefix_misses == 3
+
+
+def test_engine_and_sim_tier_counters_and_events_match(small_model):
+    """Acceptance: on a contended popular-prompt trace with both tiers
+    on, the engine and the simulator agree on every tier counter *and*
+    on the full event-key stream (swap_out/swap_in/host_evict/
+    prefix_hit/prefix_miss included, in order)."""
+    cfg, params = small_model
+    plan = GuidancePlan.suffix(6, 0.5, 4.0)
+    picks = [0, 0, 1, 0, 2, 0]
+    arrivals = [2 * i for i in range(6)]
+    eng = _tier_engine(params, cfg, num_pages=10, host_pages=8,
+                       prefix_cache="content", prefills=1, num_slots=6,
+                       budget=12)
+    reqs = [ServeRequest(uid=f"r{i}", prompt=f"popular {picks[i]}",
+                         max_new_tokens=6, plan=plan, priority=i)
+            for i in range(6)]
+    eng.serve_trace(reqs, arrivals)
+    em = eng.metrics
+    assert em.preemptions > 0 and em.swap_outs > 0
+    assert em.prefix_hits > 0
+    trace = [SimRequest(f"r{i}", arrivals[i], plan, prompt_len=8,
+                        priority=i, content=f"p{picks[i]}")
+             for i in range(6)]
+    rep = simulate(trace, num_slots=6, pass_budget=12, kv="paged",
+                   page_size=4, num_pages=10, reservation="lazy",
+                   prefills_per_tick=1, host_pages=8,
+                   prefix_cache="content",
+                   on_tick=lambda t, p, s, q: p.check())
+    sm = rep.metrics
+    for key in TIER_COUNTERS + ("pages_grown", "preemptions", "resumes",
+                                "shared_page_hits", "cow_copies",
+                                "cache_evictions", "completed",
+                                "denoiser_passes", "prefill_passes"):
+        assert getattr(em, key) == getattr(sm, key), key
+    assert [ev.key() for ev in em.trace] == [ev.key() for ev in sm.trace]
+
+
+def test_engine_validates_tier_params(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError):
+        ContinuousEngine(params, cfg, num_slots=2, pass_budget=2,
+                         kv="paged", reservation="eager",
+                         prefix_cache="content")
+    with pytest.raises(ValueError):
+        ContinuousEngine(params, cfg, num_slots=2, pass_budget=2,
+                         kv="paged", reservation="eager",
+                         host_pool_bytes=1 << 20)
+    with pytest.raises(ValueError):                # under one page
+        ContinuousEngine(params, cfg, num_slots=2, pass_budget=2,
+                         kv="paged", reservation="lazy", host_pool_bytes=1)
+    with pytest.raises(ValueError):                # auto needs auto budget
+        ContinuousEngine(params, cfg, num_slots=2, pass_budget=4,
+                         kv="paged", reservation="lazy",
+                         host_pool_bytes=1 << 22, swap_min_pages="auto")
+    with pytest.raises(ValueError):
+        ContinuousEngine(params, cfg, num_slots=2, pass_budget=2,
+                         kv="paged", reservation="lazy",
+                         swap_min_pages=-1)
