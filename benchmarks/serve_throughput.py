@@ -54,9 +54,20 @@ strictly fewer total denoiser passes, and the offline simulator must
 reproduce the engine's swap/hit/evict counters exactly. ``--only-tier``
 runs just this part (the CI kv-tier smoke).
 
+Part 9 (``--policy divergence|interval``): dynamic guidance policies
+(DESIGN.md §15) vs the all-FULL baseline on the same trace. The
+``divergence`` policy drops the uncond stream mid-flight when the EMA'd
+cond/uncond divergence falls below ``--divergence-threshold``, emitting
+``policy_switch`` events and eliding uncond passes beyond the bound
+plan; ``--combine`` picks the FULL-step combine stage (Eq. 1, APG, or
+interval-gated Eq. 1). The recorded switch steps replayed through the
+offline simulator must reproduce the engine's event stream and the new
+``policy_switches`` / ``uncond_passes_elided_dynamic`` counters exactly.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput [--tiny] \
         [--kv paged] [--reservation lazy] [--kv-dtype int8] \
-        [--step auto|ragged|signature] [--trace-out trace.json]
+        [--step auto|ragged|signature] [--trace-out trace.json] \
+        [--policy static|divergence|interval] [--combine cfg|apg|interval]
 """
 
 from __future__ import annotations
@@ -113,7 +124,8 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
                           reservation: str = "eager",
                           kv_dtype: str = "bf16",
                           step: str = "auto",
-                          trace_out: str | None = None) -> dict:
+                          trace_out: str | None = None,
+                          combine: str = "cfg") -> dict:
     arrivals = poisson_arrivals(seed, n=n_req, rate=rate)
     budget = 2 * batch
 
@@ -128,7 +140,8 @@ def _continuous_vs_static(params, cfg, *, n_req: int, prompt_len: int,
                            selective_fraction=fraction, stop_on_eos=False,
                            kv=kv, page_size=page_size,
                            reservation=reservation, kv_dtype=kv_dtype,
-                           step_mode=None if step == "auto" else step)
+                           step_mode=None if step == "auto" else step,
+                           combine=combine)
     # arrivals are relative to the current tick, so the measured run
     # replays the same trace shape the warmup compiled for
     eng.serve_trace(make_reqs("w"), arrivals)     # warmup/compile
@@ -455,11 +468,95 @@ def _tiered_vs_lazy(params, cfg, *, batch: int,
             "tiered": st, "lazy": m_lazy.summary(), "sim_matches": True}
 
 
+def _dynamic_vs_full(params, cfg, *, n_req: int, prompt_len: int,
+                     max_new: int, batch: int, policy: str, combine: str,
+                     divergence_threshold: float,
+                     interval: tuple[float, float] = (0.0, 0.5),
+                     page_size: int = 4) -> dict:
+    """§15 acceptance: a dynamic guidance policy vs the FULL baseline on
+    the same trace.  The baseline runs every request all-FULL (fraction
+    0); the dynamic engine runs the same requests under ``--policy`` /
+    ``--combine``.  ``divergence`` must fire ``policy_switch`` events and
+    elide uncond passes (``uncond_passes_elided_dynamic > 0``, total
+    denoiser passes strictly below the baseline by exactly that amount);
+    ``interval`` realizes its bound plan structurally (fewer passes, no
+    switch events).  The recorded switch steps replayed through the
+    offline simulator must reproduce the dynamic engine's event stream —
+    ``policy_switch`` and both new counters included."""
+    arrivals = [i // 2 for i in range(n_req)]       # staggered, sorted
+    num_pages = n_req * pages_for(prompt_len + max_new, page_size) + 2
+
+    def engine(**kw):
+        eng = ContinuousEngine(params, cfg, num_slots=n_req,
+                               pass_budget=2 * batch, prompt_len=prompt_len,
+                               max_new=max_new, stop_on_eos=False,
+                               kv="paged", page_size=page_size,
+                               num_pages=num_pages, reservation="lazy",
+                               **kw)
+        reqs = [ServeRequest(uid=f"y{i}",
+                             prompt=PAPER_PROMPTS[i % len(PAPER_PROMPTS)],
+                             max_new_tokens=max_new, selective_fraction=0.0)
+                for i in range(n_req)]
+        out = eng.serve_trace(reqs, arrivals)
+        assert len(out) == n_req
+        return eng.metrics
+
+    m_full = engine()
+    m_dyn = engine(guidance_policy=policy, combine=combine,
+                   divergence_threshold=divergence_threshold,
+                   interval=interval)
+    s = m_dyn.summary()
+    emit("serve/dyn_policy", s["denoiser_passes"],
+         f"policy={policy};combine={combine};"
+         f"full_baseline={m_full.denoiser_passes};"
+         f"switches={s['policy_switches']};"
+         f"elided={s['uncond_passes_elided_dynamic']}")
+    assert m_dyn.denoiser_passes < m_full.denoiser_passes, \
+        f"dynamic must beat FULL: {m_dyn.denoiser_passes} vs " \
+        f"{m_full.denoiser_passes}"
+    if policy == "divergence":
+        assert s["policy_switches"] > 0, s
+        assert s["uncond_passes_elided_dynamic"] > 0, s
+        assert m_full.denoiser_passes - m_dyn.denoiser_passes \
+            == s["uncond_passes_elided_dynamic"], s
+
+    # replay the recorded switches through the model-free simulator
+    switches = {ev.uid: ev.get("step") for ev in m_dyn.trace
+                if ev.kind == "policy_switch"}
+    if policy == "interval":
+        from repro.core.policy import IntervalGuidancePolicy
+        plan = IntervalGuidancePolicy(max_new, interval[0], interval[1],
+                                      4.0).bound_plan()
+    else:
+        plan = GuidancePlan.suffix(max_new, 0.0, 4.0)
+    sim_m = simulate([SimRequest(f"y{i}", arrivals[i], plan,
+                                 prompt_len=prompt_len,
+                                 switch_step=switches.get(f"y{i}"))
+                      for i in range(n_req)],
+                     num_slots=n_req, pass_budget=2 * batch, kv="paged",
+                     page_size=page_size, num_pages=num_pages,
+                     reservation="lazy").metrics
+    assert m_dyn.trace.keys() == sim_m.trace.keys(), \
+        "sim must reproduce the dynamic engine's event stream"
+    for key in ("policy_switches", "uncond_passes_elided_dynamic",
+                "denoiser_passes", "pages_reclaimed"):
+        got, want = getattr(sim_m, key), getattr(m_dyn, key)
+        assert got == want, f"sim {key}={got} != engine {want}"
+    return {"policy": policy, "combine": combine,
+            "full_passes": m_full.denoiser_passes,
+            "dynamic_passes": m_dyn.denoiser_passes,
+            "policy_switches": s["policy_switches"],
+            "uncond_passes_elided_dynamic":
+                s["uncond_passes_elided_dynamic"],
+            "sim_matches": True}
+
+
 def run(tiny: bool = False, kv: str = "slot",
         reservation: str = "eager", kv_dtype: str = "bf16",
         step: str = "auto", trace_out: str | None = None,
         host_pool_bytes: int = 0, trace: str = "popular",
-        only_tier: bool = False) -> dict:
+        only_tier: bool = False, policy: str = "static",
+        combine: str = "cfg", divergence_threshold: float = 1e9) -> dict:
     if host_pool_bytes:
         reservation = "lazy"                        # only lazy preempts
     if step == "ragged":
@@ -493,7 +590,7 @@ def run(tiny: bool = False, kv: str = "slot",
                                     rate=4.0 if tiny else 1.5, kv=kv,
                                     reservation=reservation,
                                     kv_dtype=kv_dtype, step=step,
-                                    trace_out=trace_out)
+                                    trace_out=trace_out, combine=combine)
     out = {"rows": rows, "compare": compare}
     if kv == "paged":
         out["paged_mixed"] = _paged_mixed_lengths(
@@ -515,6 +612,11 @@ def run(tiny: bool = False, kv: str = "slot",
         out["tiered_vs_lazy"] = _tiered_vs_lazy(
             params, cfg, batch=batch, host_pool_bytes=host_pool_bytes,
             trace=trace)
+    if policy != "static":
+        out["dynamic_vs_full"] = _dynamic_vs_full(
+            params, cfg, n_req=n_req, prompt_len=prompt_len,
+            max_new=max_new, batch=batch, policy=policy, combine=combine,
+            divergence_threshold=divergence_threshold)
     return out
 
 
@@ -555,12 +657,29 @@ if __name__ == "__main__":
     ap.add_argument("--only-tier", action="store_true",
                     help="run just the tiered-vs-lazy part (the CI kv-tier "
                          "smoke; needs --host-pool-bytes)")
+    ap.add_argument("--policy", choices=["static", "divergence", "interval"],
+                    default="static",
+                    help="runtime guidance policy (DESIGN.md §15); non-"
+                         "static runs the dynamic-vs-FULL comparison with "
+                         "engine==sim replay of the recorded switches")
+    ap.add_argument("--combine", choices=["cfg", "apg", "interval"],
+                    default="cfg",
+                    help="FULL-step combine stage: Eq. 1, APG normalized "
+                         "guidance (arxiv 2410.02416), or interval-gated "
+                         "Eq. 1 (arxiv 2404.07724)")
+    ap.add_argument("--divergence-threshold", type=float, default=1e9,
+                    help="EMA cond/uncond divergence level below which the "
+                         "divergence policy drops the uncond stream (the "
+                         "huge default fires at the first observation — "
+                         "the aggressive CI smoke)")
     args = ap.parse_args()
     out = run(tiny=args.tiny, kv=args.kv, reservation=args.reservation,
               kv_dtype=args.kv_dtype, step=args.step,
               trace_out=args.trace_out,
               host_pool_bytes=args.host_pool_bytes, trace=args.trace,
-              only_tier=args.only_tier)
+              only_tier=args.only_tier, policy=args.policy,
+              combine=args.combine,
+              divergence_threshold=args.divergence_threshold)
     if "tiered_vs_lazy" in out:
         tv = out["tiered_vs_lazy"]
         st = tv["tiered"]
@@ -619,6 +738,14 @@ if __name__ == "__main__":
               f"lazy grown={lv['lazy']['pages_grown']} "
               f"preemptions={lv['lazy']['preemptions']} "
               f"(sim reproduces: {lv['sim_matches']})")
+    if "dynamic_vs_full" in out:
+        dv = out["dynamic_vs_full"]
+        print(f"dynamic policy={dv['policy']} combine={dv['combine']}: "
+              f"passes {dv['dynamic_passes']} vs FULL {dv['full_passes']}; "
+              f"switches={dv['policy_switches']} "
+              f"uncond_passes_elided_dynamic="
+              f"{dv['uncond_passes_elided_dynamic']} "
+              f"(sim reproduces: {dv['sim_matches']})")
     if "int8_vs_bf16" in out:
         q = out["int8_vs_bf16"]
         print(f"kv-dtype @ {q['pool_bytes']/2**20:.2f}MiB pool: "

@@ -1,3 +1,10 @@
-from repro.core.guidance import cfg_combine, merge_cond_uncond, split_cond_uncond
-from repro.core.selective import GuidancePlan, Mode, Segment, sweep
+from repro.core.guidance import (apg_combine, cfg_combine, merge_cond_uncond,
+                                 split_cond_uncond)
+from repro.core.policy import (GUIDANCE_POLICIES, DivergenceGuidancePolicy,
+                               DynamicPlanCursor, GuidancePolicy,
+                               IntervalGuidancePolicy, MomentumBuffer,
+                               ReplayGuidancePolicy, StaticGuidancePolicy,
+                               make_policy)
+from repro.core.selective import (GuidancePlan, Mode, Segment, round_half_up,
+                                  sweep)
 from repro.core.schedules import NoiseSchedule

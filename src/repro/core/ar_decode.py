@@ -24,8 +24,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.guidance import cfg_combine
-from repro.core.selective import GuidancePlan, Mode
+from repro.core.guidance import apg_combine, cfg_combine
+from repro.core.selective import GuidancePlan, Mode, round_half_up
 from repro.models import transformer as T
 
 
@@ -49,10 +49,12 @@ def null_prompt(tokens):
 
 
 def decode_step_full(params, cfg, token, caches_c, caches_u, pos, scale,
-                     *, rules=None, long_ctx=False):
+                     *, rules=None, long_ctx=False, combine_fn=None):
     """Baseline CFG decode step: two forwards + Eq. 1.
 
     token (B,) -> (logits_hat (B,V) fp32, caches_c', caches_u').
+    ``combine_fn(l_u, l_c)``, when given, replaces Eq. 1 (the alternate
+    ``apg``/``interval`` combine modes, DESIGN.md §15).
     """
     emb = T.embed_tokens(params, cfg, token[:, None])
     h_c, caches_c = T.decode_step(params, cfg, emb, caches_c, pos,
@@ -61,6 +63,8 @@ def decode_step_full(params, cfg, token, caches_c, caches_u, pos, scale,
                                   rules=rules, long_ctx=long_ctx)
     l_c = T.unembed(params, cfg, h_c)[:, 0, :].astype(jnp.float32)
     l_u = T.unembed(params, cfg, h_u)[:, 0, :].astype(jnp.float32)
+    if combine_fn is not None:
+        return combine_fn(l_u, l_c), caches_c, caches_u
     return cfg_combine(l_u, l_c, scale), caches_c, caches_u
 
 
@@ -76,13 +80,23 @@ def decode_step_cond(params, cfg, token, caches_c, pos, *, rules=None,
 
 def guided_decode(params, cfg, prompt_tokens, plan: GuidancePlan, *,
                   rng=None, temperature: float = 0.0, rules=None,
-                  long_ctx=False, capacity: int | None = None):
+                  long_ctx=False, capacity: int | None = None,
+                  combine: str = "cfg", apg_eta: float = 0.0,
+                  apg_threshold: float = 0.0,
+                  interval: tuple[float, float] | None = None):
     """End-to-end guided generation: prefill both streams, then execute the
     plan's segments as separate scans (phase-split).
 
     prompt_tokens (B,S); ``plan.total_steps`` = number of new tokens.
     Returns (generated (B, n_new) int32, final position).
+
+    ``combine`` selects the FULL-step combine stage (DESIGN.md §15):
+    Eq. 1 (``"cfg"``), APG normalized guidance (``"apg"``, arxiv
+    2410.02416), or Eq. 1 at scale 1.0 outside ``interval`` (fractions of
+    the plan; ``"interval"``, arxiv 2404.07724).
     """
+    if combine not in ("cfg", "apg", "interval"):
+        raise ValueError(f"unknown combine mode {combine!r}")
     plan.validate_for_ar()
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     B, S = prompt_tokens.shape
@@ -99,16 +113,33 @@ def guided_decode(params, cfg, prompt_tokens, plan: GuidancePlan, *,
     caches_u = T.prepare_decode_caches(cfg, caches_u, seq_len=S, capacity=cap,
                                        long_ctx=long_ctx)
 
-    logits0 = cfg_combine(logits_u, logits_c, plan.guidance_scale)
+    s = plan.guidance_scale
+    if combine == "interval":
+        iv = (0.0, 1.0) if interval is None else interval
+        a = round_half_up(n_new * iv[0])
+        b = round_half_up(n_new * iv[1])
+
+    def combine_logits(l_u, l_c, i):
+        sc = s if combine != "interval" \
+            else jnp.where((i >= a) & (i < b), s, 1.0)
+        if combine == "apg":
+            return apg_combine(l_u, l_c, sc, eta=apg_eta,
+                               threshold=apg_threshold)
+        return cfg_combine(l_u, l_c, sc)
+
+    logits0 = cfg_combine(logits_u, logits_c, s) if combine == "cfg" \
+        else combine_logits(logits_u, logits_c, 0)
     tok = _sample_token(logits0, jax.random.fold_in(rng, 0), temperature)
 
     outs = []
-    s = plan.guidance_scale
 
     def full_body(carry, i):
         tok, cc, cu = carry
-        logits, cc, cu = decode_step_full(params, cfg, tok, cc, cu, S + i, s,
-                                          rules=rules, long_ctx=long_ctx)
+        logits, cc, cu = decode_step_full(
+            params, cfg, tok, cc, cu, S + i, s, rules=rules,
+            long_ctx=long_ctx,
+            combine_fn=None if combine == "cfg"
+            else (lambda l_u, l_c: combine_logits(l_u, l_c, i)))
         nxt = _sample_token(logits, jax.random.fold_in(rng, 1 + i), temperature)
         return (nxt, cc, cu), tok
 

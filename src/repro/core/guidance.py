@@ -40,6 +40,27 @@ def _use_pallas() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def apg_combine(eps_uncond, eps_cond, scale, *, eta: float = 0.0,
+                threshold: float = 0.0, diff=None):
+    """APG normalized/projected guidance (arxiv 2410.02416) — the ``apg``
+    combine mode (DESIGN.md §15).
+
+    The cond/uncond difference (or ``diff``, an externally momentum-averaged
+    one) is norm-clamped to ``threshold`` and split against the conditional
+    prediction; only the orthogonal component guides at full strength,
+    ``eta`` attenuating the parallel (over-saturating) one.  Dispatches to
+    the fused Pallas kernel on TPU when every knob is static; the jnp
+    reference is the oracle and the XLA fallback.
+    """
+    if isinstance(scale, (int, float)) and diff is None and _use_pallas():
+        from repro.kernels.cfg_combine import apg_combine_pallas
+        return apg_combine_pallas(eps_uncond, eps_cond, float(scale),
+                                  eta=eta, threshold=threshold)
+    from repro.kernels.cfg_combine import apg_combine_ref
+    return apg_combine_ref(eps_uncond, eps_cond, scale, eta=eta,
+                           threshold=threshold, diff=diff)
+
+
 def split_cond_uncond(batched):
     """Inverse of the 2x-batch trick: (2B, ...) -> ((B,...) cond, (B,...) uncond).
 

@@ -68,8 +68,12 @@ class SDPipeline:
     # -- generation ---------------------------------------------------------
 
     def generate(self, prompts: list[str], plan: GuidancePlan, *, seed: int = 0,
-                 stepper: str = "ddim", eta: float = 0.0):
-        """-> latents (B, latent_size, latent_size, C) in [-1, 1]-ish."""
+                 stepper: str = "ddim", eta: float = 0.0, **combine_kw):
+        """-> latents (B, latent_size, latent_size, C) in [-1, 1]-ish.
+
+        ``combine_kw`` passes through to :func:`repro.core.sampler.sample`
+        (``combine=``, ``apg_eta=``, ``apg_threshold=``, ``apg_momentum=``,
+        ``interval=`` — the DESIGN.md §15 combine modes)."""
         B = len(prompts)
         rng = jax.random.PRNGKey(seed)
         cond = self.encode_prompts(prompts)
@@ -78,9 +82,11 @@ class SDPipeline:
                                (B, self.cfg.latent_size, self.cfg.latent_size,
                                 self.cfg.in_channels), jnp.float32)
         return sample(self.eps_fn(), plan, self.sched, x0, cond, uncond,
-                      stepper=stepper, eta=eta, rng=jax.random.fold_in(rng, 2))
+                      stepper=stepper, eta=eta, rng=jax.random.fold_in(rng, 2),
+                      **combine_kw)
 
-    def generate_jit(self, plan: GuidancePlan, *, stepper="ddim", eta=0.0):
+    def generate_jit(self, plan: GuidancePlan, *, stepper="ddim", eta=0.0,
+                     **combine_kw):
         """Returns a jitted (cond_emb, uncond_emb, x0, rng) -> latents fn —
         the measured object for the Table-1 latency benchmark."""
         eps = self.eps_fn()
@@ -89,7 +95,7 @@ class SDPipeline:
         @jax.jit
         def run(cond, uncond, x0, rng):
             return sample(eps, plan, sched, x0, cond, uncond,
-                          stepper=stepper, eta=eta, rng=rng)
+                          stepper=stepper, eta=eta, rng=rng, **combine_kw)
 
         return run
 

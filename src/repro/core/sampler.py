@@ -7,6 +7,13 @@ segments run 1x batch and use the conditional eps directly. Because the
 partition is static, cond-only segments carry exactly half the denoiser
 FLOPs in the lowered HLO.
 
+Alternate combine modes (DESIGN.md §15): ``combine="apg"`` replaces Eq. 1
+on FULL steps with APG normalized/projected guidance (arxiv 2410.02416),
+optionally momentum-averaging the cond/uncond difference across steps
+(the EMA rides in the scan carry); ``combine="interval"`` weakens the
+guidance scale to 1.0 for steps outside ``interval`` (fractions of the
+plan, arxiv 2404.07724) while the pass schedule stays the plan's.
+
 Steppers: DDIM (eta=0, the paper's 50-step setting), Euler
 (probability-flow ODE) and ancestral DDPM.
 """
@@ -19,9 +26,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.guidance import cfg_combine, merge_cond_uncond, split_cond_uncond
+from repro.core.guidance import (apg_combine, cfg_combine, merge_cond_uncond,
+                                 split_cond_uncond)
 from repro.core.schedules import NoiseSchedule
-from repro.core.selective import GuidancePlan, Mode
+from repro.core.selective import GuidancePlan, Mode, round_half_up
+
+COMBINE_MODES = ("cfg", "apg", "interval")
+
+
+def _segment_scale(plan: GuidancePlan, combine: str,
+                   interval: tuple[float, float] | None):
+    """Per-step combine scale: the plan's flat scale, except under
+    interval guidance where steps outside [start, stop) run at 1.0."""
+    s = plan.guidance_scale
+    if combine != "interval":
+        return lambda i: s
+    iv = (0.0, 1.0) if interval is None else interval
+    a = round_half_up(plan.total_steps * iv[0])
+    b = round_half_up(plan.total_steps * iv[1])
+    return lambda i: jnp.where((i >= a) & (i < b), s, 1.0)
 
 
 def _step_coeffs(sched: NoiseSchedule, num_steps: int):
@@ -79,8 +102,15 @@ def sample(
     stepper: str = "ddim",
     eta: float = 0.0,
     rng=None,
+    combine: str = "cfg",
+    apg_eta: float = 0.0,
+    apg_threshold: float = 0.0,
+    apg_momentum: float = 0.0,
+    interval: tuple[float, float] | None = None,
 ):
     """Run the guided denoising loop under ``plan``. Returns final latents."""
+    if combine not in COMBINE_MODES:
+        raise ValueError(f"combine {combine!r} not in {COMBINE_MODES}")
     T = plan.total_steps
     ts, ab_t, ab_prev = _step_coeffs(sched, T)
     B = x_init.shape[0]
@@ -89,7 +119,7 @@ def sample(
         raise ValueError("ddpm / eta>0 needs rng")
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     text2 = merge_cond_uncond(cond_emb, uncond_emb)
-    s = plan.guidance_scale
+    step_scale = _segment_scale(plan, combine, interval)
 
     def update(x, eps, i, key):
         noise = jax.random.normal(key, x.shape, jnp.float32) if stochastic else None
@@ -101,17 +131,49 @@ def sample(
             return ddpm_update(x, eps, ab_t[i], ab_prev[i], noise)
         raise ValueError(stepper)
 
+    def combine_eps(e_u, e_c, i, diff=None):
+        if combine == "apg":
+            return apg_combine(e_u, e_c, step_scale(i), eta=apg_eta,
+                               threshold=apg_threshold, diff=diff)
+        return cfg_combine(e_u, e_c, step_scale(i))
+
     def full_step(x, i):
         t2 = jnp.broadcast_to(ts[i], (2 * B,))
         eps2 = eps_fn(merge_cond_uncond(x, x), t2, text2)
         e_c, e_u = split_cond_uncond(eps2)
-        eps = cfg_combine(e_u, e_c, s)
+        eps = combine_eps(e_u, e_c, i)
         return update(x, eps, i, jax.random.fold_in(rng, i)), None
 
     def cond_step(x, i):
         t1 = jnp.broadcast_to(ts[i], (B,))
         eps = eps_fn(x, t1, cond_emb)
         return update(x, eps, i, jax.random.fold_in(rng, i)), None
+
+    if combine == "apg" and apg_momentum != 0.0:
+        # the MomentumBuffer EMA rides in the scan carry (one running
+        # average per latent element) and flows untouched through COND
+        # segments — the stream is dead there, not the memory of it
+        def full_step_m(carry, i):
+            x, avg = carry
+            t2 = jnp.broadcast_to(ts[i], (2 * B,))
+            eps2 = eps_fn(merge_cond_uncond(x, x), t2, text2)
+            e_c, e_u = split_cond_uncond(eps2)
+            diff = (e_c.astype(jnp.float32) - e_u.astype(jnp.float32))
+            avg = diff + apg_momentum * avg
+            eps = combine_eps(e_u, e_c, i, diff=avg)
+            return (update(x, eps, i, jax.random.fold_in(rng, i)), avg), None
+
+        def cond_step_m(carry, i):
+            x, avg = carry
+            x, _ = cond_step(x, i)
+            return (x, avg), None
+
+        carry = (x_init, jnp.zeros(x_init.shape, jnp.float32))
+        for seg in plan.segments:
+            body = full_step_m if seg.mode is Mode.FULL else cond_step_m
+            carry, _ = jax.lax.scan(body, carry,
+                                    jnp.arange(seg.start, seg.stop))
+        return carry[0]
 
     x = x_init
     for seg in plan.segments:

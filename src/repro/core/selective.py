@@ -21,9 +21,21 @@ skipped — enforced here).
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from enum import Enum
 from typing import Iterable
+
+
+def round_half_up(x: float) -> int:
+    """``floor(x + 0.5)``: plain half-up rounding for step boundaries.
+
+    Python's ``round()`` does banker's rounding (``round(2.5) == 2`` but
+    ``round(3.5) == 4``), which makes ``optimized_steps`` jump unevenly
+    across a Table-1 fraction sweep.  Half-up keeps the boundary monotone
+    in the fraction.
+    """
+    return math.floor(x + 0.5)
 
 
 class Mode(str, Enum):
@@ -72,7 +84,7 @@ class GuidancePlan:
         """The paper's policy: optimize the last ``fraction`` of iterations."""
         if not 0.0 <= fraction <= 1.0:
             raise ValueError(fraction)
-        n_opt = round(total_steps * fraction)
+        n_opt = round_half_up(total_steps * fraction)
         segs = []
         if total_steps - n_opt:
             segs.append(Segment(0, total_steps - n_opt, Mode.FULL))
@@ -84,8 +96,8 @@ class GuidancePlan:
     def window(total_steps: int, start_frac: float, stop_frac: float,
                guidance_scale: float = 7.5) -> "GuidancePlan":
         """Figure-1 ablation: optimization window anywhere in the loop."""
-        a = round(total_steps * start_frac)
-        b = round(total_steps * stop_frac)
+        a = round_half_up(total_steps * start_frac)
+        b = round_half_up(total_steps * stop_frac)
         if not 0 <= a < b <= total_steps:
             raise ValueError((start_frac, stop_frac))
         segs = []

@@ -1,9 +1,27 @@
-"""Fused CFG combine (Eq. 1) — Pallas TPU kernel.
+"""Fused guidance combiners — Pallas TPU kernels.
 
-eps_hat = u + s * (c - u), computed in fp32, tiled over VMEM blocks. The op
-is purely memory-bound (3 streams, 1 FMA per element): on TPU the win over
-the unfused XLA form is eliminating the intermediate (c - u) round-trip.
-Block = (8, 1024) lanes-aligned tiles over a 2D view of the tensor.
+Three combine modes, one per serve workload (``--combine {cfg,apg,interval}``,
+DESIGN.md §15):
+
+* ``cfg_combine_pallas`` — Eq. 1, ``eps_hat = u + s * (c - u)``, fp32, tiled
+  over lanes-aligned VMEM blocks.  Purely memory-bound (3 streams, 1 FMA per
+  element): the win over the unfused XLA form is eliminating the
+  intermediate ``(c - u)`` round-trip.
+* ``apg_combine_pallas`` — APG normalized/projected guidance (arxiv
+  2410.02416): the cond/uncond difference is norm-clamped, split into
+  components parallel/orthogonal to the conditional prediction, and only
+  the orthogonal part guides at full strength.  One row per grid step so
+  the row reductions (norm, dot) stay inside a single VMEM block.
+* ``cfg_combine_rowscale_pallas`` — Eq. 1 with a *per-row* scale, the fused
+  form of interval guidance (arxiv 2404.07724) where rows outside the
+  guidance interval run at scale 1.
+
+``apg_combine_ref`` is the jnp oracle the kernel property tests compare
+against; ``repro.core.guidance`` re-exports it as the XLA path.
+
+Like the paged-decode kernels (``repro.kernels.ops``), ``interpret``
+defaults to platform detection: interpreted off-TPU (CPU CI), compiled on
+TPU.
 """
 
 from __future__ import annotations
@@ -14,6 +32,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+_EPS = 1e-12   # guards 0-norm rows (ragged padding); 0-diff rows stay exact
+
+
+def _interpret_default(interpret: bool | None) -> bool:
+    """Resolve ``interpret=None`` the same way the paged-decode kernels do:
+    interpreted everywhere except a real TPU backend."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
 
 def _kernel(u_ref, c_ref, o_ref, *, scale: float):
     u = u_ref[...].astype(jnp.float32)
@@ -22,7 +50,7 @@ def _kernel(u_ref, c_ref, o_ref, *, scale: float):
 
 
 def cfg_combine_pallas(eps_uncond, eps_cond, scale: float, *,
-                       block_rows: int = 256, interpret: bool = True):
+                       block_rows: int = 256, interpret: bool | None = None):
     assert eps_uncond.shape == eps_cond.shape
     if float(scale) == 1.0:
         # static short-circuit mirroring the jnp oracle: u + 1*(c - u) lands
@@ -46,6 +74,123 @@ def cfg_combine_pallas(eps_uncond, eps_cond, scale: float, *,
                   pl.BlockSpec((br, lanes), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, lanes), eps_cond.dtype),
-        interpret=interpret,
+        interpret=_interpret_default(interpret),
     )(u2, c2)
     return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+def _as_rows(x):
+    """View as (rows, features): leading axis is the batch, everything else
+    flattens — matching APG's per-sample reductions (dims [-1,-2,-3] in the
+    reference, i.e. all non-batch axes)."""
+    if x.ndim <= 1:
+        return x.reshape(1, -1)
+    return x.reshape(x.shape[0], -1)
+
+
+def apg_combine_ref(eps_uncond, eps_cond, scale, *, eta: float = 0.0,
+                    threshold: float = 0.0, diff=None):
+    """jnp oracle for APG normalized guidance (arxiv 2410.02416), fp32.
+
+    ``scale`` may be a python float or a traced per-row ``(B, 1)`` array.
+    ``diff`` optionally supplies an externally momentum-averaged
+    ``(cond - uncond)`` (the sampler's ``MomentumBuffer`` path); by default
+    the raw difference is used (the stateless serve-engine form).
+
+    Per row: ``d`` is norm-clamped to ``threshold`` (0 disables), split into
+    components parallel/orthogonal to the conditional prediction, and
+    ``out = c + (scale - 1) * (d_orth + eta * d_par)``.  Rows with ``u == c``
+    (ragged self-pairing) return ``c`` exactly; all-zero rows (padding) are
+    safe via the norm epsilon.
+    """
+    u = eps_uncond.astype(jnp.float32)
+    c = eps_cond.astype(jnp.float32)
+    d = (c - u) if diff is None else diff.astype(jnp.float32)
+    axes = tuple(range(1, c.ndim)) if c.ndim > 1 else (0,)
+    keep = dict(axis=axes, keepdims=True)
+    if threshold > 0.0:
+        d_norm = jnp.sqrt(jnp.sum(d * d, **keep))
+        d = d * jnp.minimum(1.0, threshold / jnp.maximum(d_norm, _EPS))
+    c_norm = jnp.sqrt(jnp.sum(c * c, **keep))
+    v1 = c / jnp.maximum(c_norm, _EPS)
+    d_par = jnp.sum(d * v1, **keep) * v1
+    d_orth = d - d_par
+    return (c + (scale - 1.0) * (d_orth + eta * d_par)).astype(eps_cond.dtype)
+
+
+def _apg_kernel(u_ref, c_ref, o_ref, *, scale: float, eta: float,
+                threshold: float):
+    u = u_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    d = c - u
+    if threshold > 0.0:
+        d_norm = jnp.sqrt(jnp.sum(d * d))
+        d = d * jnp.minimum(1.0, threshold / jnp.maximum(d_norm, _EPS))
+    c_norm = jnp.sqrt(jnp.sum(c * c))
+    v1 = c / jnp.maximum(c_norm, _EPS)
+    d_par = jnp.sum(d * v1) * v1
+    o_ref[...] = (c + (scale - 1.0) * ((d - d_par) + eta * d_par)
+                  ).astype(o_ref.dtype)
+
+
+def apg_combine_pallas(eps_uncond, eps_cond, scale: float, *,
+                       eta: float = 0.0, threshold: float = 0.0,
+                       interpret: bool | None = None):
+    """Fused APG combine.  One grid step per batch row: the whole feature
+    row sits in one VMEM block so the norm/dot reductions need no
+    cross-block accumulation; lane padding is zero-filled, which perturbs
+    neither sums nor dots."""
+    assert eps_uncond.shape == eps_cond.shape
+    orig_shape = eps_cond.shape
+    u2, c2 = _as_rows(eps_uncond), _as_rows(eps_cond)
+    rows, feat = c2.shape
+    lanes = 128
+    fp = pl.cdiv(feat, lanes) * lanes
+    u2 = jnp.pad(u2, ((0, 0), (0, fp - feat)))
+    c2 = jnp.pad(c2, ((0, 0), (0, fp - feat)))
+    out = pl.pallas_call(
+        functools.partial(_apg_kernel, scale=float(scale), eta=float(eta),
+                          threshold=float(threshold)),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, fp), lambda i: (i, 0)),
+                  pl.BlockSpec((1, fp), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, fp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, fp), eps_cond.dtype),
+        interpret=_interpret_default(interpret),
+    )(u2, c2)
+    return out[:, :feat].reshape(orig_shape)
+
+
+def _rowscale_kernel(u_ref, c_ref, s_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    s = s_ref[0, 0].astype(jnp.float32)
+    o_ref[...] = (u + s * (c - u)).astype(o_ref.dtype)
+
+
+def cfg_combine_rowscale_pallas(eps_uncond, eps_cond, scales, *,
+                                interpret: bool | None = None):
+    """Eq. 1 with a per-row guidance scale — the fused interval-guidance
+    combine (rows outside the interval carry scale 1).  ``scales`` is
+    ``(B,)``, one scale per leading-axis row."""
+    assert eps_uncond.shape == eps_cond.shape
+    orig_shape = eps_cond.shape
+    u2, c2 = _as_rows(eps_uncond), _as_rows(eps_cond)
+    rows, feat = c2.shape
+    assert scales.shape == (rows,), (scales.shape, rows)
+    lanes = 128
+    fp = pl.cdiv(feat, lanes) * lanes
+    u2 = jnp.pad(u2, ((0, 0), (0, fp - feat)))
+    c2 = jnp.pad(c2, ((0, 0), (0, fp - feat)))
+    s2 = jnp.broadcast_to(scales.astype(jnp.float32)[:, None], (rows, lanes))
+    out = pl.pallas_call(
+        _rowscale_kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, fp), lambda i: (i, 0)),
+                  pl.BlockSpec((1, fp), lambda i: (i, 0)),
+                  pl.BlockSpec((1, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, fp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, fp), eps_cond.dtype),
+        interpret=_interpret_default(interpret),
+    )(u2, c2, s2)
+    return out[:, :feat].reshape(orig_shape)

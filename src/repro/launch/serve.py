@@ -69,7 +69,11 @@ def run_continuous(params, cfg, args) -> None:
                            swap_min_pages=swap_min,
                            prefix_cache=args.prefix_cache,
                            step_mode=None if args.step == "auto"
-                           else args.step)
+                           else args.step,
+                           guidance_policy=args.policy,
+                           combine=args.combine,
+                           divergence_threshold=args.divergence_threshold,
+                           interval=tuple(args.interval))
     eng.serve_trace(reqs, arrivals)
     print(f"[continuous] {eng.metrics.summary()}")
     print(f"[step={eng.step_mode:9s}] "
@@ -84,6 +88,12 @@ def run_continuous(params, cfg, args) -> None:
           f"({m.savings_fraction():.1%} of full CFG) "
           f"uncond_ticks_elided={m.uncond_ticks_elided} "
           f"events={m.trace.emitted} dropped={m.trace.dropped}")
+    if args.policy != "static" or args.combine != "cfg":
+        s = m.summary()
+        print(f"[policy    ] {args.policy}/{args.combine}: "
+              f"policy_switches={s['policy_switches']} "
+              f"uncond_passes_elided_dynamic="
+              f"{s['uncond_passes_elided_dynamic']}")
     if args.trace_out:
         doc = write_chrome_trace(m, args.trace_out)
         print(f"[trace     ] {args.trace_out}: "
@@ -178,6 +188,25 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="continuous: write the run's event trace as "
                          "Chrome-trace JSON (DESIGN.md §13)")
+    ap.add_argument("--policy", choices=["static", "divergence", "interval"],
+                    default="static",
+                    help="continuous: runtime guidance policy (divergence = "
+                         "drop the uncond stream when the EMA cond/uncond "
+                         "divergence falls below --divergence-threshold; "
+                         "interval = guidance only inside --interval, "
+                         "DESIGN.md §15)")
+    ap.add_argument("--combine", choices=["cfg", "apg", "interval"],
+                    default="cfg",
+                    help="continuous: FULL-step combine stage (Eq. 1, APG "
+                         "normalized guidance arxiv 2410.02416, or "
+                         "interval-gated Eq. 1 arxiv 2404.07724)")
+    ap.add_argument("--divergence-threshold", type=float, default=0.0,
+                    help="continuous --policy divergence: EMA divergence "
+                         "level that triggers the FULL->COND switch")
+    ap.add_argument("--interval", type=float, nargs=2, default=(0.0, 1.0),
+                    metavar=("START", "STOP"),
+                    help="continuous: guidance interval as fractions of the "
+                         "plan (with --policy interval / --combine interval)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--fraction", type=float, default=0.2,
@@ -200,6 +229,10 @@ def main() -> None:
     if args.prefix_cache == "content" and args.reservation != "lazy":
         ap.error("--prefix-cache content requires --reservation lazy "
                  "(shared pages need CoW growth)")
+    if args.policy == "divergence" and args.divergence_threshold <= 0:
+        ap.error("--policy divergence needs --divergence-threshold > 0 "
+                 "(the EMA divergence level below which the uncond stream "
+                 "drops)")
     if args.swap_min_pages == "auto" and args.pass_budget != "auto":
         ap.error("--swap-min-pages auto prices the break-even off the "
                  "roofline autotuner: set --pass-budget auto")

@@ -23,7 +23,7 @@ cond-stream prompt KV copy-on-write.
 """
 
 from repro.serve.autotune import BudgetAutotuner
-from repro.serve.engine import ContinuousEngine
+from repro.serve.engine import COMBINE_MODES, ContinuousEngine
 from repro.serve.metrics import RequestTimeline, ServeMetrics, TickRecord
 from repro.serve.obs import (Event, EventTrace, Log2Histogram, TickTimer,
                              TickTiming, fold_counters, to_chrome_trace,
@@ -43,7 +43,8 @@ from repro.serve.state import (ContentPrefixRegistry, HostPagePool,
                                resume_lazy_needs, stream_page_needs)
 
 __all__ = [
-    "ArrivalQueue", "BudgetAutotuner", "ContentPrefixRegistry",
+    "ArrivalQueue", "BudgetAutotuner", "COMBINE_MODES",
+    "ContentPrefixRegistry",
     "ContinuousEngine", "Event", "EventTrace", "HostPagePool",
     "Log2Histogram", "PageAllocator",
     "PassRow", "PrefixShareRegistry", "RequestTimeline", "Scheduler",

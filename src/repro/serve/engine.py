@@ -84,8 +84,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ar_decode as AR
-from repro.core.guidance import cfg_combine
-from repro.core.selective import GuidancePlan, Mode, PlanCursor
+from repro.core.guidance import apg_combine, cfg_combine
+from repro.core.policy import (GUIDANCE_POLICIES, DivergenceGuidancePolicy,
+                               DynamicPlanCursor, GuidancePolicy, make_policy)
+from repro.core.selective import (GuidancePlan, Mode, PlanCursor,
+                                  round_half_up)
 from repro.data.tokenizer import EOS, PAD, encode
 from repro.models import transformer as T
 from repro.serve.autotune import BudgetAutotuner
@@ -106,6 +109,7 @@ KV_DTYPES = ("bf16", "int8")
 RESERVATION_MODES = ("eager", "lazy")
 STEP_MODES = ("signature", "ragged")
 PREFIX_CACHE_MODES = ("length", "content")
+COMBINE_MODES = ("cfg", "apg", "interval")
 
 
 def _sample(logits, key, temperature):
@@ -145,6 +149,12 @@ class _RequestState:
         self.cursor = cursor
         self.slot = slot
         self.generated: list[int] = []
+        # checkpoint state driving the reclaim trigger (DESIGN.md §15):
+        # True once the uncond stream is dead — reclaimed at a transition,
+        # or never allocated (all-COND plan). Restored across preemption
+        # so a resumed request neither double-reclaims nor strands pages.
+        self.uncond_dead = not any(s.mode is Mode.FULL
+                                   for s in cursor.plan.segments)
 
 
 class _ResumeState:
@@ -155,15 +165,22 @@ class _ResumeState:
     ``prompt + generated[:-1]`` (the positions the evicted run had already
     written), scattered through fresh block tables. The per-request RNG
     key and the plan cursor make the continuation bit-compatible with an
-    uninterrupted run.
+    uninterrupted run. Dynamic-policy state (realized switch step, EMA
+    divergence, uncond-dead flag) is part of the checkpoint: a resumed
+    request must not rebuild a dead uncond stream or re-fire its
+    transition (DESIGN.md §15).
     """
 
     def __init__(self, *, step: int, passes: int, generated: list[int],
-                 key: np.ndarray):
+                 key: np.ndarray, switch_step: int | None = None,
+                 ema: float = 0.0, uncond_dead: bool = False):
         self.step = step                  # plan steps executed (== lstep)
         self.passes = passes
         self.generated = generated        # prefill token + one per step
         self.key = key
+        self.switch_step = switch_step    # dynamic FULL->COND switch, if any
+        self.ema = ema                    # divergence running average
+        self.uncond_dead = uncond_dead    # reclaim already fired
 
 
 class _PrefillItem:
@@ -230,7 +247,14 @@ class ContinuousEngine:
                  step_mode: str | None = None,
                  host_pool_bytes: int = 0,
                  swap_min_pages: int | str = 0,
-                 prefix_cache: str = "length"):
+                 prefix_cache: str = "length",
+                 guidance_policy: str = "static",
+                 divergence_threshold: float = 0.0,
+                 divergence_momentum: float = 0.0,
+                 combine: str = "cfg",
+                 apg_eta: float = 0.0,
+                 apg_threshold: float = 0.0,
+                 interval: tuple[float, float] = (0.0, 1.0)):
         if kv not in KV_MODES:
             raise ValueError(f"kv {kv!r} not in {KV_MODES}")
         if step_mode is None:
@@ -270,6 +294,23 @@ class ContinuousEngine:
         if swap_min_pages == "auto" and pass_budget != "auto":
             raise ValueError('swap_min_pages="auto" needs the roofline '
                              'latency model: set pass_budget="auto"')
+        if guidance_policy not in GUIDANCE_POLICIES:
+            raise ValueError(f"guidance_policy {guidance_policy!r} not in "
+                             f"{GUIDANCE_POLICIES}")
+        if guidance_policy == "divergence" and divergence_threshold <= 0.0:
+            raise ValueError('guidance_policy="divergence" needs '
+                             "divergence_threshold > 0 (the EMA divergence "
+                             "level below which the uncond stream drops)")
+        if combine not in COMBINE_MODES:
+            raise ValueError(f"combine {combine!r} not in {COMBINE_MODES}")
+        if not 0.0 <= interval[0] < interval[1] <= 1.0:
+            raise ValueError(f"interval {interval!r} must satisfy "
+                             "0 <= start < stop <= 1")
+        if guidance_policy == "interval" and combine == "cfg":
+            # the interval policy's semantics live in the combine stage
+            # (scale 1.0 outside [start, stop)); plain cfg would silently
+            # degrade it to a static suffix plan
+            combine = "interval"
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -279,6 +320,13 @@ class ContinuousEngine:
         self.selective_fraction = selective_fraction
         self.rules = rules
         self.stop_on_eos = stop_on_eos
+        self.guidance_policy = guidance_policy
+        self.divergence_threshold = divergence_threshold
+        self.divergence_momentum = divergence_momentum
+        self.combine = combine
+        self.apg_eta = apg_eta
+        self.apg_threshold = apg_threshold
+        self.interval = (float(interval[0]), float(interval[1]))
         self.defrag_threshold = defrag_threshold
         self.prefills_per_tick = prefills_per_tick
         self.bucket = bucket
@@ -449,10 +497,11 @@ class ContinuousEngine:
                     now=now)
                 self.metrics.note_pages(self.pages.n_in_use, now)
         with timer.phase("step"):
-            sampled = self._execute(plan) if plan.in_flight else []
+            sampled, divs = self._execute(plan) if plan.in_flight \
+                else ([], [])
         with timer.phase("finalize"):
             events = self.scheduler.commit(plan)
-            for ev, nxt in zip(events, sampled):
+            for ev, nxt, dv in zip(events, sampled, divs):
                 state = self._states[ev.uid]
                 if ev.done:
                     self._finalize(ev.uid, now)       # last sample discarded
@@ -466,11 +515,24 @@ class ContinuousEngine:
                 self._slots.pos[slot] += 1
                 self._slots.lstep[slot] += 1
                 self.metrics.on_token(ev.uid, now, cond=ev.mode is Mode.COND)
-                if ev.mode is Mode.FULL and not state.cursor.done \
-                        and state.cursor.mode is Mode.COND:
-                    # the plan just crossed into its COND suffix: the uncond
-                    # stream is dead — in the paged arena, return its pages
-                    # to the shared pool now
+                cursor = state.cursor
+                if ev.mode is Mode.FULL \
+                        and isinstance(cursor, DynamicPlanCursor) \
+                        and cursor.observe(dv):
+                    # the EMA'd cond/uncond divergence crossed the policy's
+                    # threshold: every remaining plan-FULL step runs COND
+                    self.metrics.on_policy_switch(
+                        ev.uid, now, step=cursor.switch_step,
+                        elided=cursor.elided_uncond_passes())
+                if not state.uncond_dead and not cursor.done \
+                        and cursor.mode is Mode.COND:
+                    # the schedule (static plan or dynamic switch) just
+                    # crossed into COND: the uncond stream is dead — in the
+                    # paged arena, return its pages to the shared pool now.
+                    # uncond_dead is checkpoint state, not an event-mode
+                    # inference, so a request preempted exactly at the
+                    # boundary reclaims exactly once (DESIGN.md §15)
+                    state.uncond_dead = True
                     self.metrics.on_phase_transition(ev.uid, now)
                     if self.kv == "paged":
                         self.metrics.on_reclaim(ev.uid, now,
@@ -491,11 +553,60 @@ class ContinuousEngine:
             if req.plan.total_steps > self.max_new:
                 raise ValueError(f"plan of {req.plan.total_steps} steps "
                                  f"exceeds engine max_new={self.max_new}")
-            return req.plan
-        total = max(1, min(req.max_new_tokens, self.max_new))
-        frac = (self.selective_fraction if req.selective_fraction is None
-                else req.selective_fraction)
-        return GuidancePlan.suffix(total, frac, req.guidance_scale)
+            base = req.plan
+        else:
+            total = max(1, min(req.max_new_tokens, self.max_new))
+            frac = (self.selective_fraction if req.selective_fraction is None
+                    else req.selective_fraction)
+            base = GuidancePlan.suffix(total, frac, req.guidance_scale)
+        # the *bound* plan (DESIGN.md §15): what admission, reservation and
+        # the pass budget price — a guaranteed upper bound on FULL steps.
+        # Static/divergence bind the base plan unchanged; interval rederives
+        # the FULL prefix from its stop fraction.
+        return self._policy_for(base).bound_plan()
+
+    def _policy_for(self, plan: GuidancePlan) -> GuidancePolicy:
+        return make_policy(self.guidance_policy, plan,
+                           threshold=self.divergence_threshold,
+                           momentum=self.divergence_momentum,
+                           interval=self.interval)
+
+    def _cursor_for(self, plan: GuidancePlan, *, step: int = 0,
+                    passes: int = 0, switch_step: int | None = None,
+                    ema: float = 0.0) -> PlanCursor:
+        """Per-request cursor through the configured policy. The static
+        policy returns a plain :class:`PlanCursor` — bit-compatible with
+        the pre-policy engine. ``switch_step``/``ema`` restore a
+        preemption checkpoint's dynamic state."""
+        policy = self._policy_for(plan)
+        if isinstance(policy, DivergenceGuidancePolicy):
+            return policy.cursor(step=step, passes_executed=passes,
+                                 switch_step=switch_step, ema=ema)
+        return policy.cursor(step=step, passes_executed=passes)
+
+    def _eff_scale(self, uid: str, lstep: int | None = None) -> np.float32:
+        """Combine-stage guidance scale for ``uid``'s next sample. Flat
+        except under interval combine, where guidance weakens to 1.0 for
+        steps outside ``[start, stop)`` (arxiv 2404.07724)."""
+        state = self._states[uid]
+        if self.combine != "interval":
+            return np.float32(state.req.guidance_scale)
+        if lstep is None:
+            lstep = int(self._slots.lstep[state.slot])
+        total = state.cursor.plan.total_steps
+        a = round_half_up(total * self.interval[0])
+        b = round_half_up(total * self.interval[1])
+        return np.float32(state.cursor.plan.guidance_scale
+                          if a <= lstep < b else 1.0)
+
+    def _combine(self, l_u, l_c, scale):
+        """The configured combine stage: Eq. 1 (``cfg``/``interval`` — the
+        interval semantics live in the per-step scale) or APG normalized/
+        projected guidance (``apg``, arxiv 2410.02416)."""
+        if self.combine == "apg":
+            return apg_combine(l_u, l_c, scale, eta=self.apg_eta,
+                               threshold=self.apg_threshold)
+        return cfg_combine(l_u, l_c, scale)
 
     def _prompt_len_for(self, req: ServeRequest) -> int:
         S = self.prompt_len if req.prompt_len is None else req.prompt_len
@@ -526,7 +637,7 @@ class ContinuousEngine:
             # slot (plans are also pre-validated at submit)
             plan = self._plan_for(req)
             plan.validate_for_ar()
-            cursor = PlanCursor(plan)
+            cursor = self._cursor_for(plan)
             slot = self.pool.alloc(req.uid)
             assert slot is not None
             state = _RequestState(req, cursor, slot)
@@ -548,7 +659,7 @@ class ContinuousEngine:
             self._pool_c, self._pool_u, tok0 = fn(
                 self.params, self._pool_c, self._pool_u,
                 jnp.asarray(self._tokenize(req.prompt, self.prompt_len)),
-                slot, jnp.asarray(key), np.float32(req.guidance_scale),
+                slot, jnp.asarray(key), self._eff_scale(req.uid, 0),
                 np.float32(req.temperature))
             tok0 = int(tok0)
             self.metrics.on_admit(
@@ -611,7 +722,7 @@ class ContinuousEngine:
             l_u, l_c = it.cached
             t0 = self._hit_sample_fn()(
                 jnp.asarray(l_u), jnp.asarray(l_c),
-                np.float32(it.req.guidance_scale), jnp.asarray(it.key),
+                self._eff_scale(it.req.uid, 0), jnp.asarray(it.key),
                 np.float32(it.req.temperature))
             tok0_of[it.req.uid] = int(t0)
         # bookkeeping in *queue order* (not bucket order): the simulator
@@ -694,7 +805,7 @@ class ContinuousEngine:
         self.pages.alloc(req.uid, "c", need_c)
         if need_u:
             self.pages.alloc(req.uid, "u", need_u)
-        slot = self._admit_common(req, PlanCursor(plan), S)
+        slot = self._admit_common(req, self._cursor_for(plan), S)
         key = self._fresh_key()
         self._slots.lstep[slot] = 0
         self._slots.key[slot] = key
@@ -728,7 +839,7 @@ class ContinuousEngine:
         elif wants_u:
             self.pages.alloc(req.uid, "u", need_u)
             self._prefix.publish(S, req.uid)   # this prefill is canonical
-        slot = self._admit_common(req, PlanCursor(plan), S)
+        slot = self._admit_common(req, self._cursor_for(plan), S)
         key = self._fresh_key()
         self._slots.lstep[slot] = 0
         self._slots.key[slot] = key
@@ -753,7 +864,7 @@ class ContinuousEngine:
         self.queue.pop()
         got = self._content.acquire(ckey, req.uid)
         n_share = len(self._prefix.acquire(S, req.uid)) if wants_u else 0
-        slot = self._admit_common(req, PlanCursor(plan), S)
+        slot = self._admit_common(req, self._cursor_for(plan), S)
         key = self._fresh_key()
         self._slots.lstep[slot] = 0
         self._slots.key[slot] = key
@@ -784,10 +895,11 @@ class ContinuousEngine:
                 self._restore_pages(held[stream], dst)
             self._host.drop(req.uid)
             L = S + rs.step
-            cursor = PlanCursor(plan, step=rs.step,
-                                passes_executed=rs.passes)
+            cursor = self._cursor_for(plan, step=rs.step, passes=rs.passes,
+                                      switch_step=rs.switch_step, ema=rs.ema)
             slot = self._admit_common(req, cursor, L)
             state = self._states[req.uid]
+            state.uncond_dead = rs.uncond_dead
             state.generated = list(rs.generated)
             self._slots.tok[slot] = rs.generated[-1]
             self._slots.lstep[slot] = rs.step
@@ -796,7 +908,8 @@ class ContinuousEngine:
                                 rs.key, emit=False, restore=total)
         shared = self._prefix.lookup(S) is not None
         need_c, need_u, wants_u, n_share = resume_lazy_needs(
-            plan, rs.step, S, self.page_size, shared=shared)
+            plan, rs.step, S, self.page_size, shared=shared,
+            switch_step=rs.switch_step)
         if not self._free_for_admission(need_c + need_u, req.uid, now):
             return None
         self.queue.pop()
@@ -813,9 +926,11 @@ class ContinuousEngine:
                 self.pages.alloc(req.uid, "u", need_u)
                 u_mask = 0
         L = S + rs.step
-        cursor = PlanCursor(plan, step=rs.step, passes_executed=rs.passes)
+        cursor = self._cursor_for(plan, step=rs.step, passes=rs.passes,
+                                  switch_step=rs.switch_step, ema=rs.ema)
         slot = self._admit_common(req, cursor, L)
         state = self._states[req.uid]
+        state.uncond_dead = rs.uncond_dead
         state.generated = list(rs.generated)
         self._slots.tok[slot] = rs.generated[-1]
         self._slots.lstep[slot] = rs.step
@@ -855,7 +970,7 @@ class ContinuousEngine:
                 tu[:it.u_mask_below] = self.num_pages
             btu[i] = tu
             keys[i] = it.key
-            scales[i] = it.req.guidance_scale
+            scales[i] = self._eff_scale(it.req.uid, 0)
             temps[i] = it.req.temperature
         fn = self._paged_prefill_fn(Sb, kb)
         self._pool_p, tok0, l_c, l_u = fn(
@@ -912,7 +1027,10 @@ class ContinuousEngine:
         self._resume[uid] = _ResumeState(
             step=state.cursor.step, passes=state.cursor.passes_executed,
             generated=list(state.generated),
-            key=self._slots.key[state.slot].copy())
+            key=self._slots.key[state.slot].copy(),
+            switch_step=getattr(state.cursor, "switch_step", None),
+            ema=getattr(state.cursor, "ema", 0.0),
+            uncond_dead=state.uncond_dead)
         self.pool.free(state.slot)
         self.metrics.on_preempt(uid, now)
         swap = plan_swap_out(self.pages, self._host, uid,
@@ -1049,7 +1167,7 @@ class ContinuousEngine:
                                       rules=rules)
             cc = T.prepare_decode_caches(cfg, cc, seq_len=S, capacity=cap)
             cu = T.prepare_decode_caches(cfg, cu, seq_len=S, capacity=cap)
-            logits = cfg_combine(logits_u, logits_c, scale)
+            logits = self._combine(logits_u, logits_c, scale)
             tok0 = _sample(logits, jax.random.fold_in(rkey, 0), temp)
             pool_c = jax.tree.map(lambda p, r: p.at[slot].set(r), pool_c, cc)
             pool_u = jax.tree.map(lambda p, r: p.at[slot].set(r), pool_u, cu)
@@ -1097,7 +1215,7 @@ class ContinuousEngine:
                 h, jnp.broadcast_to(last, (kb, 1, h.shape[-1])), axis=1)
             l_c = T.unembed(params, cfg, take(h_c))[:, 0, :].astype(jnp.float32)
             l_u = T.unembed(params, cfg, take(h_u))[:, 0, :].astype(jnp.float32)
-            logits = cfg_combine(l_u, l_c, scales[:, None])
+            logits = self._combine(l_u, l_c, scales[:, None])
 
             def sample0(lg, k, t):
                 return _sample(lg[None], jax.random.fold_in(k, 0), t)[0]
@@ -1135,9 +1253,11 @@ class ContinuousEngine:
                 h_u, cu = T.decode_step(params, cfg, emb, cu, pos, rules=rules)
                 l_c = T.unembed(params, cfg, h_c)[:, 0, :].astype(jnp.float32)
                 l_u = T.unembed(params, cfg, h_u)[:, 0, :].astype(jnp.float32)
-                logits = cfg_combine(l_u, l_c, scale)
+                logits = self._combine(l_u, l_c, scale)
                 nxt = _sample(logits, jax.random.fold_in(rkey, 1 + lstep), temp)
-                return nxt[0], cc, cu
+                # the dynamic-policy signal: ||l_c - l_u||_2 for this step
+                div = jnp.sqrt(jnp.sum((l_c - l_u) ** 2))
+                return nxt[0], cc, cu, div
 
             def one_cond(cc, tok, pos, temp, rkey, lstep):
                 emb = T.embed_tokens(params, cfg, tok[None, None])
@@ -1148,10 +1268,11 @@ class ContinuousEngine:
 
             f_next = jnp.zeros((n_full,), jnp.int32)
             c_next = jnp.zeros((n_cond,), jnp.int32)
+            f_div = jnp.zeros((n_full,), jnp.float32)
             if n_full:
                 rows_c = jax.tree.map(lambda a: a[f_idx], pool_c)
                 rows_u = jax.tree.map(lambda a: a[f_idx], pool_u)
-                f_next, rows_c, rows_u = jax.vmap(one_full)(
+                f_next, rows_c, rows_u, f_div = jax.vmap(one_full)(
                     rows_c, rows_u, f_tok, f_pos, f_scale, f_temp, f_key,
                     f_lstep)
                 pool_c = jax.tree.map(
@@ -1164,7 +1285,9 @@ class ContinuousEngine:
                     rows_c, c_tok, c_pos, c_temp, c_key, c_lstep)
                 pool_c = jax.tree.map(
                     lambda p, r: p.at[c_idx].set(r, mode="drop"), pool_c, rows_c)
-            return pool_c, pool_u, f_next, c_next
+            # divergences ride at the END of the tuple so the autotuner's
+            # out[0]/out[1] pool indices stay stable
+            return pool_c, pool_u, f_next, c_next, f_div
 
         self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1, 2))
         return self._jit[key]
@@ -1189,6 +1312,7 @@ class ContinuousEngine:
                f_key, f_lstep, c_btc, c_tok, c_pos, c_temp, c_key, c_lstep):
             f_next = jnp.zeros((n_full,), jnp.int32)
             c_next = jnp.zeros((n_cond,), jnp.int32)
+            f_div = jnp.zeros((n_full,), jnp.float32)
             if n_full:
                 emb = T.embed_tokens(params, cfg, f_tok[:, None])
                 h_c, pool = T.decode_step_paged(params, cfg, emb, pool,
@@ -1197,15 +1321,17 @@ class ContinuousEngine:
                                                 f_btu, f_pos, rules=rules)
                 l_c = T.unembed(params, cfg, h_c)[:, 0, :].astype(jnp.float32)
                 l_u = T.unembed(params, cfg, h_u)[:, 0, :].astype(jnp.float32)
-                logits = cfg_combine(l_u, l_c, f_scale[:, None])
+                logits = self._combine(l_u, l_c, f_scale[:, None])
                 f_next = sample_rows(logits, f_key, f_temp, f_lstep)
+                f_div = jnp.sqrt(jnp.sum((l_c - l_u) ** 2, axis=-1))
             if n_cond:
                 emb = T.embed_tokens(params, cfg, c_tok[:, None])
                 h_c, pool = T.decode_step_paged(params, cfg, emb, pool,
                                                 c_btc, c_pos, rules=rules)
                 logits = T.unembed(params, cfg, h_c)[:, 0, :].astype(jnp.float32)
                 c_next = sample_rows(logits, c_key, c_temp, c_lstep)
-            return pool, f_next, c_next
+            # f_div rides at the END: the autotuner's out[0] stays the pool
+            return pool, f_next, c_next, f_div
 
         self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1))
         return self._jit[key]
@@ -1236,13 +1362,17 @@ class ContinuousEngine:
             h, pool = T.decode_step_paged(params, cfg, emb, pool, bt, pos,
                                           rules=rules, phase=phase)
             logits = T.unembed(params, cfg, h)[:, 0, :].astype(jnp.float32)
-            combined = cfg_combine(logits[u_idx], logits, scale[:, None])
+            combined = self._combine(logits[u_idx], logits, scale[:, None])
 
             def one(lg, k, t, ls):
                 return _sample(lg[None], jax.random.fold_in(k, 1 + ls), t)[0]
 
             nxt = jax.vmap(one)(combined, rkey, temp, lstep)
-            return pool, nxt
+            # per-output-row divergence signal; self-paired rows (COND,
+            # uncond, padding) read exactly 0 — div rides at the END so
+            # the autotuner's out[0] stays the pool
+            div = jnp.sqrt(jnp.sum((logits - logits[u_idx]) ** 2, axis=-1))
+            return pool, nxt, div
 
         self._jit[key] = jax.jit(fn, donate_argnums=self._donate(1))
         return self._jit[key]
@@ -1307,7 +1437,7 @@ class ContinuousEngine:
         key = ("hit_sample",)
         if key not in self._jit:
             def fn(l_u, l_c, scale, rkey, temp):
-                lg = cfg_combine(l_u, l_c, scale)
+                lg = self._combine(l_u, l_c, scale)
                 return _sample(lg[None], jax.random.fold_in(rkey, 0),
                                temp)[0]
             self._jit[key] = jax.jit(fn)
@@ -1459,9 +1589,10 @@ class ContinuousEngine:
             out[i] = self.pages.table(e.uid, stream, self.nb_max)
         return jnp.asarray(out)
 
-    def _execute(self, plan: TickPlan) -> list[int]:
-        """Run one mixed-phase step; returns sampled next-tokens aligned
-        with ``plan.full + plan.cond``."""
+    def _execute(self, plan: TickPlan) -> tuple[list[int], list[float]]:
+        """Run one mixed-phase step; returns sampled next-tokens and the
+        per-entry cond/uncond divergence norms (0.0 for COND entries),
+        both aligned with ``plan.full + plan.cond``."""
         self.metrics.on_step_launch(self.tick_count)
         if self.step_mode == "ragged":
             return self._execute_ragged(plan)
@@ -1471,9 +1602,14 @@ class ContinuousEngine:
             self._group_arrays(plan.full, nf_b)
         c_idx, c_tok, c_pos, _c_scale, c_temp, c_key, c_lstep = \
             self._group_arrays(plan.cond, nc_b)
+        if self.combine == "interval":
+            # per-step effective scale: 1.0 outside [start, stop)
+            eff = [float(self._eff_scale(e.uid)) for e in plan.full]
+            f_scale = jnp.asarray(np.asarray(
+                eff + [0.0] * (nf_b - len(eff)), np.float32))
         if self.kv == "paged":
             fn = self._paged_step_fn(nf_b, nc_b)
-            self._pool_p, f_next, c_next = fn(
+            self._pool_p, f_next, c_next, f_div = fn(
                 self.params, self._pool_p,
                 self._group_tables(plan.full, nf_b, "c"),
                 self._group_tables(plan.full, nf_b, "u"),
@@ -1482,13 +1618,16 @@ class ContinuousEngine:
                 c_tok, c_pos, c_temp, c_key, c_lstep)
         else:
             fn = self._step_fn(nf_b, nc_b)
-            self._pool_c, self._pool_u, f_next, c_next = fn(
+            self._pool_c, self._pool_u, f_next, c_next, f_div = fn(
                 self.params, self._pool_c, self._pool_u,
                 f_idx, f_tok, f_pos, f_scale, f_temp, f_key, f_lstep,
                 c_idx, c_tok, c_pos, c_temp, c_key, c_lstep)
         f_next = np.asarray(f_next)[: plan.n_full]
         c_next = np.asarray(c_next)[: plan.n_cond]
-        return [int(t) for t in f_next] + [int(t) for t in c_next]
+        f_div = np.asarray(f_div)[: plan.n_full]
+        toks = [int(t) for t in f_next] + [int(t) for t in c_next]
+        divs = [float(d) for d in f_div] + [0.0] * plan.n_cond
+        return toks, divs
 
     def _execute_ragged(self, plan: TickPlan) -> list[int]:
         """Run the whole tick as one fixed-shape ragged step. Row layout
@@ -1498,7 +1637,8 @@ class ContinuousEngine:
         ``[in_flight, in_flight + n_full)`` are the FULL entries' uncond
         passes, and the rest is padding (phase 0, out-of-range tables:
         reads clamp, writes drop, attention output is exactly zero).
-        Returns sampled next-tokens aligned with ``plan.full + plan.cond``.
+        Returns sampled next-tokens and per-entry divergence norms (0.0
+        for COND entries) aligned with ``plan.full + plan.cond``.
         """
         R = self.ragged_rows
         rows = plan.pass_rows()
@@ -1518,16 +1658,18 @@ class ContinuousEngine:
             bt[r] = self.pages.table(pr.entry.uid, pr.stream, self.nb_max)
             tok[r] = self._slots.tok[slot]
             pos[r] = self._slots.pos[slot]
-            scale[r] = self._slots.scale[slot]
+            scale[r] = self._eff_scale(pr.entry.uid) \
+                if self.combine == "interval" else self._slots.scale[slot]
             temp[r] = self._slots.temp[slot]
             rkey[r] = self._slots.key[slot]
             lstep[r] = self._slots.lstep[slot]
             phase[r] = 1
         u_idx[: plan.n_full] = n_out + np.arange(plan.n_full)
         fn = self._ragged_step_fn()
-        self._pool_p, nxt = fn(
+        self._pool_p, nxt, div = fn(
             self.params, self._pool_p, jnp.asarray(bt), jnp.asarray(tok),
             jnp.asarray(pos), jnp.asarray(scale), jnp.asarray(temp),
             jnp.asarray(rkey), jnp.asarray(lstep), jnp.asarray(u_idx),
             jnp.asarray(phase))
-        return [int(t) for t in np.asarray(nxt)[:n_out]]
+        return ([int(t) for t in np.asarray(nxt)[:n_out]],
+                [float(d) for d in np.asarray(div)[:n_out]])

@@ -163,6 +163,10 @@ class ServeMetrics:
     recompute_passes_avoided: int = 0  # prefill passes the host tier and the
                                        # content cache together elided (2 per
                                        # swap_in, 2 per prefix_hit)
+    policy_switches: int = 0     # dynamic-policy FULL->COND switches fired
+                                 # before the bound plan's boundary
+    uncond_passes_elided_dynamic: int = 0  # uncond passes those switches
+                                           # dropped beyond the static plan
     wall_s: float = 0.0
     _ticks: int = 0
     _scheduled: int = 0          # sum of per-tick requests in flight
@@ -370,6 +374,17 @@ class ServeMetrics:
         one denoiser pass per tick instead of two."""
         self.trace.emit("phase", int(tick), uid)
 
+    def on_policy_switch(self, uid: str, tick: float, *, step: int,
+                         elided: int) -> None:
+        """A dynamic guidance policy dropped the uncond stream at ``step``,
+        before its bound plan's static boundary — ``elided`` uncond passes
+        the admission-time plan priced but the policy decided not to spend
+        (DESIGN.md §15)."""
+        self.policy_switches += 1
+        self.uncond_passes_elided_dynamic += elided
+        self.trace.emit("policy_switch", int(tick), uid, step=int(step),
+                        elided=int(elided))
+
     def on_complete(self, uid: str, tick: float, passes: int) -> None:
         tl = self.timelines[uid]
         tl.completed = tick
@@ -494,6 +509,8 @@ class ServeMetrics:
             "tick_s": self.hists["tick_s"].summary(),
             "passes_saved": self.passes_saved(),
             "uncond_ticks_elided": self.uncond_ticks_elided,
+            "policy_switches": self.policy_switches,
+            "uncond_passes_elided_dynamic": self.uncond_passes_elided_dynamic,
             "savings_fraction": round(self.savings_fraction(), 4),
             "events": {"emitted": self.trace.emitted,
                        "dropped": self.trace.dropped},

@@ -41,6 +41,8 @@ EVENT_KINDS = (
     "preempt",        # in-flight request evicted back to the queue (uid)
     "resume",         # preempted request re-admitted, KV rebuilt (uid; full)
     "phase",          # plan crossed FULL -> COND (uid)
+    "policy_switch",  # dynamic guidance policy dropped the uncond stream
+                      # before the bound plan's boundary (uid; step, elided)
     "token",          # one token emitted (uid; cond = COND-mode step)
     "complete",       # request finished (uid; passes)
     "expire",         # deadline passed while queued (uid)
@@ -146,7 +148,8 @@ FOLDED_COUNTERS = (
     "shared_page_hits", "cow_copies", "cache_evictions", "preemptions",
     "resumes", "step_launches", "step_compiles", "uncond_ticks_elided",
     "swap_outs", "swap_ins", "host_evictions", "prefix_hits",
-    "prefix_misses", "recompute_passes_avoided",
+    "prefix_misses", "recompute_passes_avoided", "policy_switches",
+    "uncond_passes_elided_dynamic",
 )
 
 
@@ -212,5 +215,8 @@ def fold_counters(events) -> dict:
             c["recompute_passes_avoided"] += 2
         elif k == "prefix_miss":
             c["prefix_misses"] += 1
+        elif k == "policy_switch":
+            c["policy_switches"] += 1
+            c["uncond_passes_elided_dynamic"] += ev.get("elided")
         # arrival / phase / occupancy / autotune carry no counter
     return c

@@ -18,6 +18,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.policy import DynamicPlanCursor, ReplayGuidancePolicy
 from repro.core.selective import GuidancePlan, Mode, PlanCursor
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import ArrivalQueue, ServeRequest
@@ -42,6 +43,14 @@ class SimRequest:
                                        # token ids (the engine hashes real
                                        # ids; the sim needs only equality).
                                        # None = unique prompt
+    switch_step: int | None = None     # recorded dynamic FULL->COND switch
+                                       # (harvested from an engine run's
+                                       # policy_switch event): the sim
+                                       # replays it through a
+                                       # ReplayGuidancePolicy cursor and
+                                       # must reproduce the engine's
+                                       # policy_switch/reclaim events
+                                       # exactly. None = static schedule
 
     @property
     def full_steps(self) -> int:
@@ -186,11 +195,29 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
     cursors: dict[str, PlanCursor] = {}
     sim_req: dict[str, SimRequest] = {r.uid: r for r in trace}
     req_of: dict[str, ServeRequest] = {}
-    resume: dict[str, tuple[int, int]] = {}       # uid -> (step, passes)
+    # uid -> (step, passes, realized switch_step, ema) — the engine's
+    # _ResumeState checkpoint fields, minus the tensors
+    resume: dict[str, tuple[int, int, int | None, float]] = {}
+    # checkpoint state driving the reclaim trigger (engine's
+    # _RequestState.uncond_dead): survives preemption so a request
+    # preempted at the boundary reclaims exactly once
+    uncond_dead: dict[str, bool] = {}
     last_scheduled: dict[str, int] = {}
     compiled: set[tuple] = set()       # step shapes already "compiled"
     next_arrival = 0
     tick = 0
+
+    def make_cursor(uid: str, plan: GuidancePlan, *, step: int = 0,
+                    passes: int = 0, switch_step: int | None = None,
+                    ema: float = 0.0) -> PlanCursor:
+        # the engine's _cursor_for: requests carrying a recorded switch
+        # replay it through a DynamicPlanCursor; the rest stay plain
+        sw_at = sim_req[uid].switch_step
+        if sw_at is None:
+            return PlanCursor(plan, step=step, passes_executed=passes)
+        return ReplayGuidancePolicy(plan, sw_at).cursor(
+            step=step, passes_executed=passes, switch_step=switch_step,
+            ema=ema)
 
     def release_uncond(uid: str) -> int:
         # canonical pages freed with the last user count as reclaimed too
@@ -229,7 +256,10 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
         # event order is the engine's _preempt contract:
         # preempt -> host_evict* (LRU victims) -> swap_out
         entry = sched._active[uid]
-        resume[uid] = (cursors[uid].step, cursors[uid].passes_executed)
+        cur = cursors[uid]
+        resume[uid] = (cur.step, cur.passes_executed,
+                       getattr(cur, "switch_step", None),
+                       getattr(cur, "ema", 0.0))
         pool.free(entry.slot)
         metrics.on_preempt(uid, tick)
         swap = plan_swap_out(pages, host, uid, min_pages=swap_min_pages)
@@ -292,7 +322,7 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             if pages is None:
                 queue.pop()
             elif reservation == "lazy" and uid in resume:
-                step, passes = resume[uid]
+                step, passes, sw, ema = resume[uid]
                 if host is not None and host.holds(uid):
                     # restore by copy — the engine's zero-pass path
                     held = host.pages_of(uid)
@@ -308,7 +338,8 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                 else:
                     shared = prefix.lookup(S) is not None
                     need_c, need_u, wants_u, n_share = resume_lazy_needs(
-                        req.plan, step, S, page_size, shared=shared)
+                        req.plan, step, S, page_size, shared=shared,
+                        switch_step=sw)
                     if not free_for_admission(need_c + need_u, uid):
                         break          # head-of-line waits for pages
                     queue.pop()
@@ -323,8 +354,8 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
                         else:
                             pages.alloc(uid, "u", need_u)
                 resumed = True
-                cursor = PlanCursor(req.plan, step=step,
-                                    passes_executed=passes)
+                cursor = make_cursor(uid, req.plan, step=step, passes=passes,
+                                     switch_step=sw, ema=ema)
             elif reservation == "lazy":
                 shared = prefix.lookup(S) is not None
                 need_c, need_u, wants_u = fresh_lazy_needs(
@@ -367,7 +398,9 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             slot = pool.alloc(uid)
             assert slot is not None
             if not resumed:
-                cursor = PlanCursor(req.plan)
+                cursor = make_cursor(uid, req.plan)
+                uncond_dead[uid] = not any(s.mode is Mode.FULL
+                                           for s in req.plan.segments)
             cursors[uid] = cursor
             sched.admit(uid, slot, cursor, arrival=req.arrival,
                         deadline=req.deadline, priority=req.priority)
@@ -423,7 +456,16 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             if not ev.done:
                 metrics.on_token(ev.uid, tick,     # step i emits token i+1
                                  cond=ev.mode is Mode.COND)
-                if ev.mode is Mode.FULL and cursor.mode is Mode.COND:
+                if ev.mode is Mode.FULL \
+                        and isinstance(cursor, DynamicPlanCursor) \
+                        and cursor.observe(0.0):
+                    # replay cursors trigger on step alone — the recorded
+                    # switch re-fires at the engine's exact tick
+                    metrics.on_policy_switch(
+                        ev.uid, tick, step=cursor.switch_step,
+                        elided=cursor.elided_uncond_passes())
+                if not uncond_dead[ev.uid] and cursor.mode is Mode.COND:
+                    uncond_dead[ev.uid] = True
                     metrics.on_phase_transition(ev.uid, tick)
                     if pages is not None:
                         metrics.on_reclaim(ev.uid, tick,

@@ -209,20 +209,25 @@ def fresh_lazy_needs(plan, prompt_len: int, page_size: int, *,
 
 
 def resume_lazy_needs(plan, step: int, prompt_len: int, page_size: int, *,
-                      shared: bool) -> tuple[int, int, bool, int]:
+                      shared: bool,
+                      switch_step: int | None = None) -> tuple[int, int, bool, int]:
     """Pages a preempted request needs to re-admit at plan ``step``.
 
     The cond KV must cover every position already generated
     (``L = prompt_len + step``); the uncond stream is rebuilt only when
-    the cursor still sits in the FULL prefix. A resumed request shares
-    only the *fully prompt-covered* prefix pages (``prompt_len //
-    page_size``): its partial prompt page must be private because the
-    resume forward re-scatters generated positions into it. Returns
-    ``(need_c, need_u_fresh, wants_u, n_share)``.
+    the cursor still sits in the FULL prefix. ``switch_step`` is the
+    checkpointed dynamic-policy switch (DESIGN.md §15): a request that
+    already dropped its uncond stream mid-flight must not rebuild dead
+    uncond pages on resume, even though the *plan* still says FULL. A
+    resumed request shares only the *fully prompt-covered* prefix pages
+    (``prompt_len // page_size``): its partial prompt page must be private
+    because the resume forward re-scatters generated positions into it.
+    Returns ``(need_c, need_u_fresh, wants_u, n_share)``.
     """
     from repro.core.selective import Mode, PlanCursor
     cursor = PlanCursor(plan, step=step)
-    wants_u = (not cursor.done) and cursor.mode is Mode.FULL
+    wants_u = ((not cursor.done) and cursor.mode is Mode.FULL
+               and (switch_step is None or step < switch_step))
     L = prompt_len + step
     need_c = pages_for(L, page_size)
     if not wants_u:

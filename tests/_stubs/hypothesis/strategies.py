@@ -16,6 +16,9 @@ class SearchStrategy:
     def example_from(self, rnd):
         return self._draw(rnd)
 
+    def map(self, fn):
+        return SearchStrategy(lambda rnd: fn(self._draw(rnd)))
+
 
 def integers(min_value: int, max_value: int) -> SearchStrategy:
     def draw(rnd):
@@ -26,7 +29,10 @@ def integers(min_value: int, max_value: int) -> SearchStrategy:
     return SearchStrategy(draw)
 
 
-def floats(min_value: float, max_value: float) -> SearchStrategy:
+def floats(min_value: float, max_value: float,
+           allow_nan: bool | None = None) -> SearchStrategy:
+    # allow_nan accepted for real-hypothesis signature parity; bounded
+    # uniform draws never produce NaN so it is a no-op here.
     def draw(rnd):
         if rnd.random() < _EDGE_P:
             return float(rnd.choice((min_value, max_value)))

@@ -87,14 +87,31 @@ def test_sweep_propagates_scale_and_suffix_shape():
 
 
 def test_suffix_rounding_at_odd_totals():
-    """round() (banker's) decides the COND segment length at odd totals —
-    pinned here because serving-side pass accounting depends on it."""
-    p = GuidancePlan.suffix(7, 0.5)              # 3.5 -> 4 (ties to even)
+    """floor(x + 0.5) half-up rounding decides the COND segment length at
+    odd totals — pinned here because serving-side pass accounting depends
+    on it. (Previously round() — banker's — which sent the .5 ties at odd
+    totals unevenly: suffix(5, 0.5) gave 2 but suffix(7, 0.5) gave 4.)"""
+    p = GuidancePlan.suffix(7, 0.5)              # 3.5 -> 4
     assert p.optimized_steps == 4
     assert p.segments == (Segment(0, 3, Mode.FULL), Segment(3, 7, Mode.COND))
-    assert GuidancePlan.suffix(5, 0.5).optimized_steps == 2   # 2.5 -> 2
+    assert GuidancePlan.suffix(5, 0.5).optimized_steps == 3   # 2.5 -> 3 (half-up)
     assert GuidancePlan.suffix(51, 0.5).optimized_steps == 26
     assert GuidancePlan.suffix(3, 1 / 3).optimized_steps == 1
+
+
+@given(total=st.integers(min_value=1, max_value=200),
+       fracs=st.lists(st.floats(min_value=0.0, max_value=1.0,
+                                allow_nan=False), min_size=2, max_size=8))
+def test_sweep_monotone_in_fraction(total, fracs):
+    """Half-up rounding makes optimized_steps non-decreasing across a
+    fraction sweep — banker's rounding broke this at .5 ties."""
+    fracs = sorted(fracs)
+    plans = sweep(total, fracs)
+    opt = [p.optimized_steps for p in plans]
+    assert opt == sorted(opt)
+    for p, f in zip(plans, fracs):
+        # within one step of the exact target, always
+        assert abs(p.optimized_steps - total * f) <= 0.5
 
 
 def test_suffix_degenerate_fractions():
