@@ -64,15 +64,29 @@ interval-gated Eq. 1). The recorded switch steps replayed through the
 offline simulator must reproduce the engine's event stream and the new
 ``policy_switches`` / ``uncond_passes_elided_dynamic`` counters exactly.
 
+Part 10 (``--replicas N``, N > 1): the fleet tier (DESIGN.md §16) —
+N engine replicas behind the prefix-affinity router vs the seeded
+random-routing baseline at **equal total device pool bytes** on the
+Zipf ``popular`` trace. Affinity routing sends repeat prompts to the
+replica whose content cache holds them, so it must produce strictly
+more prefix hits and strictly fewer total forward passes (random
+routing re-prefills the head prompt once per replica it lands on);
+token outputs are identical either way, and ``simulate_fleet`` must
+reproduce every replica's counters and event stream exactly. With
+``--trace-out`` the whole fleet renders as one Chrome-trace timeline
+(per-replica pids); single-replica trace files are unchanged.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput [--tiny] \
         [--kv paged] [--reservation lazy] [--kv-dtype int8] \
         [--step auto|ragged|signature] [--trace-out trace.json] \
-        [--policy static|divergence|interval] [--combine cfg|apg|interval]
+        [--policy static|divergence|interval] [--combine cfg|apg|interval] \
+        [--replicas N]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -83,10 +97,11 @@ from repro.core.selective import GuidancePlan
 from repro.data.prompts import PAPER_PROMPTS
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.serve import (ContinuousEngine, ServeMetrics, ServeRequest,
-                         SimRequest, host_pages_for_bytes, kv_page_bytes,
-                         pages_for, pages_for_pool_bytes, poisson_arrivals,
-                         simulate, write_chrome_trace)
+from repro.serve import (ContinuousEngine, ServeFleet, ServeMetrics,
+                         ServeRequest, SimRequest, fleet_chrome_trace,
+                         host_pages_for_bytes, kv_page_bytes, pages_for,
+                         pages_for_pool_bytes, poisson_arrivals, simulate,
+                         simulate_fleet, write_chrome_trace)
 from repro.serving import Request, ServingEngine
 
 FRACTIONS = [0.0, 0.2, 0.5]
@@ -551,12 +566,101 @@ def _dynamic_vs_full(params, cfg, *, n_req: int, prompt_len: int,
             "sim_matches": True}
 
 
+def _fleet_routing(params, cfg, *, n_replicas: int, seed: int = 0,
+                   page_size: int = 4,
+                   trace_out: str | None = None) -> dict:
+    """§16 acceptance: prefix-affinity routing vs the seeded random
+    baseline across ``n_replicas`` identical engines at **equal total
+    device pool bytes** (every replica gets the same pool either way).
+
+    The Zipf ``popular`` trace (arrivals one tick apart, dense enough
+    that the per-replica uncond prefix registry entries stay live
+    between repeats) is routed through both policies. Token outputs are
+    identical — placement changes the work, never the result — but
+    affinity keeps every repeat of the head prompt on its founding
+    replica's content cache, so it must win on prefix hits and total
+    forward passes strictly. ``simulate_fleet`` routes the same trace
+    with the same (pure) router and must reproduce each replica's
+    counters and event stream exactly."""
+    n_req, prompt_len, max_new = 16, 8, 8
+    plan = GuidancePlan.suffix(max_new, 0.5, 4.0)
+    arrivals = list(range(n_req))
+    picks = _popular_prompts(seed, n_req)
+    eng_kw = dict(num_slots=6, pass_budget=12, prompt_len=prompt_len,
+                  max_new=max_new, stop_on_eos=False, kv="paged",
+                  page_size=page_size, num_pages=64, reservation="lazy",
+                  prefix_cache="content", prefills_per_tick=2)
+
+    tokens, summ, fleets = {}, {}, {}
+    for pol in ("affinity", "random"):
+        fleet = ServeFleet([ContinuousEngine(params, cfg, **eng_kw)
+                            for _ in range(n_replicas)],
+                           policy=pol, seed=7)
+        reqs = [ServeRequest(uid=f"f{i:02d}", prompt=PAPER_PROMPTS[picks[i]],
+                             max_new_tokens=max_new, plan=plan,
+                             prompt_len=prompt_len) for i in range(n_req)]
+        tokens[pol] = fleet.serve_trace(reqs, arrivals)
+        assert len(tokens[pol]) == n_req
+        s = fleet.summary()
+        summ[pol], fleets[pol] = s, fleet
+        emit(f"serve/fleet_{pol}",
+             s["prefill_passes"] + s["denoiser_passes"],
+             f"replicas={n_replicas};hits={s['prefix_hits']};"
+             f"hit_rate={s['prefix_hit_rate']:.2f};"
+             f"prefill={s['prefill_passes']};"
+             f"decode={s['denoiser_passes']};"
+             f"spread={'/'.join(map(str, fleet.router.assigned_count))}")
+    assert tokens["affinity"] == tokens["random"], \
+        "routing must change the work, never the tokens"
+    total = {p: summ[p]["prefill_passes"] + summ[p]["denoiser_passes"]
+             for p in summ}
+    assert summ["affinity"]["prefix_hits"] > summ["random"]["prefix_hits"], \
+        f"affinity must win prefix hits: {summ}"
+    assert total["affinity"] < total["random"], \
+        f"affinity must do strictly fewer total passes: {total}"
+
+    # router sim == per-replica engine runs (the §16 parity acceptance)
+    sim = simulate_fleet(
+        [SimRequest(f"f{i:02d}", arrivals[i], plan, prompt_len=prompt_len,
+                    content=f"p{picks[i]}") for i in range(n_req)],
+        n_replicas, policy="affinity", seed=7, page_size=page_size,
+        **{k: eng_kw[k] for k in ("num_slots", "pass_budget", "kv",
+                                  "num_pages", "reservation",
+                                  "prefix_cache", "prefills_per_tick")})
+    fleet = fleets["affinity"]
+    assert sim.assignments == fleet.assignments, "router placement diverged"
+    for rid, (em, sm) in enumerate(zip(fleet.metrics, sim.metrics)):
+        assert em.trace.keys() == sm.trace.keys(), \
+            f"replica {rid}: sim event stream diverged"
+        for key in ("completed", "denoiser_passes", "prefill_passes",
+                    "prefix_hits", "prefix_misses", "tokens_emitted"):
+            got, want = getattr(sm, key), getattr(em, key)
+            assert got == want, f"replica {rid} sim {key}={got} != {want}"
+
+    if trace_out:
+        doc = fleet_chrome_trace(fleet.metrics)
+        with open(trace_out, "w") as f:
+            json.dump(doc, f)
+        emit("serve/fleet_trace", len(doc["traceEvents"]),
+             f"out={trace_out};replicas={doc['otherData']['replicas']};"
+             f"spans={doc['otherData']['request_spans']}")
+    return {"replicas": n_replicas, "total_passes": total,
+            "affinity": summ["affinity"], "random": summ["random"],
+            "sim_matches": True}
+
+
 def run(tiny: bool = False, kv: str = "slot",
         reservation: str = "eager", kv_dtype: str = "bf16",
         step: str = "auto", trace_out: str | None = None,
         host_pool_bytes: int = 0, trace: str = "popular",
         only_tier: bool = False, policy: str = "static",
-        combine: str = "cfg", divergence_threshold: float = 1e9) -> dict:
+        combine: str = "cfg", divergence_threshold: float = 1e9,
+        replicas: int = 1) -> dict:
+    # with a fleet, --trace-out means the merged fleet timeline; the
+    # single-replica export path below stays exactly as it was
+    fleet_trace_out = None
+    if replicas > 1 and trace_out:
+        fleet_trace_out, trace_out = trace_out, None
     if host_pool_bytes:
         reservation = "lazy"                        # only lazy preempts
     if step == "ragged":
@@ -617,6 +721,9 @@ def run(tiny: bool = False, kv: str = "slot",
             params, cfg, n_req=n_req, prompt_len=prompt_len,
             max_new=max_new, batch=batch, policy=policy, combine=combine,
             divergence_threshold=divergence_threshold)
+    if replicas > 1:
+        out["fleet_routing"] = _fleet_routing(
+            params, cfg, n_replicas=replicas, trace_out=fleet_trace_out)
     return out
 
 
@@ -672,6 +779,11 @@ if __name__ == "__main__":
                          "divergence policy drops the uncond stream (the "
                          "huge default fires at the first observation — "
                          "the aggressive CI smoke)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas; >1 runs the fleet routing "
+                         "comparison (prefix-affinity vs random at equal "
+                         "total pool bytes, DESIGN.md §16) and makes "
+                         "--trace-out export the merged fleet timeline")
     args = ap.parse_args()
     out = run(tiny=args.tiny, kv=args.kv, reservation=args.reservation,
               kv_dtype=args.kv_dtype, step=args.step,
@@ -679,7 +791,8 @@ if __name__ == "__main__":
               host_pool_bytes=args.host_pool_bytes, trace=args.trace,
               only_tier=args.only_tier, policy=args.policy,
               combine=args.combine,
-              divergence_threshold=args.divergence_threshold)
+              divergence_threshold=args.divergence_threshold,
+              replicas=args.replicas)
     if "tiered_vs_lazy" in out:
         tv = out["tiered_vs_lazy"]
         st = tv["tiered"]
@@ -746,6 +859,15 @@ if __name__ == "__main__":
               f"uncond_passes_elided_dynamic="
               f"{dv['uncond_passes_elided_dynamic']} "
               f"(sim reproduces: {dv['sim_matches']})")
+    if "fleet_routing" in out:
+        fr = out["fleet_routing"]
+        aff, rnd = fr["affinity"], fr["random"]
+        print(f"fleet @ {fr['replicas']} replicas (popular trace): "
+              f"affinity hits={aff['prefix_hits']} "
+              f"total passes={fr['total_passes']['affinity']} vs random "
+              f"hits={rnd['prefix_hits']} "
+              f"total passes={fr['total_passes']['random']} "
+              f"(sim reproduces: {fr['sim_matches']})")
     if "int8_vs_bf16" in out:
         q = out["int8_vs_bf16"]
         print(f"kv-dtype @ {q['pool_bytes']/2**20:.2f}MiB pool: "

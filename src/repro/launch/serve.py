@@ -6,11 +6,18 @@
     # phase-aware continuous batching under a Poisson-ish arrival trace
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
         --mode continuous --requests 16 --rate 1.5 --pass-budget 8
+
+    # fleet: N replicas behind the prefix-affinity router (DESIGN.md §16),
+    # async double-buffered ticks overlapping host scheduling with the step
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+        --mode continuous --kv paged --reservation lazy \
+        --prefix-cache content --replicas 2 --async-ticks
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 
@@ -18,7 +25,8 @@ from repro.configs import get_config
 from repro.data.prompts import PAPER_PROMPTS
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.serve import (ContinuousEngine, ServeRequest, poisson_arrivals,
+from repro.serve import (ContinuousEngine, ServeFleet, ServeRequest,
+                         fleet_chrome_trace, poisson_arrivals,
                          write_chrome_trace)
 from repro.serving import Request, ServingEngine
 
@@ -44,36 +52,84 @@ def run_static(params, cfg, args) -> None:
         print(f"           sample[{sample_uid}]: {out[sample_uid][:16]}")
 
 
+def _make_engine(params, cfg, args) -> ContinuousEngine:
+    budget = "auto" if args.pass_budget == "auto" \
+        else (int(args.pass_budget) or 2 * args.batch)
+    swap_min = args.swap_min_pages if args.swap_min_pages == "auto" \
+        else int(args.swap_min_pages)
+    return ContinuousEngine(params, cfg, num_slots=args.slots or 2 * args.batch,
+                            pass_budget=budget,
+                            prompt_len=args.prompt_len, max_new=args.max_new,
+                            selective_fraction=args.fraction, seed=args.seed,
+                            stop_on_eos=False, kv=args.kv,
+                            page_size=args.page_size,
+                            reservation=args.reservation,
+                            kv_dtype=args.kv_dtype,
+                            host_pool_bytes=args.host_pool_bytes,
+                            swap_min_pages=swap_min,
+                            prefix_cache=args.prefix_cache,
+                            step_mode=None if args.step == "auto"
+                            else args.step,
+                            guidance_policy=args.policy,
+                            combine=args.combine,
+                            divergence_threshold=args.divergence_threshold,
+                            interval=tuple(args.interval),
+                            tick_mode="async" if args.async_ticks
+                            else "sync")
+
+
+def _trace_requests(args) -> tuple[list[ServeRequest], list[float]]:
+    arrivals = poisson_arrivals(args.seed, n=args.requests, rate=args.rate)
+    reqs = [ServeRequest(uid=f"c{i}",
+                         prompt=PAPER_PROMPTS[i % len(PAPER_PROMPTS)],
+                         max_new_tokens=args.max_new,
+                         guidance_scale=args.guidance_scale)
+            for i in range(args.requests)]
+    return reqs, arrivals
+
+
+def run_fleet(params, cfg, args) -> None:
+    """N replicas behind the prefix-affinity (or random) router; every
+    replica is the engine ``run_continuous`` would have built."""
+    fleet = ServeFleet([_make_engine(params, cfg, args)
+                        for _ in range(args.replicas)],
+                       policy=args.route, seed=args.seed)
+    reqs, arrivals = _trace_requests(args)
+    out = fleet.serve_trace(reqs, arrivals)
+    assert len(out) == len(reqs)
+    s = fleet.summary()
+    print(f"[fleet     ] replicas={args.replicas} route={args.route} "
+          f"completed={s['completed']} "
+          f"spread={'/'.join(map(str, fleet.router.assigned_count))}")
+    print(f"[fleet     ] prefill={s['prefill_passes']} "
+          f"decode={s['denoiser_passes']} prefix_hits={s['prefix_hits']} "
+          f"hit_rate={s['prefix_hit_rate']:.2f} "
+          f"passes_saved={s['passes_saved']} "
+          f"({s['savings_fraction']:.1%} of full CFG)")
+    ttft, tpot = s["ttft"], s["tpot"]
+    print(f"[fleet obs ] ttft p50/p95/p99={ttft['p50']}/{ttft['p95']}/"
+          f"{ttft['p99']} tpot p50/p95/p99={tpot['p50']}/{tpot['p95']}/"
+          f"{tpot['p99']} (ticks, merged histograms)")
+    for rid, m in enumerate(fleet.metrics):
+        print(f"[replica {rid} ] completed={m.completed} "
+              f"passes={m.denoiser_passes} prefix_hits={m.prefix_hits} "
+              f"ticks={m.ticks}")
+    if args.trace_out:
+        doc = fleet_chrome_trace(fleet.metrics)
+        with open(args.trace_out, "w") as f:
+            json.dump(doc, f)
+        print(f"[trace     ] {args.trace_out}: one timeline, "
+              f"{doc['otherData']['replicas']} replicas, "
+              f"{doc['otherData']['request_spans']} request spans")
+
+
 def run_continuous(params, cfg, args) -> None:
     """Poisson-ish arrivals into the phase-aware engine, vs the static
     facade at the same pass budget."""
     budget = "auto" if args.pass_budget == "auto" \
         else (int(args.pass_budget) or 2 * args.batch)
-    slots = args.slots or 2 * args.batch
-    arrivals = poisson_arrivals(args.seed, n=args.requests, rate=args.rate)
-    reqs = [ServeRequest(uid=f"c{i}", prompt=PAPER_PROMPTS[i % len(PAPER_PROMPTS)],
-                         max_new_tokens=args.max_new,
-                         guidance_scale=args.guidance_scale)
-            for i in range(args.requests)]
-
-    swap_min = args.swap_min_pages if args.swap_min_pages == "auto" \
-        else int(args.swap_min_pages)
-    eng = ContinuousEngine(params, cfg, num_slots=slots, pass_budget=budget,
-                           prompt_len=args.prompt_len, max_new=args.max_new,
-                           selective_fraction=args.fraction, seed=args.seed,
-                           stop_on_eos=False, kv=args.kv,
-                           page_size=args.page_size,
-                           reservation=args.reservation,
-                           kv_dtype=args.kv_dtype,
-                           host_pool_bytes=args.host_pool_bytes,
-                           swap_min_pages=swap_min,
-                           prefix_cache=args.prefix_cache,
-                           step_mode=None if args.step == "auto"
-                           else args.step,
-                           guidance_policy=args.policy,
-                           combine=args.combine,
-                           divergence_threshold=args.divergence_threshold,
-                           interval=tuple(args.interval))
+    eng = _make_engine(params, cfg, args)
+    reqs, arrivals = _trace_requests(args)
     eng.serve_trace(reqs, arrivals)
     print(f"[continuous] {eng.metrics.summary()}")
     print(f"[step={eng.step_mode:9s}] "
@@ -207,6 +263,21 @@ def main() -> None:
                     metavar=("START", "STOP"),
                     help="continuous: guidance interval as fractions of the "
                          "plan (with --policy interval / --combine interval)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="continuous: engine replicas behind the fleet "
+                         "router; >1 routes the trace instead of serving "
+                         "it on one engine (DESIGN.md §16)")
+    ap.add_argument("--route", choices=["affinity", "random"],
+                    default="affinity",
+                    help="continuous --replicas N: placement policy — "
+                         "prefix-affinity (repeat prompts to the replica "
+                         "whose content cache holds them) or the seeded "
+                         "random baseline")
+    ap.add_argument("--async-ticks", action="store_true",
+                    help="continuous: double-buffered tick pipeline — "
+                         "host-side scheduling for tick t+1 overlaps tick "
+                         "t's device step (requires --kv paged; token "
+                         "streams identical to sync, DESIGN.md §16)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--fraction", type=float, default=0.2,
@@ -236,6 +307,17 @@ def main() -> None:
     if args.swap_min_pages == "auto" and args.pass_budget != "auto":
         ap.error("--swap-min-pages auto prices the break-even off the "
                  "roofline autotuner: set --pass-budget auto")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.replicas > 1 and args.mode != "continuous":
+        ap.error("--replicas > 1 needs --mode continuous (the fleet "
+                 "routes the continuous engine)")
+    if args.async_ticks and args.kv != "paged":
+        ap.error("--async-ticks requires --kv paged (the pipeline "
+                 "double-buffers ragged block tables)")
+    if args.async_ticks and args.policy != "static":
+        ap.error("--async-ticks requires --policy static (dynamic "
+                 "switches read divergence mid-tick)")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -244,7 +326,9 @@ def main() -> None:
                          "(DESIGN.md §5)")
 
     params = T.init_model(cfg, L.ArrayMaker(jax.random.PRNGKey(args.seed)))
-    if args.mode == "continuous":
+    if args.replicas > 1:
+        run_fleet(params, cfg, args)
+    elif args.mode == "continuous":
         run_continuous(params, cfg, args)
     else:
         run_static(params, cfg, args)

@@ -95,13 +95,15 @@ from repro.serve.autotune import BudgetAutotuner
 from repro.serve.metrics import ServeMetrics
 from repro.serve.obs import TickTimer
 from repro.serve.queue import ArrivalQueue, ServeRequest
-from repro.serve.scheduler import (Scheduler, TickPlan, bucket_pow2,
-                                   provision_growth)
+from repro.serve.scheduler import (Scheduler, TickPlan, admission_cutoff,
+                                   bucket_pow2, provision_growth)
 from repro.serve.state import (ContentPrefixRegistry, HostPagePool,
                                PageAllocator, PrefixShareRegistry, StatePool,
                                content_key, fresh_lazy_needs,
-                               host_pages_for_bytes, kv_page_bytes, pages_for,
-                               plan_swap_out, resume_lazy_needs,
+                               host_pages_for_bytes, kv_page_bytes,
+                               paged_pool_shardings, pages_for,
+                               pages_shard_count, plan_swap_out,
+                               pool_partition_specs, resume_lazy_needs,
                                stream_page_needs)
 
 KV_MODES = ("slot", "paged")
@@ -110,6 +112,7 @@ RESERVATION_MODES = ("eager", "lazy")
 STEP_MODES = ("signature", "ragged")
 PREFIX_CACHE_MODES = ("length", "content")
 COMBINE_MODES = ("cfg", "apg", "interval")
+TICK_MODES = ("sync", "async")
 
 
 def _sample(logits, key, temperature):
@@ -222,6 +225,50 @@ class _PrefillItem:
                                           # the content entry's payload
 
 
+class _DeferredMetrics:
+    """Captures metric calls made during the async overlap window.
+
+    The pipelined admission for tick t+1 is decided while tick t's step
+    runs on device, but its events (expire, cache-evict) belong to tick
+    t+1's stream position — *after* tick t's token events. The overlap
+    code runs against this recorder instead of the live ``ServeMetrics``;
+    ``replay`` re-issues the calls in decision order at the start of tick
+    t+1's admit phase, so the event stream is ordered exactly as a
+    synchronous engine (and the simulator) would emit it.
+    """
+
+    def __init__(self):
+        self.calls: list[tuple[str, tuple, dict]] = []
+
+    def __getattr__(self, name: str):
+        if not name.startswith("on_"):
+            raise AttributeError(name)
+
+        def record(*args, **kwargs):
+            self.calls.append((name, args, kwargs))
+
+        return record
+
+    def replay(self, metrics) -> None:
+        for name, args, kwargs in self.calls:
+            getattr(metrics, name)(*args, **kwargs)
+
+
+class _AdmitStash:
+    """One tick's admission decisions, staged for deferred bookkeeping.
+
+    ``_admit_collect`` produces this in both tick modes: sync consumes it
+    immediately, async carries it across the overlap boundary (decided
+    during tick t, bookkept at tick t+1).
+    """
+
+    def __init__(self, batch: list[_PrefillItem], groups: list[tuple]):
+        self.batch = batch
+        # (items, tok0, l_c, l_u) per length bucket — device handles,
+        # unforced until _admit_bookkeep harvests them
+        self.groups = groups
+
+
 class ContinuousEngine:
     """Phase-aware continuous batching over a slot or paged KV arena.
 
@@ -254,13 +301,34 @@ class ContinuousEngine:
                  combine: str = "cfg",
                  apg_eta: float = 0.0,
                  apg_threshold: float = 0.0,
-                 interval: tuple[float, float] = (0.0, 1.0)):
+                 interval: tuple[float, float] = (0.0, 1.0),
+                 mesh=None,
+                 tick_mode: str = "sync"):
         if kv not in KV_MODES:
             raise ValueError(f"kv {kv!r} not in {KV_MODES}")
         if step_mode is None:
             step_mode = "ragged" if kv == "paged" else "signature"
         if step_mode not in STEP_MODES:
             raise ValueError(f"step_mode {step_mode!r} not in {STEP_MODES}")
+        if tick_mode not in TICK_MODES:
+            raise ValueError(f"tick_mode {tick_mode!r} not in {TICK_MODES}")
+        if tick_mode == "async":
+            if kv != "paged" or step_mode != "ragged":
+                raise ValueError('tick_mode="async" requires kv="paged" '
+                                 'and step_mode="ragged" (the pipeline '
+                                 "overlaps the one-compile ragged step)")
+            if stop_on_eos:
+                raise ValueError('tick_mode="async" requires '
+                                 "stop_on_eos=False: completion must be "
+                                 "cursor-driven so tick t+1's admission "
+                                 "can be decided before tick t's tokens "
+                                 "are harvested")
+            if guidance_policy != "static":
+                raise ValueError('tick_mode="async" requires '
+                                 'guidance_policy="static": a dynamic '
+                                 "switch reads tick t's divergence "
+                                 "signal, which the pipeline has not "
+                                 "harvested when t+1 is decided")
         if step_mode == "ragged" and kv != "paged":
             raise ValueError('step_mode="ragged" requires kv="paged" (the '
                              "flat pass list addresses KV through block "
@@ -318,7 +386,14 @@ class ContinuousEngine:
         self.max_new = max_new
         self.capacity = prompt_len + max_new
         self.selective_fraction = selective_fraction
+        if mesh is not None and rules is None:
+            # sharded arena without an explicit rule table: the serve
+            # rules already name the pages/page logical axes
+            from repro.dist.sharding import RULES_SERVE
+            rules = RULES_SERVE
         self.rules = rules
+        self.mesh = mesh
+        self.tick_mode = tick_mode
         self.stop_on_eos = stop_on_eos
         self.guidance_policy = guidance_policy
         self.divergence_threshold = divergence_threshold
@@ -358,13 +433,26 @@ class ContinuousEngine:
         self.pages: PageAllocator | None = None
         self._prefix: PrefixShareRegistry | None = None
         self._resume: dict[str, _ResumeState] = {}
+        self._pool_shards = pages_shard_count(self.rules, mesh) \
+            if (kv == "paged" and mesh is not None and rules is not None) \
+            else 1
         if kv == "paged":
             # fail fast on unpageable stacks (recurrent state, MLA latents)
             from repro.models import layers as L
             T.paged_cache_specs(cfg, L.AxesMaker(), 1, page_size,
                                 kv_dtype=kv_dtype)
-            self.num_pages = num_pages if num_pages is not None \
-                else 2 * num_slots * self.nb_max
+            if num_pages is not None:
+                # explicit count is honored as-is: an indivisible pool
+                # falls down the logical_to_spec chain (partial subset or
+                # replicated) instead of silently resizing
+                self.num_pages = num_pages
+            else:
+                self.num_pages = 2 * num_slots * self.nb_max
+                if self._pool_shards > 1:
+                    # uniform shard shapes: the default pool rounds up to
+                    # one whole page multiple per mesh shard
+                    s = self._pool_shards
+                    self.num_pages = -(-self.num_pages // s) * s
             self.pages = PageAllocator(self.num_pages, page_size,
                                        kv_dtype=kv_dtype)
             if reservation == "lazy":
@@ -403,6 +491,10 @@ class ContinuousEngine:
         self._pool_c = None                    # slot: cond arena
         self._pool_u = None                    # slot: uncond arena
         self._pool_p = None                    # paged: the shared page pool
+        # async pipeline state: (tick, deferred metric calls, admissions)
+        # decided during the previous tick's overlap window
+        self._stash: tuple | None = None
+        self._staging = None                   # double-buffered ragged args
 
     # -- public API --------------------------------------------------------
 
@@ -428,9 +520,20 @@ class ContinuousEngine:
             self.metrics.on_reject(req.uid, self.tick_count)
         return ok
 
+    @property
+    def _has_pending(self) -> bool:
+        """Async: the previous tick's overlap window left work that must
+        replay next tick — deferred events (e.g. an expiry decided during
+        overlap) or staged admissions. Stashed admissions also hold
+        scheduler slots, but a pure-event stash would otherwise strand."""
+        if self._stash is None:
+            return False
+        _, rec, stash = self._stash
+        return bool(rec.calls) or stash is not None
+
     def drain(self, max_ticks: int = 100_000) -> None:
         """Tick until queue and slots are empty."""
-        while len(self.queue) or self.scheduler.n_active:
+        while len(self.queue) or self.scheduler.n_active or self._has_pending:
             if self.tick_count >= max_ticks:
                 raise RuntimeError(f"engine did not drain in {max_ticks} ticks")
             self.tick()
@@ -447,7 +550,8 @@ class ContinuousEngine:
         trace driver shared by the launcher and the benchmarks."""
         start = self.tick_count
         i = 0
-        while i < len(requests) or self.scheduler.n_active or len(self.queue):
+        while i < len(requests) or self.scheduler.n_active \
+                or len(self.queue) or self._has_pending:
             if self.tick_count - start >= max_ticks:
                 raise RuntimeError(f"trace did not drain in {max_ticks} ticks")
             while i < len(requests) and \
@@ -459,19 +563,15 @@ class ContinuousEngine:
                 if r.uid in self.results}
 
     def tick(self) -> TickPlan:
+        if self.tick_mode == "async":
+            return self._tick_async()
         timer = TickTimer(self.tick_count)
         now = self.tick_count
         # metrics objects are replaceable (benchmarks reset them between
         # warmup and measurement): keep the byte pricing installed
         self.metrics.page_bytes = self.page_bytes
         with timer.phase("admit"):
-            for dead in self.queue.expire(now):
-                had_ckpt = self._resume.pop(dead.uid, None) is not None
-                self.metrics.on_expire(dead.uid, now)  # ttl keeps running
-                if had_ckpt and self._host is not None:   # queued; drop the
-                    freed = self._host.drop(dead.uid)     # host checkpoint
-                    if freed:                             # with it — no leak
-                        self.metrics.on_host_evict(dead.uid, now, freed)
+            self._expire_queue(now)
             if self._autotuner is not None and not self._autotuner.per_pass_s:
                 self.autotune_budget()
             if self.kv == "paged":
@@ -542,6 +642,136 @@ class ContinuousEngine:
                 budget=plan.budget, active=self.scheduler.n_active,
                 queue_depth=len(self.queue),
                 pages_in_use=self.pages.n_in_use if self.pages else 0)
+        self.metrics.on_tick_timing(timer.finish())
+        self.tick_count += 1
+        return plan
+
+    def _expire_queue(self, now: int) -> None:
+        for dead in self.queue.expire(now):
+            had_ckpt = self._resume.pop(dead.uid, None) is not None
+            self.metrics.on_expire(dead.uid, now)      # ttl keeps running
+            if had_ckpt and self._host is not None:    # queued; drop the
+                freed = self._host.drop(dead.uid)      # host checkpoint
+                if freed:                              # with it — no leak
+                    self.metrics.on_host_evict(dead.uid, now, freed)
+
+    def _tick_async(self) -> TickPlan:
+        """One pipelined tick (DESIGN.md §16).
+
+        Tick ``now``'s admissions were *decided* during tick ``now-1``'s
+        overlap window (the stash); this tick replays their deferred
+        events and bookkeeping, schedules and dispatches the ragged step
+        without blocking, then — while the device works — decides tick
+        ``now+1``'s expiries and admissions. Only the final harvest
+        blocks on the step's outputs. The decision procedures are the
+        exact functions the synchronous tick runs (``_admit_collect``,
+        ``provision_growth``, ``Scheduler.commit``), and every metric
+        emission is sequenced to the synchronous order, so counters,
+        event streams and token values are identical to ``tick_mode=
+        "sync"`` on admission-order-preserving traces.
+        """
+        timer = TickTimer(self.tick_count)
+        now = self.tick_count
+        self.metrics.page_bytes = self.page_bytes
+        with timer.phase("admit"):
+            if self._autotuner is not None and not self._autotuner.per_pass_s:
+                self.autotune_budget()
+            if self._stash is not None:
+                stamp, rec, stash = self._stash
+                self._stash = None
+                assert stamp == now, (stamp, now)
+                rec.replay(self.metrics)
+                if stash is not None:
+                    self._admit_bookkeep(stash, now)
+            elif admission_cutoff(now, pipelined=True) == now:
+                # tick 0: no prior overlap window, and the shared cutoff
+                # says arrivals at `now` are still admissible — the
+                # pipeline fills inline
+                self._expire_queue(now)
+                stash = self._admit_collect(now)
+                if stash is not None:
+                    self._admit_bookkeep(stash, now)
+            self.metrics.note_pages(self.pages.n_in_use, now)
+        with timer.phase("schedule"):
+            plan = self.scheduler.plan_tick()
+            if self.reservation == "lazy" and plan.in_flight:
+                plan = provision_growth(
+                    plan, self.scheduler, self.pages,
+                    page_size=self.page_size,
+                    pos_of=lambda uid: int(
+                        self._slots.pos[self._states[uid].slot]),
+                    metrics=self.metrics,
+                    preempt=lambda uid: self._preempt(uid, now),
+                    copy_page=self._copy_page,
+                    reclaim_cache=self._reclaim_cache,
+                    now=now)
+                self.metrics.note_pages(self.pages.n_in_use, now)
+        with timer.phase("step"):
+            handles = None
+            if plan.in_flight:
+                self.metrics.on_step_launch(self.tick_count)
+                handles = self._dispatch_ragged(plan)
+        with timer.phase("finalize"):
+            # structural finalize runs *before* the overlap window so
+            # tick now+1's admission decisions see completed requests'
+            # pages (and COND-transition uncond pages) back in the pool —
+            # exactly the state a synchronous tick would leave. Token
+            # values are not needed for any of it (async mode pins
+            # stop_on_eos=False and the static policy), so nothing here
+            # blocks on the device.
+            events = self.scheduler.commit(plan)
+            pending = []
+            for ev in events:
+                state = self._states[ev.uid]
+                if ev.done:
+                    passes = state.cursor.passes_executed
+                    self._finalize_state(ev.uid)
+                    pending.append(("done", ev.uid, passes))
+                    continue
+                freed = None
+                cursor = state.cursor
+                if not state.uncond_dead and not cursor.done \
+                        and cursor.mode is Mode.COND:
+                    state.uncond_dead = True
+                    freed = self._release_uncond(ev.uid)
+                pending.append(("tok", ev.uid, state.slot, ev.mode, freed))
+            # record_tick inputs snapshot the synchronous end-of-tick
+            # state, before the overlap mutates queue/scheduler/pool
+            snap = (self.scheduler.n_active, len(self.queue),
+                    self.pages.n_in_use)
+        with timer.phase("overlap"):
+            # host-side scheduling for tick now+1 overlaps the in-flight
+            # device step; its metric calls are captured for replay so
+            # the event stream keeps the synchronous order
+            rec = _DeferredMetrics()
+            real, self.metrics = self.metrics, rec
+            try:
+                self._expire_queue(now + 1)
+                stash = self._admit_collect(now + 1)
+            finally:
+                self.metrics = real
+            self._stash = (now + 1, rec, stash)
+        with timer.phase("finalize"):
+            sampled = self._harvest_ragged(*handles)[0] \
+                if handles is not None else []
+            for info, nxt in zip(pending, sampled):
+                if info[0] == "done":
+                    _, uid, passes = info
+                    self.metrics.on_complete(uid, now, passes)
+                    continue
+                _, uid, slot, mode, freed = info
+                self._states[uid].generated.append(int(nxt))
+                self._slots.tok[slot] = nxt
+                self._slots.pos[slot] += 1
+                self._slots.lstep[slot] += 1
+                self.metrics.on_token(uid, now, cond=mode is Mode.COND)
+                if freed is not None:
+                    self.metrics.on_phase_transition(uid, now)
+                    self.metrics.on_reclaim(uid, now, freed)
+            self.metrics.record_tick(
+                now, n_full=plan.n_full, n_cond=plan.n_cond,
+                budget=plan.budget, active=snap[0], queue_depth=snap[1],
+                pages_in_use=snap[2])
         self.metrics.on_tick_timing(timer.finish())
         self.tick_count += 1
         return plan
@@ -673,6 +903,13 @@ class ContinuousEngine:
             self.metrics.on_token(req.uid, now)       # TTFT: prefill emits
 
     def _admit_paged(self, now: int) -> None:
+        """Synchronous admission: decide + prefill, then bookkeep, in one
+        tick. The async tick runs the same two halves one tick apart."""
+        stash = self._admit_collect(now)
+        if stash is not None:
+            self._admit_bookkeep(stash, now)
+
+    def _admit_collect(self, now: int) -> _AdmitStash | None:
         """Pop admissible requests, then prefill them in per-length-bucket
         batches — one compile serves k>1 simultaneous admissions of a
         bucket. Under ``reservation="eager"`` admission requires the full
@@ -680,7 +917,12 @@ class ContinuousEngine:
         (decode pages grow on demand), the uncond prompt prefix is shared
         through the canonical registry, and preempted requests re-admit
         through the same batched prefill (their KV rebuilt from
-        prompt + generated tokens, no token emitted)."""
+        prompt + generated tokens, no token emitted).
+
+        This is the *decision* half (PR 4 discipline: one procedure for
+        sync, async and the simulator): it claims slots/pages, dispatches
+        the prefill forwards and returns the stash; the queue-order
+        metric bookkeeping lives in ``_admit_bookkeep``."""
         quota = min(self.scheduler.admission_quota(self.pool.n_free),
                     self.prefills_per_tick)
         batch: list[_PrefillItem] = []
@@ -701,7 +943,7 @@ class ContinuousEngine:
                 break                         # head-of-line waits for pages
             batch.append(item)
         if not batch:
-            return
+            return None
         if self._pool_p is None:
             self._init_paged_pool()
         groups: dict[int, list] = {}
@@ -709,10 +951,38 @@ class ContinuousEngine:
             if item.restore or item.cached is not None:
                 continue               # no forward: host restore / replay
             groups.setdefault(_bucket(item.true_len), []).append(item)
-        tok0_of: dict[str, int] = {}
+        prefills = []
         for Sb in sorted(groups):
-            tok0_of.update(self._prefill_paged_group(Sb, groups[Sb]))
-        for it in batch:
+            its = groups[Sb]
+            prefills.append((its,) + self._prefill_paged_group(Sb, its))
+        return _AdmitStash(batch, prefills)
+
+    def _admit_bookkeep(self, stash: _AdmitStash, now: int) -> None:
+        """Harvest the stashed prefill results (this is where the host
+        first blocks on the device) and emit the admission events. Split
+        from ``_admit_collect`` so the async tick can run the decision
+        half inside the overlap window and replay this half — with the
+        captured event stream — at the next tick's admit phase."""
+        tok0_of: dict[str, int] = {}
+        for items, tok0, l_c, l_u in stash.groups:
+            tok0 = np.asarray(tok0)
+            if self._content is not None and \
+                    any(it.publish_key for it in items):
+                # install the founders' pre-combine last-position logits
+                # as the content entries' payloads: a later hit replays
+                # token 0 from these with its own scale/key/temp, zero
+                # passes (`ready()` gates hits to ticks strictly after
+                # the publish tick, so deferring the install here never
+                # races a lookup)
+                l_c_h, l_u_h = np.asarray(l_c), np.asarray(l_u)
+                for i, it in enumerate(items):
+                    if it.publish_key:
+                        self._content.set_payload(
+                            it.publish_key,
+                            (l_u_h[i].copy(), l_c_h[i].copy()))
+            for i, it in enumerate(items):
+                tok0_of[it.req.uid] = int(tok0[i])
+        for it in stash.batch:
             if it.cached is None:
                 continue
             # content-cache hit: token 0 replays from the founder's cached
@@ -730,7 +1000,7 @@ class ContinuousEngine:
         # share -> hit/miss -> admit -> first-token (or share -> swap_in
         # -> resume) per request in pop order for the engine==sim event
         # contract to hold
-        for it in batch:
+        for it in stash.batch:
             uid = it.req.uid
             if it.shared_pages:
                 self.metrics.on_share(uid, now, it.shared_pages)
@@ -946,7 +1216,7 @@ class ContinuousEngine:
                             shared_pages=n_share if wants_u else 0)
 
     def _prefill_paged_group(self, Sb: int,
-                             items: list[_PrefillItem]) -> dict[str, int]:
+                             items: list[_PrefillItem]) -> tuple:
         kb = _bucket(len(items))
         nb_pre = pages_for(Sb, self.page_size)
         tokens = np.full((kb, Sb), PAD, np.int32)
@@ -980,19 +1250,10 @@ class ContinuousEngine:
             jnp.asarray(btc), jnp.asarray(btu),
             jnp.asarray(keys), jnp.asarray(scales),
             jnp.asarray(temps))
-        tok0 = np.asarray(tok0)
-        if self._content is not None and \
-                any(it.publish_key for it in items):
-            # install the founders' pre-combine last-position logits as
-            # the content entries' payloads: a later hit replays token 0
-            # from these with its own scale/key/temp, zero passes
-            l_c_h, l_u_h = np.asarray(l_c), np.asarray(l_u)
-            for i, it in enumerate(items):
-                if it.publish_key:
-                    self._content.set_payload(
-                        it.publish_key, (l_u_h[i].copy(), l_c_h[i].copy()))
-        # token/admit bookkeeping happens in the caller, in queue order
-        return {it.req.uid: int(tok0[i]) for i, it in enumerate(items)}
+        # hand back unforced device handles: converting tok0 here would
+        # stall the async overlap window on the in-flight decode step —
+        # _admit_bookkeep harvests them (and installs founder payloads)
+        return tok0, l_c, l_u
 
     def _release_uncond(self, uid: str) -> int:
         """Free a request's unconditional pages at the COND transition,
@@ -1096,7 +1357,12 @@ class ContinuousEngine:
         self._pool_p = self._scatter_pages_fn(nb)(
             self._pool_p, jnp.asarray(idx), jax.tree.map(pad, rows))
 
-    def _finalize(self, uid: str, now: int) -> None:
+    def _finalize_state(self, uid: str) -> "_RequestState":
+        """The structural half of completion: free the slot, pages and
+        registry memberships and publish the result. The async tick runs
+        this before its overlap window (so tick t+1's admission sees the
+        freed pages) and defers only the ``complete`` event to the
+        harvest, where it lands in the synchronous stream order."""
         state = self._states.pop(uid)
         self.pool.free(state.slot)
         if self.pages is not None:
@@ -1107,6 +1373,10 @@ class ContinuousEngine:
                 self._content.release(uid)
         self.scheduler.release(uid)
         self.results[uid] = state.generated
+        return state
+
+    def _finalize(self, uid: str, now: int) -> None:
+        state = self._finalize_state(uid)
         self.metrics.on_complete(uid, now, state.cursor.passes_executed)
 
     # -- defragmentation (slot arena only) ---------------------------------
@@ -1143,12 +1413,39 @@ class ContinuousEngine:
         zeros = lambda s: jnp.zeros((self.num_slots,) + tuple(s.shape), s.dtype)
         self._pool_c = jax.tree.map(zeros, row)
         self._pool_u = jax.tree.map(zeros, row)
+        if self.mesh is not None and self.rules is not None:
+            from jax.sharding import NamedSharding
+            specs = pool_partition_specs(
+                self.cfg, self.num_slots, cap, rules=self.rules,
+                mesh=self.mesh)
+            # the spec tree mirrors T.cache_specs; decode-prepared caches
+            # can grow extra leaves (e.g. REPRO_KV_QUANT scale pairs) the
+            # spec builder does not model — those configs keep the
+            # replicated layout rather than guessing at specs
+            if jax.tree.structure(specs) == jax.tree.structure(self._pool_c):
+                put = lambda x, sp: jax.device_put(
+                    x, NamedSharding(self.mesh, sp))
+                self._pool_c = jax.tree.map(put, self._pool_c, specs)
+                self._pool_u = jax.tree.map(put, self._pool_u, specs)
 
     def _init_paged_pool(self) -> None:
         from repro.models import layers as L
         specs = T.paged_cache_specs(self.cfg, L.SpecMaker(jnp.bfloat16),
                                     self.num_pages, self.page_size,
                                     kv_dtype=self.kv_dtype)
+        if self.mesh is not None and self.rules is not None:
+            # land the arena on the mesh at construction: values, int8
+            # fp32 scale leaves and block-table-indexed rows all shard
+            # along `pages` (per-shard counts uniform by the ctor's
+            # divisibility rounding; indivisible explicit pools fall down
+            # the logical_to_spec fallback chain to replication)
+            shardings = paged_pool_shardings(
+                self.cfg, self.num_pages, self.page_size,
+                rules=self.rules, mesh=self.mesh, kv_dtype=self.kv_dtype)
+            self._pool_p = jax.tree.map(
+                lambda s, sh: jax.device_put(jnp.zeros(s.shape, s.dtype), sh),
+                specs, shardings)
+            return
         self._pool_p = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), specs)
 
@@ -1640,19 +1937,51 @@ class ContinuousEngine:
         Returns sampled next-tokens and per-entry divergence norms (0.0
         for COND entries) aligned with ``plan.full + plan.cond``.
         """
+        return self._harvest_ragged(*self._dispatch_ragged(plan))
+
+    def _ragged_staging(self) -> dict:
+        """Double-buffered host staging, selected by tick parity.
+        ``jnp.asarray`` may alias host numpy memory zero-copy, so the
+        buffers a dispatched-but-unfinished step reads must not be
+        refilled by the next dispatch. The async pipeline is exactly one
+        tick deep (tick t's step is harvested before tick t+1 dispatches),
+        so two buffers suffice."""
+        if self._staging is None:
+            R = self.ragged_rows
+
+            def bufs():
+                return dict(
+                    bt=np.full((R, self.nb_max), self.num_pages, np.int32),
+                    tok=np.zeros(R, np.int32),
+                    pos=np.zeros(R, np.int32),
+                    scale=np.zeros(R, np.float32),
+                    temp=np.zeros(R, np.float32),
+                    rkey=np.zeros((R, 2), np.uint32),
+                    lstep=np.zeros(R, np.int32),
+                    u_idx=np.arange(R, dtype=np.int32),
+                    phase=np.zeros(R, np.int32))
+
+            self._staging = (bufs(), bufs())
+        return self._staging[self.tick_count & 1]
+
+    def _dispatch_ragged(self, plan: TickPlan) -> tuple:
+        """Stage the tick's rows and launch the ragged step; returns
+        unforced device handles ``(nxt, div, n_out)`` for
+        ``_harvest_ragged``. The async tick calls this before its overlap
+        window and harvests after, so host scheduling for tick t+1 runs
+        while the device executes tick t."""
         R = self.ragged_rows
         rows = plan.pass_rows()
         assert len(rows) <= R, (len(rows), R)
         n_out = plan.in_flight
-        bt = np.full((R, self.nb_max), self.num_pages, np.int32)
-        tok = np.zeros(R, np.int32)
-        pos = np.zeros(R, np.int32)
-        scale = np.zeros(R, np.float32)
-        temp = np.zeros(R, np.float32)
-        rkey = np.zeros((R, 2), np.uint32)
-        lstep = np.zeros(R, np.int32)
-        u_idx = np.arange(R, dtype=np.int32)      # self-pair: Eq.1 identity
-        phase = np.zeros(R, np.int32)
+        st = self._ragged_staging()
+        bt, tok, pos = st["bt"], st["tok"], st["pos"]
+        scale, temp, rkey = st["scale"], st["temp"], st["rkey"]
+        lstep, u_idx, phase = st["lstep"], st["u_idx"], st["phase"]
+        bt.fill(self.num_pages)
+        tok.fill(0); pos.fill(0); scale.fill(0.0); temp.fill(0.0)
+        rkey.fill(0); lstep.fill(0); phase.fill(0)
+        u_idx[:] = np.arange(R, dtype=np.int32)   # self-pair: Eq.1 identity
         for r, pr in enumerate(rows):
             slot = pr.entry.slot
             bt[r] = self.pages.table(pr.entry.uid, pr.stream, self.nb_max)
@@ -1671,5 +2000,10 @@ class ContinuousEngine:
             jnp.asarray(pos), jnp.asarray(scale), jnp.asarray(temp),
             jnp.asarray(rkey), jnp.asarray(lstep), jnp.asarray(u_idx),
             jnp.asarray(phase))
+        return nxt, div, n_out
+
+    def _harvest_ragged(self, nxt, div, n_out: int) -> tuple:
+        """Force the step's outputs — the only point where the host
+        blocks on the device in ragged mode."""
         return ([int(t) for t in np.asarray(nxt)[:n_out]],
                 [float(d) for d in np.asarray(div)[:n_out]])

@@ -443,9 +443,19 @@ class ServeMetrics:
 
     def savings_fraction(self) -> float:
         """passes_saved / full_cfg_passes over completed requests — the
-        measured counterpart of the paper's Table 1 reduction."""
+        measured counterpart of the paper's Table 1 reduction. 0.0 on a
+        cold replica (no completions yet) — the fleet router reads this
+        before any traffic lands."""
         full = self.full_cfg_passes()
         return self.passes_saved() / full if full else 0.0
+
+    def prefix_hit_rate(self) -> float:
+        """Content-cache hit rate over lazy admissions — the router's
+        prefix-affinity signal. 0.0 on a cold replica (no admissions yet),
+        never a ZeroDivisionError: the fleet router polls replicas that
+        have not seen a single request."""
+        lookups = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / lookups if lookups else 0.0
 
     def request_rows(self) -> list[dict]:
         """Per-request report rows (benchmark / launch output)."""
@@ -495,9 +505,7 @@ class ServeMetrics:
             "host_evictions": self.host_evictions,
             "prefix_hits": self.prefix_hits,
             "prefix_misses": self.prefix_misses,
-            "prefix_hit_rate": round(
-                self.prefix_hits / (self.prefix_hits + self.prefix_misses), 4)
-            if (self.prefix_hits + self.prefix_misses) else 0.0,
+            "prefix_hit_rate": round(self.prefix_hit_rate(), 4),
             "recompute_passes_avoided": self.recompute_passes_avoided,
             "step_launches": self.step_launches,
             "step_compiles": self.step_compiles,

@@ -11,7 +11,8 @@ Four pieces, consumed by ``ServeMetrics`` and the engine/simulator pair:
 * :mod:`.chrome` — Chrome-trace (Perfetto) JSON export of the run.
 """
 
-from repro.serve.obs.chrome import to_chrome_trace, write_chrome_trace
+from repro.serve.obs.chrome import (fleet_chrome_trace, to_chrome_trace,
+                                    write_chrome_trace)
 from repro.serve.obs.hist import Log2Histogram, default_histograms
 from repro.serve.obs.timing import (TICK_SEGMENTS, TickTimer, TickTiming,
                                     profiling_enabled)
@@ -22,5 +23,5 @@ __all__ = [
     "EVENT_KINDS", "FOLDED_COUNTERS", "Event", "EventTrace",
     "fold_counters", "Log2Histogram", "default_histograms",
     "TICK_SEGMENTS", "TickTimer", "TickTiming", "profiling_enabled",
-    "to_chrome_trace", "write_chrome_trace",
+    "fleet_chrome_trace", "to_chrome_trace", "write_chrome_trace",
 ]

@@ -46,8 +46,18 @@ def _tick_bounds(metrics, synthetic_tick_s: float) -> dict[int, tuple]:
             for i, t in enumerate(ticks)}
 
 
-def to_chrome_trace(metrics, *, synthetic_tick_s: float = 1e-3) -> dict:
+def to_chrome_trace(metrics, *, synthetic_tick_s: float = 1e-3,
+                    replica: int | None = None) -> dict:
+    """Render one metrics object. ``replica`` relabels the two processes
+    for fleet rendering: replica ``r`` exports as pids ``2r+1`` /
+    ``2r+2`` named ``engine[r]`` / ``requests[r]``, so N replicas merge
+    into one timeline with no pid collisions. ``replica=None`` keeps the
+    historical pid 1/2 layout byte-for-byte (single-replica ``--trace-out``
+    files are unchanged)."""
     bounds = _tick_bounds(metrics, synthetic_tick_s)
+    pid_e = 1 if replica is None else 2 * replica + 1
+    pid_r = 2 if replica is None else 2 * replica + 2
+    tag = "" if replica is None else f"[{replica}]"
 
     def start_of(t):
         if t in bounds:
@@ -62,10 +72,10 @@ def to_chrome_trace(metrics, *, synthetic_tick_s: float = 1e-3) -> dict:
             return bounds[t][1]
         return start_of(t)
 
-    out = [{"ph": "M", "name": "process_name", "pid": 1,
-            "args": {"name": "engine"}},
-           {"ph": "M", "name": "process_name", "pid": 2,
-            "args": {"name": "requests"}}]
+    out = [{"ph": "M", "name": "process_name", "pid": pid_e,
+            "args": {"name": f"engine{tag}"}},
+           {"ph": "M", "name": "process_name", "pid": pid_r,
+            "args": {"name": f"requests{tag}"}}]
 
     # --- pid 1: engine ticks + phase segments -------------------------
     timings = {t.tick: t for t in (getattr(metrics, "tick_timings", None)
@@ -75,13 +85,14 @@ def to_chrome_trace(metrics, *, synthetic_tick_s: float = 1e-3) -> dict:
         tick_ev = next((ev for ev in metrics.trace
                         if ev.kind == "tick" and ev.tick == tick), None)
         args = dict(tick_ev.data) if tick_ev is not None else {}
-        out.append(_span(f"tick {tick}", "tick", t0, t1, 1, 1, args))
+        out.append(_span(f"tick {tick}", "tick", t0, t1, pid_e, 1,
+                         args))
         timing = timings.get(tick)
         if timing is not None:
             base = timing.t0 - t0
             for name, s, e in timing.segments:
                 out.append(_span(name, "tick_phase",
-                                 s - base, e - base, 1, 1))
+                                 s - base, e - base, pid_e, 1))
 
     # --- pid 2: per-request lifecycle spans ---------------------------
     tids: dict[str, int] = {}
@@ -91,7 +102,7 @@ def to_chrome_trace(metrics, *, synthetic_tick_s: float = 1e-3) -> dict:
     def tid_of(uid):
         if uid not in tids:
             tids[uid] = len(tids) + 1
-            out.append({"ph": "M", "name": "thread_name", "pid": 2,
+            out.append({"ph": "M", "name": "thread_name", "pid": pid_r,
                         "tid": tids[uid], "args": {"name": uid}})
         return tids[uid]
 
@@ -101,8 +112,8 @@ def to_chrome_trace(metrics, *, synthetic_tick_s: float = 1e-3) -> dict:
         if opened is None:
             return
         name, ts_s = opened
-        out.append(_span(name, "request", ts_s, end_s, 2, tid_of(uid),
-                         args))
+        out.append(_span(name, "request", ts_s, end_s, pid_r,
+                         tid_of(uid), args))
         n_request_spans += 1
 
     for ev in metrics.trace:
@@ -169,6 +180,28 @@ def to_chrome_trace(metrics, *, synthetic_tick_s: float = 1e-3) -> dict:
             "events_dropped": metrics.trace.dropped,
         },
     }
+
+
+def fleet_chrome_trace(metrics_list, *,
+                       synthetic_tick_s: float = 1e-3) -> dict:
+    """Merge N replicas' traces into one timeline document.
+
+    Replica ``r`` renders under pids ``2r+1``/``2r+2`` (engine/request
+    processes, named ``engine[r]``/``requests[r]``), so Perfetto shows
+    the whole fleet side by side; ``otherData`` counters are summed
+    across replicas (``wall_s`` too — fleet wall time is aggregate
+    device time, replicas being independent hosts)."""
+    events: list = []
+    other: dict = {}
+    for r, metrics in enumerate(metrics_list):
+        doc = to_chrome_trace(metrics, synthetic_tick_s=synthetic_tick_s,
+                              replica=r)
+        events.extend(doc["traceEvents"])
+        for k, v in doc["otherData"].items():
+            other[k] = other.get(k, 0) + v
+    other["replicas"] = len(metrics_list)
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": other}
 
 
 def write_chrome_trace(metrics, path, *,

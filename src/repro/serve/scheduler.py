@@ -379,3 +379,24 @@ def provision_growth(plan: TickPlan, sched: Scheduler, pages, *,
     return TickPlan(tuple(e for e in plan.full if e.uid in kept),
                     tuple(e for e in plan.cond if e.uid in kept),
                     plan.budget, plan.skipped + tuple(deferred))
+
+
+def admission_cutoff(now: int, *, pipelined: bool) -> int:
+    """Latest arrival tick admissible at tick ``now``.
+
+    Synchronous ticks admit anything that has arrived by ``now``. The
+    async pipeline decides tick ``now``'s admissions one tick early —
+    while tick ``now - 1``'s ragged step runs on device — so a request
+    arriving *at* ``now`` is invisible to the decision and waits one
+    tick. Tick 0 has no prior tick to overlap with, so the pipeline
+    fills inline and the cutoff stays 0.
+
+    The single definition shared by the engine's async tick loop and the
+    simulator (PR 4 discipline): both filter the queue head by
+    ``arrival <= admission_cutoff(now, pipelined=...)``, so the pipelined
+    admission schedule — and every downstream counter and event — agrees
+    tick for tick.
+    """
+    if not pipelined:
+        return now
+    return max(0, now - 1)

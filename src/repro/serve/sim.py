@@ -22,7 +22,8 @@ from repro.core.policy import DynamicPlanCursor, ReplayGuidancePolicy
 from repro.core.selective import GuidancePlan, Mode, PlanCursor
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import ArrivalQueue, ServeRequest
-from repro.serve.scheduler import Scheduler, bucket_pow2, provision_growth
+from repro.serve.scheduler import (Scheduler, admission_cutoff, bucket_pow2,
+                                   provision_growth)
 from repro.serve.state import (ContentPrefixRegistry, HostPagePool,
                                PageAllocator, PrefixShareRegistry, StatePool,
                                fresh_lazy_needs, pages_for, plan_swap_out,
@@ -100,7 +101,7 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
              page_bytes: int | None = None, step_mode: str | None = None,
              bucket: bool = True, host_pages: int = 0,
              swap_min_pages: int = 0, prefix_cache: str = "length",
-             on_tick=None) -> SimReport:
+             async_ticks: bool = False, on_tick=None) -> SimReport:
     """Replay ``trace`` against a scheduler policy; returns a
     :class:`SimReport` whose metrics mirror the real engine's.
 
@@ -142,6 +143,14 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
     ids. Both replay the engine's exact decision procedures, so
     ``swap_outs``/``swap_ins``/``host_evictions``/``prefix_hits``/
     ``prefix_misses`` — and the event streams — agree event for event.
+
+    ``async_ticks`` mirrors the engine's pipelined tick (DESIGN.md §16):
+    admission for tick t is decided during tick t-1's overlap window, so
+    a request arriving at tick t is physically absent from the queue the
+    decision scans. The sim's queue holds future arrivals, so the shared
+    :func:`repro.serve.scheduler.admission_cutoff` reproduces that
+    constraint as an explicit arrival filter — the *same function* the
+    engine uses to gate its pipeline fill.
 
     ``on_tick(tick, pages, sched, queue)``, when given, runs at the end
     of every simulated tick — the serve-invariant harness hooks
@@ -314,6 +323,12 @@ def simulate(trace: list[SimRequest], *, num_slots: int, pass_budget: int,
             if req is None:
                 break
             uid = req.uid
+            if async_ticks and sim_req[uid].arrival > \
+                    admission_cutoff(tick, pipelined=True):
+                # pipelined mode decided this tick's admissions one tick
+                # ago — the head had not arrived yet. FIFO: nothing
+                # behind it is older.
+                break
             S = sim_req[uid].prompt_len
             resumed = False
             from_host = 0              # pages restored from the host tier

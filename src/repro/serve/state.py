@@ -163,11 +163,23 @@ def kv_page_bytes(cfg, page_size: int, kv_dtype: str = "bf16") -> int:
 
 
 def pages_for_pool_bytes(cfg, pool_bytes: int, page_size: int,
-                         kv_dtype: str = "bf16") -> int:
+                         kv_dtype: str = "bf16", *, shards: int = 1) -> int:
     """How many pages of ``kv_dtype`` fit a fixed HBM budget — int8 pages
     are ~2x denser, which is exactly the admission headroom the
-    ``--kv-dtype`` benchmark measures."""
-    return max(1, int(pool_bytes // kv_page_bytes(cfg, page_size, kv_dtype)))
+    ``--kv-dtype`` benchmark measures.
+
+    ``shards`` rounds the count down to a multiple of the mesh's page-axis
+    shard count so every shard holds the same number of whole pages (the
+    per-shard leaf shapes stay uniform); a budget smaller than one page per
+    shard floors at ``shards`` — one page per shard — rather than produce a
+    pool the mesh cannot split.
+    """
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    n = max(1, int(pool_bytes // kv_page_bytes(cfg, page_size, kv_dtype)))
+    if shards > 1:
+        n = max(shards, (n // shards) * shards)
+    return n
 
 
 def stream_page_needs(plan, prompt_len: int,
@@ -973,3 +985,42 @@ def paged_partition_specs(cfg, num_pages: int, page_size: int, *,
         return logical_to_spec(names, rules, shape=spec.shape, mesh=mesh)
 
     return jax.tree.map(one, axes, specs, is_leaf=L.is_axes_leaf)
+
+
+def pages_shard_count(rules: AxisRules, mesh) -> int:
+    """How many ways ``rules``/``mesh`` split the page-pool axis.
+
+    The product of the mesh sizes of the ``pages`` rule's candidate axes
+    that are actually present on the mesh — i.e. the worst-case (fully
+    absorbed) shard count, which is what page-count divisibility must
+    satisfy for uniform shard shapes. 1 when the mesh is absent or names
+    none of the candidate axes.
+    """
+    if mesh is None:
+        return 1
+    rule = rules.rule("pages")
+    if rule is None:
+        return 1
+    sizes = dict(mesh.shape)
+    n = 1
+    for ax in rule.axes:
+        n *= sizes.get(ax, 1)
+    return max(1, n)
+
+
+def paged_pool_shardings(cfg, num_pages: int, page_size: int, *,
+                         rules: AxisRules, mesh, dtype=None,
+                         kv_dtype: str = "bf16"):
+    """NamedSharding tree for the paged pool — :func:`paged_partition_specs`
+    resolved against a concrete ``mesh`` leaf for leaf (int8 fp32 scale
+    leaves ride along under the same ``pages``/``page`` names, so a page's
+    values and scales land on the same device)."""
+    import jax.numpy as jnp
+
+    from repro.dist.sharding import tree_shardings
+
+    axes = T.paged_cache_specs(cfg, L.AxesMaker(), num_pages, page_size,
+                               kv_dtype=kv_dtype)
+    specs = T.paged_cache_specs(cfg, L.SpecMaker(dtype or jnp.bfloat16),
+                                num_pages, page_size, kv_dtype=kv_dtype)
+    return tree_shardings(axes, specs, mesh, rules)
